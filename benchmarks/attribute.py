@@ -1,0 +1,137 @@
+"""Byte/flop attribution over a cell's compiled HLO — the §Perf profiler.
+
+  PYTHONPATH=src python benchmarks/attribute.py --arch rwkv6-1.6b \
+      --shape train_4k [--set scan_dtype=bfloat16] [--top 12]
+
+Prints the top contributors to the fused-bytes memory term, grouped by
+(opcode, op-name-stem), with trip multiplication — the "profile" the
+hypothesis loop reads (per the assignment: the dry-run artifact IS the
+profile on this CPU-only container).
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import collections
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def attribute(hlo: str, top: int = 12):
+    from repro.core import hlo_cost as H
+    comps = H.parse_computations(hlo)
+    entry = re.search(r"ENTRY\s+%?([\w\.\-]+)", hlo).group(1)
+    contrib = collections.Counter()
+    flops_c = collections.Counter()
+    ex = {}
+
+    def walk(name, mult):
+        ops = comps.get(name, [])
+        shapes = {o.name: o.type_str for o in ops}
+        fusible = {o.name for o in ops if H._is_fusible_elementwise(o)}
+        op_by_name = {o.name: o for o in ops}
+        memo = {}
+
+        def roots_of(on):
+            if on in memo:
+                return memo[on]
+            o = op_by_name.get(on)
+            if o is None or o.name not in fusible:
+                memo[on] = (on,)
+                return memo[on]
+            memo[on] = ()
+            rs = []
+            for o2 in H._OPERAND.findall(o.rest.split("),", 1)[0]):
+                if o2 in shapes:
+                    rs.extend(roots_of(o2))
+            memo[on] = tuple(dict.fromkeys(rs))
+            return memo[on]
+
+        for op in ops:
+            if op.opcode in H._SKIP_OPS:
+                continue
+            if op.opcode == "while":
+                wm = H._WHILE_ATTRS.search(op.rest)
+                tm = H._TRIP_CFG.search(op.rest)
+                n = float(tm.group(1)) if tm else 1.0
+                if wm:
+                    walk(wm.group(2), mult * n)
+                continue
+            if op.name in fusible:
+                continue
+            if op.opcode == "dynamic-update-slice":
+                b = 0.0
+            elif op.opcode in ("dynamic-slice", "gather"):
+                b = 2 * H._shape_bytes(op.type_str)
+            elif op.opcode == "fusion" and "dynamic-update-slice" in op.name:
+                b = 2 * H._dus_update_bytes(op, comps)
+            else:
+                b = H._shape_bytes(op.type_str)
+                seen = set()
+                for on in H._OPERAND.findall(op.rest.split("),", 1)[0]):
+                    if on not in shapes or on in seen:
+                        continue
+                    seen.add(on)
+                    elems = H._shape_elems(shapes[on])
+                    width = None
+                    for r in roots_of(on):
+                        m = H._SHAPE.search(shapes.get(r, ""))
+                        if m and m.group(1) in H._DTYPE_BYTES:
+                            w = H._DTYPE_BYTES[m.group(1)]
+                            width = w if width is None else min(width, w)
+                    if width is None:
+                        m = H._SHAPE.search(shapes[on])
+                        width = H._DTYPE_BYTES.get(m.group(1), 4) if m else 4
+                    b += elems * width
+            fl = 0.0
+            if op.opcode in ("dot", "dot-general"):
+                fl = H._dot_flops(op, shapes)
+            key = (op.opcode, op.type_str.split("{")[0][:40], mult)
+            contrib[key] += b * mult
+            flops_c[key] += fl * mult
+            if key not in ex:
+                ex[key] = op.name.split(".")[0][:34]
+
+    walk(entry, 1.0)
+    tot = sum(contrib.values())
+    print(f"fused-bytes total {tot:.3e} = {tot/819e9:.3f}s @819GB/s")
+    for k, v in contrib.most_common(top):
+        print(f"{str(k):50s} {v:.3e} ({v/tot:5.1%}) flops={flops_c[k]:.2e} "
+              f"ex={ex[k]}")
+    return contrib
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--set", action="append", default=[])
+    ap.add_argument("--top", type=int, default=12)
+    args = ap.parse_args()
+
+    import dataclasses
+    from repro.config import SHAPES, get_config, normalize_arch
+    from repro.launch.cell import build_cell
+    from repro.launch.mesh import make_production_mesh
+    sys.path.insert(0, os.path.dirname(__file__))
+    from repro.launch.perf import parse_value
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = parse_value(v)
+    cfg = get_config(normalize_arch(args.arch))
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    mesh = make_production_mesh()
+    hlo = build_cell(cfg, SHAPES[args.shape], mesh).lower(mesh).compile().as_text()
+    attribute(hlo, args.top)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,195 @@
+"""EXPERIMENTS.md generator.
+
+Assembles the experiment report from the dry-run artifacts:
+  §Dry-run   — per-cell compile evidence (memory_analysis, collective mix)
+  §Roofline  — the 40-cell three-term table (both meshes) + analysis notes
+  §Perf      — concatenated from benchmarks/perf_log.md (the hand-written
+               hypothesis→change→measure→verdict hillclimbing log)
+  §Paper     — pointer to the paper-table benchmarks (benchmarks.run)
+
+Regenerate with:  PYTHONPATH=src python benchmarks/report.py
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import roofline as rl
+
+
+def gib(x):
+    return f"{x / 2**30:.2f}GiB" if x else "—"
+
+
+def dryrun_section(recs):
+    lines = [
+        "## §Dry-run — multi-pod compile evidence",
+        "",
+        "Every (architecture × shape) lowered **and compiled** for the",
+        "single-pod 16×16 (256 chips) and multi-pod 2×16×16 (512 chips)",
+        "production meshes with full train/serve-step programs (loss + grads",
+        "+ AdamW for `train_4k`; one-token decode against the full cache for",
+        "decode shapes). Artifacts: `artifacts/dryrun/*.json`. Columns:",
+        "per-device argument bytes (params+optimizer+cache shards — proves",
+        "fit), temp bytes at peak, and the collective op mix.",
+        "",
+        "| arch | shape | mesh | args/dev | temps/dev | collectives (count) | compile |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] != "ok":
+            continue
+        mem = r["memory"]
+        cc = r["collectives"]["count_by_kind"]
+        cstr = " ".join(f"{k}:{v}" for k, v in sorted(cc.items())) or "none"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{gib(mem['argument_size_bytes'])} | {gib(mem['temp_size_bytes'])} | "
+            f"{cstr} | {r['compile_s']:.0f}s |")
+    skips = [r for r in recs if r["status"] == "skip" and r["mesh"] == "pod16x16"]
+    lines += ["", "Skipped cells (recorded per assignment):", ""]
+    for r in skips:
+        lines.append(f"* `{r['arch']} × {r['shape']}` — {r['reason']}")
+    return "\n".join(lines)
+
+
+def roofline_section(recs):
+    notes = analysis_notes(recs)
+    return "\n".join([
+        "## §Roofline — TPU v5e three-term model",
+        "",
+        "Terms per the assignment: `compute = HLO_FLOPs/(peak 197 TF/s bf16)`,",
+        "`memory = HLO_bytes/(819 GB/s HBM)`, `collective = collective_bytes/",
+        "(50 GB/s ICI link)` — all **per-device** quantities of the",
+        "SPMD-partitioned module (equivalent to the global/chips form).",
+        "`cost_analysis()` counts `while` bodies once, so all three inputs",
+        "come from `repro.core.hlo_cost`: a trip-count-aware roll-up over the",
+        "optimized HLO (validated exact on scan-vs-unrolled probes). The",
+        "memory term uses ideal-fusion bytes (elementwise producer→consumer",
+        "chains coalesced, in-place DUS) — the raw CPU-granularity bytes are",
+        "kept in each artifact as an upper bound. MODEL_FLOPS = 6·N_active·D",
+        "(train) / 2·N_active·D (inference); `roofline frac` = time at peak",
+        "compute ÷ modeled bound.",
+        "",
+        "### Single-pod 16×16 (256 chips) — baseline (paper-faithful + "
+        "pre-hillclimb defaults)",
+        "",
+        rl.table(recs, "pod16x16"),
+        "",
+        "### Multi-pod 2×16×16 (512 chips) — baseline",
+        "",
+        rl.table(recs, "pod2x16x16"),
+        "",
+        final_section(),
+        "",
+        "### Per-cell bottleneck analysis (baseline)",
+        "",
+        notes,
+    ])
+
+
+def final_section():
+    recs = rl.load_records(tag="final")
+    if not recs:
+        return "(final-tag table pending)"
+    return "\n".join([
+        "### Single-pod 16×16 — FINAL (beyond-paper defaults folded in: "
+        "flash-backward remat; decode cells additionally measured with "
+        "constrain_cache + write-outside in §Perf)",
+        "",
+        rl.table(recs, "pod16x16"),
+    ])
+
+
+def analysis_notes(recs):
+    """One sentence per single-pod cell on what would move the dominant term."""
+    out = []
+    for r in recs:
+        if r["mesh"] != "pod16x16" or r["status"] != "ok":
+            continue
+        rr = rl.roofline_of(r)
+        arch, shape = r["arch"], r["shape"]
+        dom = rr.dominant
+        if dom == "memory":
+            if shape.startswith("decode") or shape == "long_500k":
+                note = ("decode is params+cache-read bound: shard the cache "
+                        "seq axis over 'model' and/or quantize cache to int8 "
+                        "to cut the per-token read.")
+            elif r["arch"].startswith(("rwkv", "hymba")):
+                note = ("recurrence-chunk boundary traffic dominates: larger "
+                        "chunks + bf16 chunk intermediates (or the fused SSAM "
+                        "Pallas scan kernel on real TPU) cut HBM round-trips.")
+            else:
+                note = ("f32 norm/residual chains and remat recompute "
+                        "dominate: fewer f32 round-trips, saveable-norm remat "
+                        "policy, bf16 CE logits.")
+        elif dom == "collective":
+            note = ("collective-bound: re-pin scan-carried cache/activation "
+                    "shardings (constrain_cache) and use bf16 gradient "
+                    "all-reduce to halve bytes.")
+        else:
+            note = ("compute-bound: raise MXU utilization (bigger per-device "
+                    "batch or less remat recompute); causal block-skipping "
+                    "in flash attention removes masked-half waste.")
+        out.append(f"* `{arch} × {shape}`: dominant={dom}, "
+                   f"useful-FLOPs ratio {rr.useful_flops_ratio:.2f} — {note}")
+    return "\n".join(out)
+
+
+HEADER = """# EXPERIMENTS
+
+System: SSAM (SC'19) reproduction inside the multi-pod JAX LM framework —
+see DESIGN.md for the architecture and README.md for how to run.
+Hardware target: TPU v5e pods (197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link
+ICI); this container is CPU-only, so kernel correctness is interpret-mode
+validated and performance is reported through the compiled-artifact
+roofline below.
+
+## Paper-claim validation (reproduction gate)
+
+The paper's claims, checked against this implementation (CPU-measurable):
+
+1. **Eq. 5 (`Dif_smem_reg ≫ 0` for M,N ≥ 2)** — property-tested for all
+   M,N ∈ [2,20] on P100/V100 (paper's Table-2 latencies) and the TPU-v5e
+   re-parameterization (`tests/test_core_plan.py::TestPerfModel`); the
+   advantage grows monotonically with filter size exactly as Fig. 4's
+   spread predicts (`test_advantage_grows_with_filter`).
+2. **Systolic schedule correctness** — the 𝒥=(O,D,X,Y) executor and the
+   Pallas kernels reproduce the mathematical oracles to float tolerance
+   for conv2d (2×2…20×20, incl. non-square), all 15 Table-3 stencils,
+   scans and linear recurrences (73+ kernel/core tests).
+3. **Halo algebra (§5.3)** — `C = N+P−1`, valid lanes `S−M+1`, and the
+   halo-ratio bound hold for all plan shapes (hypothesis property tests);
+   at S=128 (TPU lanes) the exact halo ratio is *lower* than the paper's
+   S=32 — the TPU adaptation wins on redundancy.
+4. **Temporal blocking (Fig. 6 analogue)** — the trapezoidal fused-step
+   kernel matches its reference to float tolerance (t ∈ {2,4}).
+5. **Fig. 4 analogue, measured** — even through XLA-CPU, the SSAM
+   systolic schedule (roll-based executor) runs the 2-D convolution
+   3.6–7.1× faster than the direct `lax.conv` lowering at every filter
+   size 2×2…13×13 (bench_output.txt `conv2d_*` rows) — the schedule
+   itself, not just the hardware mapping, carries the win.
+
+CPU wall-clock benchmarks per paper table: `python -m benchmarks.run`
+(outputs in bench_output.txt; they compare *schedules* under XLA-CPU, not
+TPU performance — the roofline below is the perf report).
+"""
+
+
+def main():
+    recs = rl.load_records()
+    parts = [HEADER, dryrun_section(recs), "", roofline_section(recs), ""]
+    perf_log = os.path.join(os.path.dirname(__file__), "perf_log.md")
+    if os.path.exists(perf_log):
+        parts.append(open(perf_log).read())
+    out = "\n".join(parts)
+    path = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+    with open(path, "w") as f:
+        f.write(out)
+    print(f"wrote {os.path.abspath(path)} ({len(out)} chars)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Paper demo (Fig. 4 setting): SSAM 2-D convolution on TPU-shaped tiles.
+
+Walks the three layers of the reproduction for one 2-D convolution:
+
+1. the 𝒥 = (O, D, X, Y) plan (schedule metadata: shifts, taps, halo),
+2. the pure-JAX systolic executor (lane rolls — the model semantics),
+3. the Pallas TPU kernel in interpret mode (real BlockSpec overlapped
+   blocking — the thing that runs on hardware),
+
+validates all three against the jnp oracle, and prices the schedule with
+the paper's §5 performance model on V100 + TPU-v5e parameters.
+
+  PYTHONPATH=src python examples/convolution2d.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import conv2d_plan
+from repro.core.executor import execute_conv_global
+from repro.core.perfmodel import TPU_V5E, V100, dif_smem_reg, l_reg, l_smem
+from repro.kernels import ops, ref
+
+
+def main():
+    rng = np.random.default_rng(0)
+    M = N = 5
+    x = jnp.array(rng.standard_normal((128, 512)), jnp.float32)
+    w = jnp.array(rng.standard_normal((N, M)), jnp.float32)
+
+    plan = conv2d_plan(M, N, P=8)
+    print(f"SSAM plan: {M}x{N} filter, S={plan.S} lanes, "
+          f"C={plan.C} regs/lane (Eq.3), {plan.shift_count()} shifts, "
+          f"{plan.mads_per_output_window()} MADs/window")
+    print(f"halo ratio: exact {plan.halo_ratio():.3f}, "
+          f"paper bound {plan.halo_ratio_paper_bound():.3f}")
+
+    oracle = ref.conv2d_valid(x, w)
+
+    model_out = execute_conv_global(conv2d_plan(M, N, S=512, P=1), x, w)
+    err1 = float(jnp.abs(model_out - oracle).max())
+    print(f"systolic executor vs oracle: max err {err1:.2e}")
+
+    kern_out = ops.conv2d(x, w, mode="valid", impl="interpret",
+                          block_h=8, block_w=128)
+    err2 = float(jnp.abs(kern_out - oracle).max())
+    print(f"Pallas kernel (interpret) vs oracle: max err {err2:.2e}")
+
+    for hw in (V100, TPU_V5E):
+        print(f"{hw.name}: L_smem={l_smem(hw, M, N):.0f}cyc "
+              f"L_reg={l_reg(hw, M, N):.0f}cyc "
+              f"Dif(Eq.5)={dif_smem_reg(hw, M, N):.0f}cyc "
+              f"(register cache wins by "
+              f"{l_smem(hw, M, N) / l_reg(hw, M, N):.2f}x)")
+
+    assert err1 < 1e-3 and err2 < 1e-3
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

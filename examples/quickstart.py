@@ -1,0 +1,32 @@
+"""Quickstart: train a small LM end-to-end on the synthetic pipeline.
+
+Runs the full production stack — config, sharded init, jitted
+loss/grad/AdamW step, deterministic data, periodic checkpoints — on CPU
+in a couple of minutes. The loss drops well below ln(vocab) because the
+synthetic stream's second half repeats its first half (learnable copy
+structure).
+
+  PYTHONPATH=src python examples/quickstart.py [--steps 300]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.train import main as train_main
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_quickstart_ckpt")
+    args = ap.parse_args()
+    losses = train_main([
+        "--arch", "internvl2-1b", "--smoke",
+        "--steps", str(args.steps),
+        "--batch", "8", "--seq", "128", "--lr", "3e-3",
+        "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "100",
+    ])
+    print(f"quickstart: final loss {losses[-1]:.3f} "
+          f"(started {losses[0]:.3f}; ln V = 6.24)")

@@ -1,0 +1,24 @@
+"""End-to-end serving driver: batched decoding with continuous batching.
+
+Serves a small RWKV6 (O(1) decode state — the long-context family) and a
+gemma3-family model through the slot-pool server: 12 requests over 4
+slots, per-slot cache indices, greedy sampling. This is the
+"serve a small model with batched requests" end-to-end driver.
+
+  PYTHONPATH=src python examples/serve_decode.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main as serve_main
+
+
+if __name__ == "__main__":
+    print("=== RWKV6 (recurrent state, O(1) per token) ===")
+    serve_main(["--arch", "rwkv6-1.6b", "--smoke", "--slots", "4",
+                "--requests", "12", "--max-new", "16", "--cache-len", "128"])
+    print("=== gemma3 (windowed KV cache) ===")
+    serve_main(["--arch", "gemma3-1b", "--smoke", "--slots", "4",
+                "--requests", "8", "--max-new", "12", "--cache-len", "128"])

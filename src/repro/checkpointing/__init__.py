@@ -1,0 +1,2 @@
+"""Checkpointing: sharded msgpack+zstd snapshots, async save, elastic restore."""
+from .checkpoint import (CheckpointManager, load_checkpoint, save_checkpoint)  # noqa: F401

@@ -1,0 +1,156 @@
+"""Fault-tolerant checkpointing.
+
+Format: one directory per step, ``step_<n>/``:
+  * ``tree.msgpack.zst``  — flattened {path: tensor-bytes} + dtype/shape
+    metadata, zstd-compressed msgpack (both libs are local; no orbax).
+  * ``META.json``         — step, timestamp, logical shapes, config digest.
+  * ``COMMIT``            — written last; a directory without it is an
+    incomplete (crashed) save and is ignored by ``latest_step`` —
+    atomicity without rename tricks on network filesystems.
+
+Fault-tolerance properties:
+  * **restart** — ``CheckpointManager.restore_latest()`` resumes from the
+    newest committed step (tested by killing a train loop mid-run).
+  * **async**   — saves run on a background thread from host copies so
+    the train loop only blocks for the device→host transfer.
+  * **elastic** — tensors are stored *unsharded* (gathered to host); on
+    restore they are re-placed under the *current* mesh's NamedShardings,
+    so a job may come back on a different device count/mesh shape
+    (tested: 8→4→8 reshard round-trip).
+
+At true multi-pod scale the gather-to-host-0 would be replaced by
+per-shard files (one writer per data-parallel replica group); the format
+already keys by flat tree path to make that switch local to this module.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten_into(template, flat: dict[str, np.ndarray]):
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    new_leaves = []
+    for path, leaf in leaves_with_paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing tensor {key}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != {leaf.shape}")
+        new_leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def save_checkpoint(directory: str, step: int, tree, *, meta: dict | None = None):
+    """Synchronous atomic save of a pytree (gathered to host)."""
+    d = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(d, exist_ok=True)
+    flat = _flatten(tree)
+    payload = {
+        k: {"dtype": str(v.dtype), "shape": list(v.shape),
+            "data": v.tobytes()} for k, v in flat.items()
+    }
+    raw = msgpack.packb(payload, use_bin_type=True)
+    with open(os.path.join(d, "tree.msgpack.zst"), "wb") as f:
+        f.write(zstandard.ZstdCompressor(level=3).compress(raw))
+    with open(os.path.join(d, "META.json"), "w") as f:
+        json.dump({"step": step, "time": time.time(), **(meta or {})}, f)
+    with open(os.path.join(d, "COMMIT"), "w") as f:
+        f.write("ok")
+    return d
+
+
+def load_checkpoint(directory: str, step: int, template, *, shardings=None):
+    """Load into the structure of ``template``; optionally re-place under
+    ``shardings`` (elastic restore onto a different mesh)."""
+    d = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(d, "tree.msgpack.zst"), "rb") as f:
+        raw = zstandard.ZstdDecompressor().decompress(f.read())
+    payload = msgpack.unpackb(raw, raw=False)
+    flat = {
+        k: np.frombuffer(v["data"], dtype=v["dtype"]).reshape(v["shape"])
+        for k, v in payload.items()
+    }
+    tree = _unflatten_into(template, flat)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda x, s: jax.device_put(x, s), tree, shardings)
+    else:
+        tree = jax.tree.map(jnp.asarray, tree)
+    return tree
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and os.path.exists(
+                os.path.join(directory, name, "COMMIT")):
+            steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    directory: str
+    keep: int = 3
+    async_save: bool = True
+    _thread: threading.Thread | None = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, step: int, tree, *, meta: dict | None = None):
+        """Device→host copy now; serialization on a background thread."""
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)   # blocks on transfer only
+
+        def work():
+            save_checkpoint(self.directory, step, host_tree, meta=meta)
+            self._gc()
+
+        if self.async_save:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+
+    def _gc(self):
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.directory)
+            if n.startswith("step_")
+            and os.path.exists(os.path.join(self.directory, n, "COMMIT")))
+        for s in steps[: -self.keep] if self.keep else []:
+            d = os.path.join(self.directory, f"step_{s:08d}")
+            for f in os.listdir(d):
+                os.remove(os.path.join(d, f))
+            os.rmdir(d)
+
+    def restore_latest(self, template, *, shardings=None):
+        self.wait()
+        step = latest_step(self.directory)
+        if step is None:
+            return None, None
+        return step, load_checkpoint(self.directory, step, template,
+                                     shardings=shardings)

@@ -1,0 +1,97 @@
+"""Config registry: architectures (``--arch``), input shapes (``--shape``),
+and per-cell parallelism rule overrides.
+
+Each ``repro/configs/<id>.py`` exports ``CONFIG`` (the exact published
+configuration from the assignment) and ``SMOKE`` (a reduced same-family
+config for CPU tests). ``SHAPES`` are the four assigned input shapes;
+applicability (e.g. ``long_500k`` needs sub-quadratic attention) is
+encoded here and surfaced as SKIP rows in the roofline table.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.models.base import ArchConfig
+
+ARCHS = (
+    "rwkv6_1g6b", "stablelm_12b", "chatglm3_6b", "gemma3_1b",
+    "starcoder2_3b", "dbrx_132b", "deepseek_v2_236b", "hymba_1g5b",
+    "internvl2_1b", "whisper_base",
+)
+
+# canonical assignment ids → module names
+ARCH_IDS = {
+    "rwkv6-1.6b": "rwkv6_1g6b",
+    "stablelm-12b": "stablelm_12b",
+    "chatglm3-6b": "chatglm3_6b",
+    "gemma3-1b": "gemma3_1b",
+    "starcoder2-3b": "starcoder2_3b",
+    "dbrx-132b": "dbrx_132b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "hymba-1.5b": "hymba_1g5b",
+    "internvl2-1b": "internvl2_1b",
+    "whisper-base": "whisper_base",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524288, 1),
+}
+
+# long_500k requires sub-quadratic attention: run for SSM/hybrid/local-
+# attention archs, skip pure full-attention archs (DESIGN.md §5).
+LONG_CONTEXT_ARCHS = {"rwkv6_1g6b", "hymba_1g5b", "gemma3_1b"}
+
+
+def normalize_arch(arch: str) -> str:
+    arch = arch.replace("-", "_").replace(".", "g")
+    return ARCH_IDS.get(arch, arch)
+
+
+def get_config(arch: str, *, smoke: bool = False) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{normalize_arch(arch)}")
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def cell_applicable(arch: str, shape: str) -> tuple[bool, str]:
+    """(runs?, reason-if-skip) for an (arch × shape) cell."""
+    arch = normalize_arch(arch)
+    if shape == "long_500k" and arch not in LONG_CONTEXT_ARCHS:
+        return False, "SKIP(full-attn): 500k decode needs sub-quadratic attention"
+    return True, ""
+
+
+def all_cells():
+    for arch in ARCHS:
+        for shape in SHAPES:
+            yield arch, shape
+
+
+def active_param_count(cfg: ArchConfig) -> tuple[int, int]:
+    """(total_params, active_params) — active excludes embeddings and
+    counts MoE experts at top_k/n_experts utilization (MODEL_FLOPS = 6·N_active·D)."""
+    from repro.models import build_model
+    from repro.nn.spec import param_count
+
+    model = build_model(cfg)
+    total = param_count(model.specs())
+    embed = cfg.vocab * cfg.d_model
+    if not cfg.tie_embeddings:
+        embed *= 2
+    active = total - embed
+    if cfg.moe:
+        expert_total = 3 * cfg.n_experts * cfg.d_model * cfg.d_ff * cfg.n_layers
+        active = active - expert_total + expert_total * cfg.top_k / cfg.n_experts
+    return total, int(active)

@@ -1,0 +1,20 @@
+"""chatglm3-6b — dense decoder, GQA kv=2, 2d (half-dim) RoPE, SwiGLU.
+
+[arXiv:2406.12793; hf:THUDM/chatglm3-6b] 28L d_model=4096 32H d_ff=13696
+vocab=65024. GLM applies rotary to half the head dim (rot_frac=0.5).
+"""
+import dataclasses
+from repro.models.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="chatglm3-6b", family="dense",
+    n_layers=28, d_model=4096, n_heads=32, kv_heads=2, head_dim=128,
+    d_ff=13696, vocab=65024,
+    rot_frac=0.5, norm="rmsnorm", mlp="gated_silu", attn_bias=True,
+    tie_embeddings=False,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=4, kv_heads=2, head_dim=16,
+    d_ff=160, vocab=512,
+)

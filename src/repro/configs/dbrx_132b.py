@@ -1,0 +1,20 @@
+"""dbrx-132b — fine-grained MoE: 16 experts, top-4, GQA kv=8.
+
+[hf:databricks/dbrx-base] 40L d_model=6144 48H d_ff=10752(/expert)
+vocab=100352.
+"""
+import dataclasses
+from repro.models.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="dbrx-132b", family="moe",
+    n_layers=40, d_model=6144, n_heads=48, kv_heads=8, head_dim=128,
+    d_ff=10752, vocab=100352,
+    moe=True, n_experts=16, top_k=4, capacity_factor=1.25,
+    tie_embeddings=False,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=4, kv_heads=2, head_dim=16,
+    d_ff=96, vocab=512, n_experts=4, top_k=2,
+)

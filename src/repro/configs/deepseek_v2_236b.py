@@ -1,0 +1,25 @@
+"""deepseek-v2-236b — MLA (kv_lora=512) + fine-grained MoE
+(160 routed top-6 + 2 shared experts).
+
+[arXiv:2405.04434; hf:deepseek-ai/DeepSeek-V2] 60L d_model=5120 128H
+d_ff=1536(/routed expert) vocab=102400; q_lora=1536, qk_nope=128,
+qk_rope=64, v_head=128. (Deviation noted in DESIGN.md: the real model
+uses a dense FFN in layer 0; the assignment specifies uniform MoE.)
+"""
+import dataclasses
+from repro.models.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-v2-236b", family="moe",
+    n_layers=60, d_model=5120, n_heads=128, kv_heads=128, head_dim=128,
+    d_ff=1536, vocab=102400,
+    mla=True, q_lora=1536, kv_lora=512, qk_nope=128, qk_rope=64, v_head=128,
+    moe=True, n_experts=160, top_k=6, n_shared=2, capacity_factor=1.25,
+    tie_embeddings=False,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=4, kv_heads=4, head_dim=16,
+    d_ff=64, vocab=512, q_lora=32, kv_lora=16, qk_nope=16, qk_rope=8,
+    v_head=16, n_experts=8, top_k=2, n_shared=1,
+)

@@ -1,0 +1,23 @@
+"""gemma3-1b — dense decoder, 5:1 local:global attention, 128k-ready.
+
+[hf:google/gemma-3-1b-pt] 26L d_model=1152 4H (kv=1, head_dim=256)
+d_ff=6912 vocab=262144. Sliding window 512; every 6th layer global with
+RoPE base 1e6 (locals 1e4); qk-norm; gemma (1+w) RMSNorm + sandwich
+norms; embeddings scaled by sqrt(d).
+"""
+import dataclasses
+from repro.models.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma3-1b", family="dense",
+    n_layers=26, d_model=1152, n_heads=4, kv_heads=1, head_dim=256,
+    d_ff=6912, vocab=262144,
+    window=512, global_every=6, rope_base=10000.0, rope_base_global=1e6,
+    qk_norm=True, norm="rmsnorm_p1", sandwich_norm=True, emb_scale=True,
+    mlp="gated_gelu",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=4, kv_heads=1, head_dim=16,
+    d_ff=160, vocab=512, window=8, global_every=2,
+)

@@ -1,0 +1,21 @@
+"""internvl2-1b — VLM: InternViT frontend (STUB) + Qwen2-0.5B-style LM.
+
+[arXiv:2404.16821; hf:OpenGVLab/InternVL2-1B] backbone 24L d_model=896
+14H (kv=2, head_dim=64) d_ff=4864 vocab=151655. Per the assignment the
+vision tower is a stub: input_specs provides 256 precomputed patch
+embeddings per image, prepended to the token stream.
+"""
+import dataclasses
+from repro.models.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="internvl2-1b", family="vlm",
+    n_layers=24, d_model=896, n_heads=14, kv_heads=2, head_dim=64,
+    d_ff=4864, vocab=151655,
+    attn_bias=True, n_prefix=256,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=4, kv_heads=2, head_dim=16,
+    d_ff=160, vocab=512, n_prefix=8,
+)

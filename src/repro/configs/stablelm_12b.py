@@ -1,0 +1,20 @@
+"""stablelm-12b — dense decoder, GQA kv=8, partial rotary (25%).
+
+[hf:stabilityai/stablelm-2-12b] 40L d_model=5120 32H d_ff=13824
+vocab=100352.
+"""
+import dataclasses
+from repro.models.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="stablelm-12b", family="dense",
+    n_layers=40, d_model=5120, n_heads=32, kv_heads=8, head_dim=160,
+    d_ff=13824, vocab=100352,
+    rot_frac=0.25, norm="layernorm", mlp="gated_silu",
+    tie_embeddings=False,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=4, kv_heads=2, head_dim=16,
+    d_ff=160, vocab=512,
+)

@@ -1,0 +1,19 @@
+"""starcoder2-3b — dense decoder, GQA kv=2, full RoPE, GELU MLP + biases.
+
+[arXiv:2402.19173; hf:bigcode/starcoder2-3b] 30L d_model=3072 24H
+d_ff=12288 vocab=49152. LayerNorm, attention + MLP biases.
+"""
+import dataclasses
+from repro.models.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="starcoder2-3b", family="dense",
+    n_layers=30, d_model=3072, n_heads=24, kv_heads=2, head_dim=128,
+    d_ff=12288, vocab=49152,
+    norm="layernorm", mlp="mlp_gelu", attn_bias=True,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=4, kv_heads=2, head_dim=16,
+    d_ff=160, vocab=512,
+)

@@ -1,0 +1,21 @@
+"""whisper-base — encoder-decoder audio backbone, conv frontend STUBBED.
+
+[arXiv:2212.04356] 6L enc + 6L dec, d_model=512 8H (MHA) d_ff=2048
+vocab=51865; 1500 encoder frames (the stub provides precomputed frame
+embeddings post-conv).
+"""
+import dataclasses
+from repro.models.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-base", family="audio",
+    n_layers=6, d_model=512, n_heads=8, kv_heads=8, head_dim=64,
+    d_ff=2048, vocab=51865,
+    encoder_layers=6, n_frames=1500, pos_emb="learned",
+    norm="layernorm", mlp="mlp_gelu", attn_bias=True,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=4, kv_heads=4, head_dim=16,
+    d_ff=160, vocab=512, encoder_layers=2, n_frames=16,
+)

@@ -1,0 +1,44 @@
+"""SSAM core: the paper's systolic execution model as data + executors.
+
+- :mod:`repro.core.plan` — 𝒥 = (O, D, X, Y) plan formulation (§3.4).
+- :mod:`repro.core.executor` — pure-JAX lane-roll interpreter of plans.
+- :mod:`repro.core.perfmodel` — the paper's §5 analytical latency model.
+- :mod:`repro.core.rooflines` — TPU v5e 3-term roofline from XLA artifacts.
+"""
+from .plan import (
+    GPU_WARP_LANES,
+    TPU_VREG_LANES,
+    Step,
+    SystolicPlan,
+    Tap,
+    conv1d_plan,
+    conv2d_plan,
+    linear_recurrence_plan,
+    scan_plan,
+    stencil2d_plan,
+    stencil3d_plan,
+)
+from .executor import (
+    execute_conv_block,
+    execute_conv_global,
+    execute_linear_recurrence,
+    execute_scan,
+)
+
+__all__ = [
+    "GPU_WARP_LANES",
+    "TPU_VREG_LANES",
+    "Step",
+    "SystolicPlan",
+    "Tap",
+    "conv1d_plan",
+    "conv2d_plan",
+    "linear_recurrence_plan",
+    "scan_plan",
+    "stencil2d_plan",
+    "stencil3d_plan",
+    "execute_conv_block",
+    "execute_conv_global",
+    "execute_linear_recurrence",
+    "execute_scan",
+]

@@ -1,0 +1,144 @@
+"""Pure-JAX executor for SSAM plans — the model-level semantics of SSAM.
+
+This module *interprets* a :class:`repro.core.plan.SystolicPlan` with
+``jnp.roll`` standing in for the partial-sum interconnect (GPU:
+``__shfl_up_sync``; TPU: VPU lane roll). It has two roles:
+
+1. **Executable semantics** of the systolic model, tested against the
+   mathematical oracles in ``repro.kernels.*.ref`` — this validates that
+   the *model* (shift/accumulate schedule, halo geometry) is correct,
+   independently of any Pallas lowering.
+2. **Reference for the Pallas kernels**: the kernels in
+   :mod:`repro.kernels` implement the same schedule with real BlockSpec
+   tiling; their unit tests assert equality with both this executor and
+   the oracle.
+
+Two execution styles are provided, mirroring the paper:
+
+* ``*_block`` functions operate on one register-cache block of shape
+  ``(C, S)`` — a single "warp" step, Fig. 2a.
+* ``*_global`` functions run the same schedule over a whole array (the
+  S→∞ limit), which is the cleanest statement of the systolic dataflow.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .plan import SystolicPlan
+
+
+def _shift_partial_sums(s: jnp.ndarray, shift: int, axis: int = -1) -> jnp.ndarray:
+    """The D-edge: lane j receives lane j−shift (CUDA shfl_up / TPU roll).
+
+    Wrap-around writes into lanes < shift; those are halo lanes for conv
+    plans (discarded per §4.5) and are masked by the caller for scan plans.
+    """
+    return jnp.roll(s, shift, axis=axis)
+
+
+# ---------------------------------------------------------------------------
+# Convolution / stencil plans
+# ---------------------------------------------------------------------------
+
+def execute_conv_block(
+    plan: SystolicPlan, data: jnp.ndarray, coeffs: jnp.ndarray
+) -> jnp.ndarray:
+    """Run a conv/stencil plan on one register-cache block.
+
+    Args:
+      plan: a conv2d/stencil2d plan.
+      data: ``(C, S)`` block — lane j's register cache is column j (Fig. 2a).
+      coeffs: filter table; indexed by each tap's ``coeff_id``
+        (``(N, M)`` matrix for conv2d, flat vector for stencils).
+
+    Returns:
+      ``(P, S)`` partial-result matrix. Lanes ``[M−1, S)`` hold the valid
+      outputs; output x-position = lane − (M−1) (§4.4).
+    """
+    P, S = plan.P, plan.S
+    assert data.shape == (plan.C, S), (data.shape, (plan.C, S))
+    out_rows = []
+    for i in range(P):  # sliding window (§4.2) — P output rows per lane
+        s = jnp.zeros((S,), data.dtype)
+        for step in plan.steps:
+            if step.shift:
+                s = _shift_partial_sums(s, step.shift)
+            for tap in step.taps:
+                s = s + data[i + tap.row_offset, :] * coeffs[tap.coeff_id]
+        out_rows.append(s)
+    return jnp.stack(out_rows)
+
+
+def execute_conv_global(
+    plan: SystolicPlan, data: jnp.ndarray, coeffs: jnp.ndarray
+) -> jnp.ndarray:
+    """Whole-array systolic execution (the S→∞ limit of the same schedule).
+
+    ``data`` is ``(H, W)``; returns the *valid* cross-correlation of shape
+    ``(H − N + 1, W − M + 1)``: every output row window runs the plan with
+    the full row width as the lane axis, then valid lanes ``[M−1, W)`` are
+    kept.
+    """
+    H, W = data.shape
+    M, N = plan.M, plan.N
+    out_h = H - N + 1
+    rows = []
+    for y in range(out_h):
+        s = jnp.zeros((W,), data.dtype)
+        for step in plan.steps:
+            if step.shift:
+                s = _shift_partial_sums(s, step.shift)
+            for tap in step.taps:
+                s = s + data[y + tap.row_offset, :] * coeffs[tap.coeff_id]
+        rows.append(s[M - 1 :])
+    return jnp.stack(rows)
+
+
+# ---------------------------------------------------------------------------
+# Scan plans (§3.6, Fig. 1e)
+# ---------------------------------------------------------------------------
+
+def execute_scan(plan: SystolicPlan, x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Kogge–Stone inclusive scan: masked shift-accumulate, Eq. 1 with r≡1."""
+    axis = axis % x.ndim
+    n = x.shape[axis]
+    assert n == plan.S, (n, plan.S)
+    lane = jnp.arange(n)
+    shape = [1] * x.ndim
+    shape[axis] = n
+    lane = lane.reshape(shape)
+    s = x
+    for step in plan.steps:
+        shifted = _shift_partial_sums(s, step.shift, axis=axis)
+        ctrl = lane >= step.shift  # ctrl() of Eq. 1: gate the KS arrows
+        s = s + jnp.where(ctrl, shifted, jnp.zeros_like(shifted))
+    return s
+
+
+def execute_linear_recurrence(
+    plan: SystolicPlan, a: jnp.ndarray, b: jnp.ndarray, axis: int = -1
+) -> jnp.ndarray:
+    """Kogge–Stone over the transfer-pair operator (aᵢ, bᵢ) — DESIGN.md §3.
+
+    Solves ``h_t = a_t · h_{t−1} + b_t`` (h₋₁ = 0) along ``axis``.
+    Composition: (A, B) ∘ shifted (A', B') = (A'·A, B'·A + B).
+    """
+    axis = axis % a.ndim
+    n = a.shape[axis]
+    assert n == plan.S, (n, plan.S)
+    lane_shape = [1] * a.ndim
+    lane_shape[axis] = n
+    lane = jnp.arange(n).reshape(lane_shape)
+    A, B = a, b
+    for step in plan.steps:
+        As = _shift_partial_sums(A, step.shift, axis=axis)
+        Bs = _shift_partial_sums(B, step.shift, axis=axis)
+        ctrl = lane >= step.shift
+        ones = jnp.ones_like(As)
+        zeros = jnp.zeros_like(Bs)
+        As = jnp.where(ctrl, As, ones)    # identity element (1, 0)
+        Bs = jnp.where(ctrl, Bs, zeros)
+        # f_t ∘ f_{t−d}: later segment applied to the earlier one.
+        A, B = A * As, A * Bs + B
+    return B

@@ -1,0 +1,73 @@
+"""The paper's §5 analytical performance model, parameterized by hardware.
+
+Eq. 4:  L_reg  = M·N·(T_mad + T_smem_read + 2·T_reg) + (M−1)·T_shfl
+        L_smem = M·N·(T_mad + 2·T_smem_read + 2·T_reg)
+Eq. 5:  Dif_smem_reg = L_smem − L_reg = M·N·T_smem_read − (M−1)·T_shfl
+
+plus the §5.3 halo-overhead analysis. Latency tables: the P100/V100 rows
+are the paper's own micro-benchmarks (Table 2); the TPU v5e row re-maps
+each term to its TPU analogue (DESIGN.md §2) — scratchpad→VMEM,
+shuffle→VPU lane roll, registers→VREG — using engineering estimates
+(cycles per VREG-wide op) that are clearly marked as estimates: they feed
+the *relative* comparisons the paper makes, never absolute wall-time
+claims. Roofline numbers (the graded perf metric) come from
+:mod:`repro.core.rooflines`, not from this model.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .plan import SystolicPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareLatencies:
+    """Per-warp (GPU) / per-VREG (TPU) op latencies in cycles."""
+
+    name: str
+    t_shfl: float        # partial-sum interconnect (shuffle / lane roll)
+    t_mad: float         # fused multiply-add
+    t_smem_read: float   # scratchpad read (shared memory / VMEM load)
+    t_reg: float         # register file access
+    t_gmem_read: float   # global/HBM read (coalesced, per warp-equivalent)
+
+
+# Paper Table 2 (measured by the authors' micro-benchmarks).
+P100 = HardwareLatencies("P100", t_shfl=33, t_mad=6, t_smem_read=33, t_reg=1, t_gmem_read=300)
+V100 = HardwareLatencies("V100", t_shfl=22, t_mad=4, t_smem_read=27, t_reg=1, t_gmem_read=300)
+# TPU v5e estimates (DESIGN.md §2): VPU lane roll ≈ 2 cyc, VPU FMA ≈ 1 cyc/VREG,
+# VMEM load ≈ 8 cyc (deep-pipelined), VREG ≈ 0-cost operand, HBM ≈ 100s of cyc.
+TPU_V5E = HardwareLatencies("TPUv5e", t_shfl=2, t_mad=1, t_smem_read=8, t_reg=0, t_gmem_read=200)
+
+
+def l_smem(hw: HardwareLatencies, M: int, N: int) -> float:
+    """Latency of one output element with scratchpad-cached data (§5.2)."""
+    return M * N * (hw.t_mad + 2 * hw.t_smem_read + 2 * hw.t_reg)
+
+
+def l_reg(hw: HardwareLatencies, M: int, N: int) -> float:
+    """Eq. 4 — latency with SSAM register-cached data + (M−1) shuffles."""
+    return M * N * (hw.t_mad + hw.t_smem_read + 2 * hw.t_reg) + (M - 1) * hw.t_shfl
+
+
+def dif_smem_reg(hw: HardwareLatencies, M: int, N: int) -> float:
+    """Eq. 5 — SSAM's per-output advantage. Paper: ≫ 0 for M,N ≥ 2."""
+    return M * N * hw.t_smem_read - (M - 1) * hw.t_shfl
+
+
+def avg_dif_lower_bound(hw: HardwareLatencies, plan: SystolicPlan) -> float:
+    """§5.3 AvgDif lower bound — per-loaded-element advantage incl. halo cost."""
+    M, N, P, C = plan.M, plan.N, plan.P, plan.C
+    return (
+        hw.t_smem_read
+        - hw.t_gmem_read * (N / (N + P - 1) + M / plan.S)
+        + P * M * N * hw.t_smem_read / (N + P - 1)
+        - (M - 1) * hw.t_shfl
+    )
+
+
+def plan_cycles_per_window(hw: HardwareLatencies, plan: SystolicPlan) -> float:
+    """Price an arbitrary plan: Σ taps·T_mad + Σ shifts·T_shfl per window step."""
+    mads = plan.mads_per_output_window()
+    shifts = plan.shift_count()
+    return plan.P * (mads * (hw.t_mad + hw.t_reg)) + plan.P * shifts * hw.t_shfl

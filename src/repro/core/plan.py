@@ -1,0 +1,241 @@
+"""SSAM plan formulation — the paper's four-tuple 𝒥 = (O, D, X, Y) (§3.4).
+
+A :class:`SystolicPlan` is the static description of how a regular
+memory-bound kernel executes on a software systolic array of ``S`` lanes
+(GPU warp: S=32; TPU VREG lane axis: S=128):
+
+* ``O`` (operations)  — the ``(⊗, ⊕)`` pair of Eq. 1, here fixed to
+  (multiply, add) for convolution/stencil plans and exposed as the
+  ``combine`` field for scan/recurrence plans.
+* ``D`` (dependencies) — the ordered :class:`Step` list. Each step first
+  *shifts* the partial-sum vector along the lane axis (the CUDA
+  ``__shfl_up_sync`` of §4.4 / the TPU lane roll), then accumulates a set
+  of *taps* — vertical, in-lane register reads (cheap direction of
+  Fig. 1d).
+* ``X`` / ``Y`` (inputs/outputs) — the register-cache geometry: each lane
+  caches ``C = N + P − 1`` elements (Eq. 3) and produces ``P`` outputs by
+  the sliding window of §4.2; a step's valid outputs live in lanes
+  ``[M−1, S)`` (§4.4).
+
+Plans are *data*: they are executed by :mod:`repro.core.executor` (pure
+JAX, lane rolls) and consumed as schedule parameters by the Pallas
+kernels in :mod:`repro.kernels`. The perf model (:mod:`repro.core.perfmodel`)
+prices a plan with the paper's §5 equations.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+# Lane widths of the "warp" on each target. The paper's S is WarpSize=32;
+# on TPU the natural systolic lane axis is the 128-wide VREG minor dim.
+GPU_WARP_LANES = 32
+TPU_VREG_LANES = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class Tap:
+    """A vertical (in-lane) register read: ``data[window + row_offset] * coeff``.
+
+    ``coeff_id`` indexes into the plan's coefficient table — for conv2d it
+    is ``(row, col)`` into the filter; for stencils it is the index of the
+    coefficient grouped into this column (Listing 2 groups {West},
+    {North, Current, South}, {East}).
+    """
+
+    row_offset: int
+    coeff_id: tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Step:
+    """One systolic cycle: shift partial sums ``shift`` lanes, then accumulate taps.
+
+    ``shift`` encodes an edge set of the dependency graph ``D``: lane ``j``
+    receives lane ``j - shift``'s partial result. ``masked`` marks steps whose
+    ctrl() (Eq. 1) gates the shifted operand by lane index (Kogge–Stone scan
+    arrows in Fig. 1e); convolution steps are unmasked because out-of-range
+    lanes are halo lanes that are discarded anyway (§4.5).
+    """
+
+    shift: int
+    taps: tuple[Tap, ...] = ()
+    masked: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class SystolicPlan:
+    """Static schedule for one SSAM kernel — see module docstring."""
+
+    kind: str            # 'conv1d' | 'conv2d' | 'stencil2d' | 'stencil3d' | 'scan' | 'recurrence'
+    S: int               # systolic array width (lanes)
+    C: int               # register-cache depth per lane (Eq. 3)
+    P: int               # outputs per lane (sliding-window length, §4.2)
+    M: int               # horizontal extent of the dependency footprint (filter cols)
+    N: int               # vertical extent (filter rows) — taps per column upper bound
+    steps: tuple[Step, ...]
+    combine: str = "fma"  # O of Eq. 1: 'fma' (r⊗x ⊕ s) or 'add' (scan) or 'linrec'
+
+    # ---- Y geometry -------------------------------------------------------
+    @property
+    def valid_lane_lo(self) -> int:
+        """First lane holding a valid output (paper: laneId ≥ M−1)."""
+        return self.M - 1
+
+    @property
+    def valid_lanes(self) -> int:
+        """Valid outputs per window step per warp: S − M + 1 (§4.4)."""
+        return self.S - self.M + 1
+
+    @property
+    def outputs_per_block(self) -> int:
+        return self.valid_lanes * self.P
+
+    # ---- redundancy analysis (§5.3) --------------------------------------
+    def halo_ratio(self) -> float:
+        """Exact fraction of loaded elements that are halo.
+
+        The paper bounds this as HR_rc = (S·C − (S−M)(C−N)) / (S·C); we
+        report the exact value 1 − (valid lanes × P)/(S·C).
+        """
+        loaded = self.S * self.C
+        useful = self.valid_lanes * self.P
+        return 1.0 - useful / loaded
+
+    def halo_ratio_paper_bound(self) -> float:
+        """The paper's §5.3 closed form (an upper-bound style estimate)."""
+        s, c, m, n = self.S, self.C, self.M, self.N
+        return (s * c - (s - m) * (c - n)) / (s * c)
+
+    def shift_count(self) -> int:
+        """Total lane shifts per window step (the (M−1)·T_shfl term of Eq. 4)."""
+        return sum(1 for st in self.steps if st.shift)
+
+    def mads_per_output_window(self) -> int:
+        """MAD ops per window step per lane (M·N for dense conv)."""
+        return sum(len(st.taps) for st in self.steps)
+
+
+# ---------------------------------------------------------------------------
+# Plan builders
+# ---------------------------------------------------------------------------
+
+def conv1d_plan(M: int, *, S: int = TPU_VREG_LANES, P: int = 1) -> SystolicPlan:
+    """§3.5 motivating example: 1-D convolution of filter width M.
+
+    One tap per step (N=1); the register cache holds C = P elements (the
+    window slides along the lane axis, not the cache axis, for 1-D).
+    """
+    steps = tuple(
+        Step(shift=1 if m > 0 else 0, taps=(Tap(0, (m,)),)) for m in range(M)
+    )
+    return SystolicPlan("conv1d", S=S, C=P, P=P, M=M, N=1, steps=steps)
+
+
+def conv2d_plan(M: int, N: int, *, S: int = TPU_VREG_LANES, P: int = 4) -> SystolicPlan:
+    """Listing 1: M×N filter → M shift-steps of N taps each; C = N + P − 1."""
+    steps = tuple(
+        Step(
+            shift=1 if m > 0 else 0,
+            taps=tuple(Tap(n, (n, m)) for n in range(N)),
+        )
+        for m in range(M)
+    )
+    return SystolicPlan("conv2d", S=S, C=N + P - 1, P=P, M=M, N=N, steps=steps)
+
+
+def stencil2d_plan(
+    offsets: Sequence[tuple[int, int]],
+    *,
+    S: int = TPU_VREG_LANES,
+    P: int = 4,
+) -> SystolicPlan:
+    """Listing 2 generalized: group stencil taps by column offset (dx).
+
+    ``offsets`` are (dy, dx) pairs relative to the output point. The plan
+    walks columns left→right (dx ascending), shifting partial sums once per
+    column — {West}, {North,Current,South}, {East} for the 5-point stencil.
+    """
+    dys = [dy for dy, _ in offsets]
+    dxs = [dx for _, dx in offsets]
+    lo_dy, hi_dy = min(dys), max(dys)
+    lo_dx, hi_dx = min(dxs), max(dxs)
+    M = hi_dx - lo_dx + 1
+    N = hi_dy - lo_dy + 1
+    cols: dict[int, list[tuple[int, int]]] = {}
+    for k, (dy, dx) in enumerate(offsets):
+        cols.setdefault(dx - lo_dx, []).append((dy - lo_dy, k))
+    steps = []
+    for m in range(M):
+        taps = tuple(Tap(row, (k,)) for row, k in sorted(cols.get(m, ())))
+        steps.append(Step(shift=1 if m > 0 else 0, taps=taps))
+    return SystolicPlan(
+        "stencil2d", S=S, C=N + P - 1, P=P, M=M, N=N, steps=tuple(steps)
+    )
+
+
+def stencil3d_plan(
+    offsets: Sequence[tuple[int, int, int]],
+    *,
+    S: int = TPU_VREG_LANES,
+    P: int = 2,
+) -> SystolicPlan:
+    """§4.9: 3-D stencils. (dz, dy, dx) taps.
+
+    The X–Y plane is handled exactly like :func:`stencil2d_plan`; the Z
+    direction becomes additional *vertical* taps (in-lane register reads of
+    the neighbouring Z-slices held in the same register cache). On GPU the
+    paper spills Z-partials to shared memory (inter-warp); on TPU we keep
+    the whole Z window in VREG-resident accumulators (DESIGN.md §7.5), so a
+    3-D plan is structurally a 2-D plan whose taps carry a dz coordinate.
+    """
+    dzs = [o[0] for o in offsets]
+    dys = [o[1] for o in offsets]
+    dxs = [o[2] for o in offsets]
+    lo_dz = min(dzs)
+    lo_dy, hi_dy = min(dys), max(dys)
+    lo_dx, hi_dx = min(dxs), max(dxs)
+    M = hi_dx - lo_dx + 1
+    N = hi_dy - lo_dy + 1
+    depth = max(dzs) - lo_dz + 1
+    cols: dict[int, list[tuple[int, int, int]]] = {}
+    for k, (dz, dy, dx) in enumerate(offsets):
+        cols.setdefault(dx - lo_dx, []).append((dz - lo_dz, dy - lo_dy, k))
+    steps = []
+    for m in range(M):
+        taps = tuple(
+            Tap(row, (z, k)) for z, row, k in sorted(cols.get(m, ()))
+        )
+        steps.append(Step(shift=1 if m > 0 else 0, taps=taps))
+    plan = SystolicPlan(
+        "stencil3d", S=S, C=N + P - 1, P=P, M=M, N=N, steps=tuple(steps)
+    )
+    object.__setattr__(plan, "_depth", depth)  # ancillary, not part of 𝒥
+    return plan
+
+
+def scan_plan(n: int, *, S: int | None = None) -> SystolicPlan:
+    """§3.6: Kogge–Stone inclusive scan over ``n`` lanes (Fig. 1e).
+
+    log2(n) masked steps with doubling shift; r ≡ 1 so steps carry no taps.
+    """
+    S = S or n
+    assert n & (n - 1) == 0, "Kogge–Stone scan wants a power-of-two width"
+    steps = tuple(Step(shift=1 << k, masked=True) for k in range(int(math.log2(n))))
+    return SystolicPlan("scan", S=S, C=1, P=1, M=1, N=1, steps=steps, combine="add")
+
+
+def linear_recurrence_plan(n: int, *, S: int | None = None) -> SystolicPlan:
+    """Kogge–Stone over the associative operator of ``h_t = a_t·h_{t−1} + b_t``.
+
+    (a₂,b₂)∘(a₁,b₁) = (a₁a₂, b₁a₂ + b₂). This is Eq. 1 with ⊗/⊕ acting on
+    transfer pairs; it executes the RWKV6 WKV recurrence and the Mamba/Hymba
+    selective-scan inner loop (DESIGN.md §3).
+    """
+    S = S or n
+    assert n & (n - 1) == 0, "Kogge–Stone scan wants a power-of-two width"
+    steps = tuple(Step(shift=1 << k, masked=True) for k in range(int(math.log2(n))))
+    return SystolicPlan(
+        "recurrence", S=S, C=1, P=1, M=1, N=1, steps=steps, combine="linrec"
+    )

@@ -1,0 +1,2 @@
+"""Data pipeline: deterministic synthetic token streams + host sharding."""
+from .pipeline import TokenDataset, make_batches  # noqa: F401

@@ -1,0 +1,125 @@
+"""Logical-axis → mesh-axis sharding rules (MaxText-style, per-arch overridable).
+
+Parameters and activations carry *logical* axis names ("embed", "heads",
+"ff", …). A rule table maps logical names to mesh axes; `pspec_for_axes`
+resolves a concrete `PartitionSpec`, skipping any assignment that does
+not divide the dimension or would reuse a mesh axis twice — this is what
+lets one rule table serve 10 architectures (a 4-head model simply leaves
+"heads" unsharded on a 16-way model axis instead of failing).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Mapping, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Default logical rules for the production meshes ("pod", "data", "model").
+# Entries may be a single mesh axis or a tuple (sharded over both).
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "vocab": ("model",),
+    "embed": (),                # replicated by default (TP shards ff/heads)
+    "ff": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "experts": ("model",),
+    "seq": (),                  # overridden to ("data",) for SP prefill cells
+    "cache_seq": (),            # overridden to ("model",) for long-context decode
+    "layers": (),
+    "head_dim": (),
+    "state": (),
+    "lora": (),
+    "conv": (),
+}
+
+
+def mesh_axis_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def pspec_for_axes(
+    axes: Sequence[str | None],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: Mapping[str, tuple[str, ...]] | None = None,
+) -> P:
+    """Resolve logical axes to a PartitionSpec under divisibility constraints."""
+    rules = dict(DEFAULT_RULES, **(rules or {}))
+    sizes = mesh_axis_sizes(mesh)
+    used: set[str] = set()
+    entries = []
+    for dim, name in zip(shape, axes):
+        assignment: tuple[str, ...] = ()
+        if name is not None:
+            cand = rules.get(name, ())
+            if isinstance(cand, str):
+                cand = (cand,)
+            picked = []
+            prod = 1
+            for ax in cand:
+                if ax in used or ax not in sizes:
+                    continue
+                if dim % (prod * sizes[ax]) == 0:
+                    picked.append(ax)
+                    prod *= sizes[ax]
+            assignment = tuple(picked)
+            used.update(assignment)
+        if len(assignment) == 0:
+            entries.append(None)
+        elif len(assignment) == 1:
+            entries.append(assignment[0])
+        else:
+            entries.append(assignment)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def shardings_for_specs(spec_tree, mesh: Mesh, rules=None):
+    """NamedSharding tree for a ParamSpec tree."""
+    from repro.nn import spec as pspec_mod  # deferred: avoids import cycle
+
+    return jax.tree.map(
+        lambda s: NamedSharding(
+            mesh, pspec_for_axes(s.axes, s.shape, mesh, rules)
+        ),
+        spec_tree,
+        is_leaf=pspec_mod.is_spec,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Mesh context: lets model code constrain intermediate activations without
+# threading the mesh through every call.
+# ---------------------------------------------------------------------------
+
+_ctx = threading.local()
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh, rules: Mapping[str, tuple[str, ...]] | None = None):
+    prev = getattr(_ctx, "value", None)
+    _ctx.value = (mesh, dict(DEFAULT_RULES, **(rules or {})))
+    try:
+        yield
+    finally:
+        _ctx.value = prev
+
+
+def current_mesh():
+    v = getattr(_ctx, "value", None)
+    return v
+
+
+def constrain(x: jax.Array, axes: Sequence[str | None]) -> jax.Array:
+    """with_sharding_constraint by logical axes; no-op outside mesh_context."""
+    ctx = current_mesh()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = pspec_for_axes(axes, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,8 @@
+"""SSAM Pallas TPU kernels (+ interpret-mode CPU validation + jnp oracles).
+
+Modules: ``ssam_conv2d``, ``ssam_stencil2d``, ``ssam_stencil3d``,
+``ssam_conv1d``, ``ssam_scan`` (kernels); ``ops`` (public jit'd API with
+backend dispatch); ``ref`` (pure-jnp oracles); ``stencils`` (Table 3
+benchmark definitions).
+"""
+from . import ops, ref, stencils  # noqa: F401

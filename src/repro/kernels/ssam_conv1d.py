@@ -1,0 +1,75 @@
+"""SSAM depthwise causal 1-D convolution Pallas kernel.
+
+The short depthwise convolution of Mamba-style blocks (Hymba's mamba
+branch; RWKV's token-shift is the K=2 special case). Layout maps
+*channels* to the VREG lane axis and *time* to sublanes, so the conv taps
+walk the **vertical** (in-register, cheap) direction of Fig. 1d — per the
+paper's §5.4 guidance to route dependencies through the cheap direction
+whenever the dependency graph D allows it. No lane rolls are needed at
+all: this is the ``D``-optimal SSAM mapping for depthwise conv, with the
+register cache of §4.2 (each lane caches ``C = K + BT − 1`` elements,
+sliding window of ``BT`` outputs).
+
+Overlapped blocking along time via ``pl.Element`` input specs (§4.5).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv1d_kernel(x_ref, w_ref, o_ref, *, K: int, BT: int, acc_dtype):
+    xb = x_ref[0].astype(acc_dtype)          # (BT + K − 1, BD)
+    wb = w_ref[:].astype(acc_dtype)          # (K, BD)
+    s = jnp.zeros((BT, xb.shape[1]), acc_dtype)
+    for k in range(K):                       # vertical taps only (cheap dir.)
+        s = s + xb[k : k + BT, :] * wb[k, :]
+    o_ref[0] = s.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_t", "block_d", "interpret", "acc_dtype")
+)
+def conv1d_causal(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block_t: int = 128,
+    block_d: int = 128,
+    interpret: bool = True,
+    acc_dtype=jnp.float32,
+) -> jax.Array:
+    """Depthwise causal conv: ``y[b,t,d] = Σ_k x[b, t−K+1+k, d] · w[k, d]``.
+
+    Args:
+      x: ``(B, T, D)`` input.
+      w: ``(K, D)`` per-channel filter taps (tap K−1 multiplies x[t]).
+    """
+    B, T, D = x.shape
+    K, Dw = w.shape
+    assert Dw == D, (w.shape, x.shape)
+    BT, BD = min(block_t, T), min(block_d, D)
+    gt, gd = pl.cdiv(T, BT), pl.cdiv(D, BD)
+    # causal: K−1 zeros in front; pad tail/channels up to whole tiles
+    xp = jnp.pad(x, ((0, 0), (K - 1, gt * BT - T), (0, gd * BD - D)))
+    wp = jnp.pad(w, ((0, 0), (0, gd * BD - D)))
+
+    kern = functools.partial(_conv1d_kernel, K=K, BT=BT, acc_dtype=acc_dtype)
+    out = pl.pallas_call(
+        kern,
+        grid=(B, gt, gd),
+        in_specs=[
+            pl.BlockSpec(
+                (pl.Element(1), pl.Element(BT + K - 1), pl.Element(BD)),
+                lambda b, i, j: (b, i * BT, j * BD),
+            ),
+            pl.BlockSpec((K, BD), lambda b, i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, BT, BD), lambda b, i, j: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, gt * BT, gd * BD), x.dtype),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:, :T, :D]

@@ -1,0 +1,138 @@
+"""Cell programs: (architecture × input-shape × mesh) → jit-able step fn
+with full sharding specs and abstract (ShapeDtypeStruct) arguments.
+
+A *cell* lowers one of:
+* ``train``   — loss → grads → AdamW update (donated params/opt state),
+* ``prefill`` — full forward, last-position logits,
+* ``decode``  — one-token ``serve_step`` against a seq_len KV cache/state.
+
+Nothing here allocates: parameters, optimizer states and caches are
+ShapeDtypeStructs derived from the ParamSpec trees, and shardings come
+from the logical-axis rules (per-cell overridable for §Perf hillclimbs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ShapeConfig, active_param_count
+from repro.distributed.sharding import (mesh_context, pspec_for_axes,
+                                        shardings_for_specs)
+from repro.models import build_model
+from repro.models.base import ArchConfig
+from repro.nn.spec import abstract_params
+from repro.optim import adamw_state_specs, adamw_update, cosine_schedule
+
+
+@dataclasses.dataclass
+class CellProgram:
+    name: str
+    fn: Callable
+    abstract_args: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple
+    model_flops: float          # MODEL_FLOPS for this step (6·N·D / 2·N·D)
+    cfg: ArchConfig
+    shape: ShapeConfig
+
+    def lower(self, mesh: Mesh, rules=None):
+        with mesh, mesh_context(mesh, rules):
+            jitted = jax.jit(
+                self.fn,
+                in_shardings=self.in_shardings,
+                out_shardings=self.out_shardings,
+                donate_argnums=self.donate_argnums,
+            )
+            return jitted.lower(*self.abstract_args)
+
+
+def _input_shardings(inp, axes, mesh, rules):
+    return {
+        k: NamedSharding(mesh, pspec_for_axes(axes[k], inp[k].shape, mesh, rules))
+        for k in inp
+    }
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+               *, rules=None, dtype: str = "bfloat16",
+               lr: float = 3e-4, lr_warmup: int = 2000,
+               lr_total: int = 200_000) -> CellProgram:
+    cfg = dataclasses.replace(cfg, dtype=dtype)
+    model = build_model(cfg)
+    pspecs = model.specs()
+    params_abs = abstract_params(pspecs)
+    params_sh = shardings_for_specs(pspecs, mesh, rules)
+    _, n_active = active_param_count(cfg)
+    repl = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        ospecs = adamw_state_specs(pspecs)
+        opt_abs = abstract_params(ospecs)
+        opt_sh = shardings_for_specs(ospecs, mesh, rules)
+        inp, in_axes = model.train_inputs(shape.batch, shape.seq)
+        inp_sh = _input_shardings(inp, in_axes, mesh, rules)
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(model.loss)(params, batch)
+            lr_t = cosine_schedule(opt_state["step"], base_lr=lr,
+                                   warmup=lr_warmup, total=lr_total)
+            params, opt_state, gnorm = adamw_update(params, grads, opt_state,
+                                                    lr=lr_t)
+            return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+        metrics_sh = {"loss": repl, "grad_norm": repl}
+        flops = 6.0 * n_active * shape.batch * shape.seq
+        return CellProgram(
+            name=f"{cfg.name}:{shape.name}", fn=train_step,
+            abstract_args=(params_abs, opt_abs, inp),
+            in_shardings=(params_sh, opt_sh, inp_sh),
+            out_shardings=(params_sh, opt_sh, metrics_sh),
+            donate_argnums=(0, 1), model_flops=flops, cfg=cfg, shape=shape)
+
+    if shape.kind == "prefill":
+        inp, in_axes = model.train_inputs(shape.batch, shape.seq)
+        inp.pop("labels")
+        in_axes.pop("labels")
+        inp_sh = _input_shardings(inp, in_axes, mesh, rules)
+        logits_sh = NamedSharding(
+            mesh, pspec_for_axes(("batch", "vocab"),
+                                 (shape.batch, cfg.vocab), mesh, rules))
+
+        def prefill_step(params, batch):
+            return model.prefill_logits(params, batch)
+
+        flops = 2.0 * n_active * shape.batch * shape.seq
+        return CellProgram(
+            name=f"{cfg.name}:{shape.name}", fn=prefill_step,
+            abstract_args=(params_abs, inp),
+            in_shardings=(params_sh, inp_sh),
+            out_shardings=logits_sh, donate_argnums=(),
+            model_flops=flops, cfg=cfg, shape=shape)
+
+    # decode: one new token against a seq_len-deep cache/state
+    sspecs = model.decode_state_specs(shape.batch, shape.seq)
+    state_abs = abstract_params(sspecs)
+    state_sh = shardings_for_specs(sspecs, mesh, rules)
+    tokens = jax.ShapeDtypeStruct((shape.batch, 1), jnp.int32)
+    tokens_sh = NamedSharding(
+        mesh, pspec_for_axes(("batch", None), (shape.batch, 1), mesh, rules))
+    index = jax.ShapeDtypeStruct((), jnp.int32)
+    logits_sh = NamedSharding(
+        mesh, pspec_for_axes(("batch", "vocab"),
+                             (shape.batch, cfg.vocab), mesh, rules))
+
+    def serve_step(params, state, tokens, index):
+        return model.serve_step(params, state, tokens, index)
+
+    flops = 2.0 * n_active * shape.batch
+    return CellProgram(
+        name=f"{cfg.name}:{shape.name}", fn=serve_step,
+        abstract_args=(params_abs, state_abs, tokens, index),
+        in_shardings=(params_sh, state_sh, tokens_sh, repl),
+        out_shardings=(logits_sh, state_sh), donate_argnums=(1,),
+        model_flops=flops, cfg=cfg, shape=shape)

@@ -1,0 +1,163 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+for the single-pod 16×16 and multi-pod 2×16×16 production meshes.
+
+Proves the distribution config is coherent without hardware: sharding
+mismatches, compile-time OOM and unsupported collectives all fail here.
+Emits one JSON artifact per cell with memory_analysis, cost_analysis and
+the collective-byte breakdown parsed from the optimized HLO — the inputs
+to EXPERIMENTS.md §Dry-run/§Roofline (see benchmarks/roofline.py).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --multi-pod-only --out artifacts/
+"""
+import argparse
+import json
+import time
+import traceback
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str,
+             rules=None, tag: str = "baseline", verbose: bool = True,
+             cfg_overrides: dict | None = None) -> dict:
+    """cfg_overrides: dataclasses.replace() fields on the ArchConfig —
+    the §Perf hillclimb lever (block sizes, chunk sizes, remat, …)."""
+    import dataclasses
+
+    import jax
+    from repro.config import SHAPES, cell_applicable, get_config
+    from repro.core.hlo_cost import cost_of
+    from repro.core.rooflines import collective_bytes_from_hlo
+    from repro.launch.cell import build_cell
+    from repro.launch.mesh import make_production_mesh
+
+    shape = SHAPES[shape_name]
+    runnable, reason = cell_applicable(arch, shape_name)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag,
+        "status": "skip", "reason": reason,
+        "cfg_overrides": cfg_overrides or {}, "rules": 
+            {k: list(v) if isinstance(v, (list, tuple)) else v
+             for k, v in (rules or {}).items()},
+    }
+    if not runnable:
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+            fname = f"{arch}__{shape_name}__{mesh_name}__{tag}.json"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                json.dump(rec, f, indent=2)
+        if verbose:
+            print(f"[dryrun] {arch:18s} {shape_name:12s} {mesh_name:10s} "
+                  f"{reason}", flush=True)
+        return rec
+
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+    cell = build_cell(cfg, shape, mesh, rules=rules)
+    lowered = cell.lower(mesh, rules)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes_from_hlo(hlo)
+    # Trip-count-aware roll-up (XLA's cost_analysis counts while bodies
+    # once — see repro.core.hlo_cost): the roofline reads these fields.
+    hc = cost_of(hlo)
+
+    rec.update(
+        status="ok",
+        chips=chips,
+        model_flops=cell.model_flops,
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        cost={k: cost[k] for k in ("flops", "bytes accessed")
+              if k in cost},
+        memory={
+            "argument_size_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_size_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_size_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_size_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        collectives={
+            "bytes_by_kind": coll.bytes_by_kind,
+            "count_by_kind": coll.count_by_kind,
+            "total_bytes": coll.total_bytes,
+        },
+        hlo_cost={
+            "flops": hc.flops,
+            "bytes": hc.bytes,
+            "bytes_fused": hc.bytes_fused,
+            "collective_bytes": hc.collective_bytes,
+            "collective_by_kind": hc.collective_by_kind,
+        },
+    )
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fname = f"{arch}__{shape_name}__{mesh_name}__{tag}.json"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(rec, f, indent=2)
+    if verbose:
+        print(f"[dryrun] {arch:18s} {shape_name:12s} {mesh_name:10s} OK "
+              f"lower={t_lower:6.1f}s compile={t_compile:6.1f}s "
+              f"flops/dev={hc.flops:.3e} "
+              f"coll={hc.collective_bytes:.3e}B", flush=True)
+    return rec
+
+
+def main():
+    from repro.config import ARCHS, SHAPES
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = []
+    if not args.multi_pod_only:
+        meshes.append(False)
+    if not args.single_pod_only:
+        meshes.append(True)
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for multi_pod in meshes:
+                try:
+                    run_cell(arch, shape, multi_pod=multi_pod, out_dir=args.out,
+                             tag=args.tag)
+                except Exception as e:  # noqa: BLE001 — report and continue
+                    failures.append((arch, shape, multi_pod, repr(e)))
+                    print(f"[dryrun] {arch} {shape} multi_pod={multi_pod} "
+                          f"FAILED: {e}", flush=True)
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} cell(s) FAILED")
+        raise SystemExit(1)
+    print("\nAll dry-run cells compiled successfully.")
+
+
+if __name__ == "__main__":
+    main()

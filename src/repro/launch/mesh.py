@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+A function (never a module-level constant) so importing this module never
+touches jax device state. Single pod: 16×16 = 256 chips ("data","model").
+Multi-pod: 2×16×16 = 512 chips ("pod","data","model") — the "pod" axis is
+the slow inter-pod (DCN-ish) dimension; the sharding rules fold it into
+the batch axis (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Small mesh over however many (real or forced) devices exist —
+    used by tests and the CPU examples."""
+    n = jax.device_count()
+    data = n // model_axis
+    return jax.make_mesh((data, model_axis), ("data", "model"))

@@ -1,0 +1,86 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""§Perf hillclimb driver: re-lower one cell with a tagged variant
+(config overrides and/or sharding-rule overrides) and print the roofline
+delta vs the baseline artifact.
+
+  PYTHONPATH=src python -m repro.launch.perf --arch rwkv6-1.6b \
+      --shape train_4k --tag chunk128 --set wkv_chunk=128
+  PYTHONPATH=src python -m repro.launch.perf --arch stablelm-12b \
+      --shape decode_32k --tag seqshard --rule cache_seq=model
+"""
+import argparse
+import json
+
+
+def parse_value(v: str):
+    for cast in (int, float):
+        try:
+            return cast(v)
+        except ValueError:
+            pass
+    if v in ("true", "false"):
+        return v == "true"
+    return v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--set", action="append", default=[],
+                    help="ArchConfig override field=value")
+    ap.add_argument("--rule", action="append", default=[],
+                    help="sharding rule logical=mesh_axis[,axis2] ('' to unshard)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = parse_value(v)
+    rules = {}
+    for kv in args.rule:
+        k, v = kv.split("=", 1)
+        rules[k] = tuple(x for x in v.split(",") if x)
+
+    from repro.config import normalize_arch
+    from repro.launch.dryrun import run_cell
+
+    args.arch = normalize_arch(args.arch)
+    rec = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                   out_dir=args.out, rules=rules or None, tag=args.tag,
+                   cfg_overrides=overrides or None)
+
+    # compare against baseline artifact
+    import sys
+    sys.path.insert(0, "benchmarks")
+    import roofline as rl
+
+    mesh_name = "pod2x16x16" if args.multi_pod else "pod16x16"
+    base_path = os.path.join(
+        args.out, f"{rec['arch']}__{args.shape}__{mesh_name}__baseline.json")
+    if os.path.exists(base_path) and rec["status"] == "ok":
+        base = json.load(open(base_path))
+        rb, rv = rl.roofline_of(base), rl.roofline_of(rec)
+        print(f"\n{'':14s} {'baseline':>12s} {args.tag:>12s} {'delta':>8s}")
+        for term in ("compute_s", "memory_s", "collective_s"):
+            b, v = getattr(rb, term), getattr(rv, term)
+            d = (v - b) / b * 100 if b else float("inf")
+            print(f"{term:14s} {b:12.6f} {v:12.6f} {d:+7.1f}%")
+        print(f"{'bound':14s} {rb.bound_s:12.6f} {rv.bound_s:12.6f} "
+              f"{(rv.bound_s - rb.bound_s) / rb.bound_s * 100:+7.1f}%  "
+              f"(dominant: {rb.dominant} → {rv.dominant})")
+        print(f"{'roofline frac':14s} {rb.roofline_fraction:12.4f} "
+              f"{rv.roofline_fraction:12.4f}")
+
+
+if __name__ == "__main__":
+    main()

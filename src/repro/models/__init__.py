@@ -1,0 +1,20 @@
+"""Model factory: ArchConfig → model instance by family."""
+from __future__ import annotations
+
+from .base import ArchConfig
+
+
+def build_model(cfg: ArchConfig):
+    from .hymba import Hymba
+    from .rwkv6 import RWKV6
+    from .transformer import Transformer
+    from .whisper import Whisper
+
+    if cfg.family == "ssm":
+        return RWKV6(cfg)
+    if cfg.family == "hybrid":
+        return Hymba(cfg)
+    if cfg.family == "audio":
+        return Whisper(cfg)
+    # dense | moe | vlm all run on the Transformer
+    return Transformer(cfg)

@@ -1,0 +1,145 @@
+"""Hymba — hybrid-head architecture: attention and Mamba heads in parallel
+within every layer (arXiv:2411.13676), sliding-window attention with a few
+global layers (first / middle / last).
+
+The Mamba branch runs the SSAM conv1d + linear-recurrence plans
+(DESIGN.md §5). Decode state = O(1) SSM state + windowed KV cache, which
+is why this arch runs the ``long_500k`` cell.
+
+Simplifications vs the paper, recorded here per DESIGN.md §7: meta tokens
+and cross-layer KV sharing are omitted; the two branch outputs are
+mean-combined after per-branch normalization (the paper's β-weighted
+variant is a learned scalar — we keep the learned scalars).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.nn import attention as attn
+from repro.nn import layers as nnl
+from repro.nn import ssm
+from repro.nn.spec import ParamSpec, stack_specs
+from .base import (ArchConfig, TOKEN_AXES, cache_spec, chunked_cross_entropy,
+                   remat, token_inputs)
+
+
+class Hymba:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.attn_cfg = attn.AttnConfig(
+            d_model=cfg.d_model, n_heads=cfg.n_heads, kv_heads=cfg.kv_heads,
+            head_dim=cfg.head_dim, rope_base=cfg.rope_base,
+            window=cfg.window, block_q=cfg.block_q, block_kv=cfg.block_kv,
+            constrain_cache=cfg.constrain_cache)
+
+    def layer_specs(self) -> dict:
+        c = self.cfg
+        return {
+            "norm_mix": nnl.rmsnorm_specs(c.d_model),
+            "norm_mlp": nnl.rmsnorm_specs(c.d_model),
+            "attn": attn.gqa_specs(c.d_model, c.n_heads, c.kv_heads, c.head_dim),
+            "mamba": ssm.mamba_specs(c.d_model, d_inner=c.d_inner,
+                                     ssm_state=c.ssm_state, conv_k=c.conv_k),
+            "beta_attn": ParamSpec((c.d_model,), ("embed",), init="ones"),
+            "beta_mamba": ParamSpec((c.d_model,), ("embed",), init="ones"),
+            "ffn": nnl.gated_mlp_specs(c.d_model, c.d_ff),
+        }
+
+    def specs(self) -> dict:
+        c = self.cfg
+        return {
+            "embed": nnl.embedding_specs(c.vocab, c.d_model),
+            "layers": stack_specs(self.layer_specs(), c.n_layers),
+            "norm_f": nnl.rmsnorm_specs(c.d_model),
+        }
+
+    def train_inputs(self, batch: int, seq: int):
+        return token_inputs(batch, seq), dict(TOKEN_AXES)
+
+    def _layer(self, p, x, *, positions, is_global, attn_cache=None,
+               mamba_state=None, cache_index=None, write_through=True):
+        c = self.cfg
+        h = nnl.rmsnorm_apply(p["norm_mix"], x)
+        a, new_cache = attn.gqa_apply(p["attn"], h, self.attn_cfg,
+                                      positions=positions, is_global=is_global,
+                                      cache=attn_cache, cache_index=cache_index,
+                                      write_through=write_through)
+        m, new_mstate = ssm.mamba_apply(p["mamba"], h, ssm_state=c.ssm_state,
+                                        conv_k=c.conv_k, state=mamba_state,
+                                        work_dtype=jnp.dtype(c.scan_dtype))
+        # per-branch rescale then mean-combine (hybrid-head fusion)
+        mix = 0.5 * (a * p["beta_attn"].astype(x.dtype)
+                     + m * p["beta_mamba"].astype(x.dtype))
+        x = x + mix
+        h = nnl.rmsnorm_apply(p["norm_mlp"], x)
+        x = x + nnl.gated_mlp_apply(p["ffn"], h, act="silu")
+        return x, new_cache, new_mstate
+
+    def forward(self, params, batch):
+        c = self.cfg
+        x = nnl.embedding_apply(params["embed"], batch["tokens"]).astype(c.param_dtype)
+        x = constrain(x, ("batch", "seq", "embed"))
+        positions = jnp.arange(x.shape[1])
+        is_global = c.is_global_layers()
+
+        def body(xx, layer):
+            p_i, g_i = layer
+            xx = constrain(xx, ("batch", "seq", "embed"))
+            y, _, _ = self._layer(p_i, xx, positions=positions, is_global=g_i)
+            return y, None
+
+        x, _ = jax.lax.scan(remat(body, c.remat), x, (params["layers"], is_global))
+        return nnl.rmsnorm_apply(params["norm_f"], x), jnp.float32(0)
+
+    def loss(self, params, batch):
+        x, _ = self.forward(params, batch)
+        return chunked_cross_entropy(x, params["embed"]["table"],
+                                     batch["labels"], chunk=self.cfg.loss_chunk)
+
+    def prefill_logits(self, params, batch):
+        x, _ = self.forward(params, batch)
+        return (x[:, -1] @ params["embed"]["table"].T.astype(x.dtype)).astype(jnp.float32)
+
+    # ---- decode: windowed KV + O(1) SSM state ------------------------------
+    def decode_state_specs(self, batch: int, cache_len: int) -> dict:
+        c = self.cfg
+        kv = cache_spec(c.n_layers, batch, cache_len, c.kv_heads, c.head_dim,
+                        c.param_dtype)
+        return {
+            **kv,
+            "h": ParamSpec((c.n_layers, batch, c.d_inner, c.ssm_state),
+                           ("layers", "batch", "ff", "state"), init="zeros"),
+            "conv": ParamSpec((c.n_layers, batch, c.conv_k - 1, c.d_inner),
+                              ("layers", "batch", None, "ff"), init="zeros",
+                              dtype=c.param_dtype),
+        }
+
+    def serve_step(self, params, state, tokens, index):
+        c = self.cfg
+        x = nnl.embedding_apply(params["embed"], tokens).astype(c.param_dtype)
+        positions = (jnp.array([0]) + index if jnp.ndim(index) == 0
+                     else index[:, None])
+        is_global = c.is_global_layers()
+
+        wt = not c.decode_write_outside
+
+        def body(xx, layer):
+            p_i, g_i, st_i = layer
+            y, new_cache, new_m = self._layer(
+                p_i, xx, positions=positions, is_global=g_i,
+                attn_cache={"k": st_i["k"], "v": st_i["v"]},
+                mamba_state={"h": st_i["h"], "conv": st_i["conv"]},
+                cache_index=index, write_through=wt)
+            return y, {**new_cache, **new_m}
+
+        x, new_state = jax.lax.scan(body, x, (params["layers"], is_global, state))
+        if c.decode_write_outside:
+            from .transformer import _stacked_token_write
+            for key in ("k", "v"):
+                new_state[key] = _stacked_token_write(state[key],
+                                                      new_state[key], index)
+        x = nnl.rmsnorm_apply(params["norm_f"], x)
+        logits = (x[:, 0] @ params["embed"]["table"].T.astype(x.dtype)).astype(jnp.float32)
+        return logits, new_state

@@ -1,0 +1,120 @@
+"""RWKV6 "Finch" — attention-free LM with data-dependent decay.
+
+The WKV recurrence is the SSAM linear-recurrence plan (DESIGN.md §5):
+per-(head, k, v)-channel ``S_t = d_t·S_{t−1} + k_tᵀv_t`` executed by the
+chunked form in :mod:`repro.nn.ssm` (production) and validated against
+:func:`repro.kernels.ops.linear_recurrence` (the paper-faithful SSAM
+kernel) in tests. Decode state is O(1) in sequence length — the reason
+this arch runs the ``long_500k`` cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.nn import layers as nnl
+from repro.nn import ssm
+from repro.nn.spec import ParamSpec, stack_specs
+from .base import (ArchConfig, TOKEN_AXES, chunked_cross_entropy, remat,
+                   token_inputs)
+
+
+class RWKV6:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        assert cfg.head_k and cfg.head_v and cfg.n_heads
+
+    def layer_specs(self) -> dict:
+        c = self.cfg
+        return {
+            "norm_tm": nnl.rmsnorm_specs(c.d_model),
+            "norm_cm": nnl.rmsnorm_specs(c.d_model),
+            "tm": ssm.rwkv6_timemix_specs(
+                c.d_model, n_heads=c.n_heads, head_k=c.head_k, head_v=c.head_v),
+            "cm": ssm.rwkv6_channelmix_specs(c.d_model, c.d_ff),
+        }
+
+    def specs(self) -> dict:
+        c = self.cfg
+        return {
+            "embed": nnl.embedding_specs(c.vocab, c.d_model),
+            "norm_in": nnl.rmsnorm_specs(c.d_model),
+            "layers": stack_specs(self.layer_specs(), c.n_layers),
+            "norm_f": nnl.rmsnorm_specs(c.d_model),
+        }
+
+    def train_inputs(self, batch: int, seq: int):
+        return token_inputs(batch, seq), dict(TOKEN_AXES)
+
+    def _layer(self, p, x, *, state=None):
+        c = self.cfg
+        tm_state = None if state is None else {"S": state["S"], "prev": state["prev_tm"]}
+        cm_state = None if state is None else {"prev": state["prev_cm"]}
+        h, tm_new = ssm.rwkv6_timemix_apply(
+            p["tm"], nnl.rmsnorm_apply(p["norm_tm"], x),
+            n_heads=c.n_heads, head_k=c.head_k, head_v=c.head_v,
+            chunk=c.wkv_chunk, state=tm_state,
+            work_dtype=jnp.dtype(c.scan_dtype))
+        x = x + h
+        h, cm_new = ssm.rwkv6_channelmix_apply(
+            p["cm"], nnl.rmsnorm_apply(p["norm_cm"], x), state=cm_state)
+        x = x + h
+        new_state = {"S": tm_new["S"], "prev_tm": tm_new["prev"],
+                     "prev_cm": cm_new["prev"]}
+        return x, new_state
+
+    def forward(self, params, batch):
+        c = self.cfg
+        x = nnl.embedding_apply(params["embed"], batch["tokens"]).astype(c.param_dtype)
+        x = nnl.rmsnorm_apply(params["norm_in"], x)
+        x = constrain(x, ("batch", "seq", "embed"))
+
+        def body(xx, p_i):
+            xx = constrain(xx, ("batch", "seq", "embed"))
+            y, _ = self._layer(p_i, xx)
+            return y, None
+
+        x, _ = jax.lax.scan(remat(body, c.remat), x, params["layers"])
+        return nnl.rmsnorm_apply(params["norm_f"], x), jnp.float32(0)
+
+    def loss(self, params, batch):
+        x, _ = self.forward(params, batch)
+        return chunked_cross_entropy(x, params["embed"]["table"],
+                                     batch["labels"], chunk=self.cfg.loss_chunk)
+
+    def prefill_logits(self, params, batch):
+        x, _ = self.forward(params, batch)
+        return (x[:, -1] @ params["embed"]["table"].T.astype(x.dtype)).astype(jnp.float32)
+
+    # ---- decode: O(1) recurrent state -------------------------------------
+    def decode_state_specs(self, batch: int, cache_len: int) -> dict:
+        """cache_len is irrelevant — state is O(1) (the long-context story)."""
+        c = self.cfg
+        return {
+            "S": ParamSpec((c.n_layers, batch, c.n_heads, c.head_k, c.head_v),
+                           ("layers", "batch", "heads", "head_dim", None),
+                           init="zeros"),
+            "prev_tm": ParamSpec((c.n_layers, batch, 1, c.d_model),
+                                 ("layers", "batch", None, "embed"),
+                                 init="zeros", dtype=c.param_dtype),
+            "prev_cm": ParamSpec((c.n_layers, batch, 1, c.d_model),
+                                 ("layers", "batch", None, "embed"),
+                                 init="zeros", dtype=c.param_dtype),
+        }
+
+    def serve_step(self, params, state, tokens, index):
+        c = self.cfg
+        del index  # position-free architecture
+        x = nnl.embedding_apply(params["embed"], tokens).astype(c.param_dtype)
+        x = nnl.rmsnorm_apply(params["norm_in"], x)
+
+        def body(xx, layer):
+            p_i, st_i = layer
+            y, new_st = self._layer(p_i, xx, state=st_i)
+            return y, new_st
+
+        x, new_state = jax.lax.scan(body, x, (params["layers"], state))
+        x = nnl.rmsnorm_apply(params["norm_f"], x)
+        logits = (x[:, 0] @ params["embed"]["table"].T.astype(x.dtype)).astype(jnp.float32)
+        return logits, new_state

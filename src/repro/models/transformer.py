@@ -1,0 +1,279 @@
+"""Decoder-only transformer covering the dense / MoE / MLA / VLM archs:
+stablelm-12b, chatglm3-6b, gemma3-1b, starcoder2-3b, dbrx-132b,
+deepseek-v2-236b, internvl2-1b (stub patch-embed prefix).
+
+One scan-over-layers implementation; per-layer heterogeneity (gemma3's
+5:1 local:global pattern, dual RoPE bases) rides through the scan as
+traced per-layer scalars so the HLO stays O(1) in depth.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.nn import attention as attn
+from repro.nn import layers as nnl
+from repro.nn import moe as nnmoe
+from repro.nn.spec import ParamSpec, stack_specs
+from .base import (ArchConfig, TOKEN_AXES, cache_spec, chunked_cross_entropy,
+                   remat, token_inputs)
+
+
+def _stacked_token_write(cache, token_slices, index):
+    """Write (L, B, 1, …) token slices into the (L, B, S, …) stacked cache
+    at ``index`` (scalar, or (B,) per-slot) — in place under donation."""
+    if jnp.ndim(index) == 0:
+        start = (0, 0, index) + (0,) * (cache.ndim - 3)
+        return jax.lax.dynamic_update_slice(cache, token_slices.astype(cache.dtype), start)
+
+    def per_row(c, n, i):  # c: (L, S, …), n: (L, 1, …)
+        return jax.lax.dynamic_update_slice(
+            c, n, (0, i) + (0,) * (c.ndim - 2))
+
+    return jax.vmap(per_row, in_axes=(1, 1, 0), out_axes=1)(
+        cache, token_slices.astype(cache.dtype), index)
+
+
+class Transformer:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        c = cfg
+        self.attn_cfg = attn.AttnConfig(
+            d_model=c.d_model, n_heads=c.n_heads, kv_heads=c.kv_heads,
+            head_dim=c.head_dim, rope_base=c.rope_base,
+            rot_dim=int(c.head_dim * c.rot_frac) // 2 * 2,
+            bias=c.attn_bias, qk_norm=c.qk_norm, window=c.window,
+            block_q=c.block_q, block_kv=c.block_kv,
+            constrain_cache=c.constrain_cache)
+        self.mla_cfg = attn.MLAConfig(
+            d_model=c.d_model, n_heads=c.n_heads, q_lora=c.q_lora,
+            kv_lora=c.kv_lora, qk_nope=c.qk_nope, qk_rope=c.qk_rope,
+            v_head=c.v_head, rope_base=c.rope_base,
+            block_q=c.block_q, block_kv=c.block_kv,
+            constrain_cache=c.constrain_cache) if c.mla else None
+
+    # ---- parameters -------------------------------------------------------
+    def _norm_specs(self):
+        c = self.cfg
+        if c.norm == "layernorm":
+            return nnl.layernorm_specs(c.d_model)
+        return nnl.rmsnorm_specs(c.d_model, plus_one=(c.norm == "rmsnorm_p1"))
+
+    def _norm(self, p, x):
+        c = self.cfg
+        if c.norm == "layernorm":
+            return nnl.layernorm_apply(p, x)
+        return nnl.rmsnorm_apply(p, x, plus_one=(c.norm == "rmsnorm_p1"))
+
+    def layer_specs(self) -> dict:
+        c = self.cfg
+        s: dict[str, Any] = {"norm_attn": self._norm_specs(),
+                             "norm_mlp": self._norm_specs()}
+        if c.sandwich_norm:
+            s["norm_attn_post"] = self._norm_specs()
+            s["norm_mlp_post"] = self._norm_specs()
+        if c.mla:
+            s["attn"] = attn.mla_specs(self.mla_cfg)
+        else:
+            s["attn"] = attn.gqa_specs(c.d_model, c.n_heads, c.kv_heads,
+                                       c.head_dim, bias=c.attn_bias,
+                                       qk_norm=c.qk_norm)
+        if c.moe:
+            s["ffn"] = nnmoe.moe_specs(c.d_model, c.d_ff, c.n_experts,
+                                       n_shared=c.n_shared, shared_ff=c.d_ff)
+        elif c.mlp.startswith("gated"):
+            s["ffn"] = nnl.gated_mlp_specs(c.d_model, c.d_ff)
+        else:
+            s["ffn"] = nnl.mlp_specs(c.d_model, c.d_ff, bias=c.attn_bias)
+        return s
+
+    def specs(self) -> dict:
+        c = self.cfg
+        s = {
+            "embed": nnl.embedding_specs(c.vocab, c.d_model),
+            "layers": stack_specs(self.layer_specs(), c.n_layers),
+            "norm_f": self._norm_specs(),
+        }
+        if not c.tie_embeddings:
+            s["lm_head"] = {"w": ParamSpec((c.d_model, c.vocab),
+                                           ("embed", "vocab"))}
+        if c.n_prefix:
+            s["prefix_proj"] = {"w": ParamSpec((c.d_model, c.d_model),
+                                               ("embed", None))}
+        if c.pos_emb == "learned":
+            s["pos_embed"] = {"table": ParamSpec((32768, c.d_model),
+                                                 (None, "embed"), init="small")}
+        return s
+
+    # ---- inputs ------------------------------------------------------------
+    def train_inputs(self, batch: int, seq: int):
+        inp = token_inputs(batch, seq)
+        axes = dict(TOKEN_AXES)
+        if self.cfg.n_prefix:
+            inp["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (batch, self.cfg.n_prefix, self.cfg.d_model), self.cfg.param_dtype)
+            axes["prefix_embeds"] = ("batch", "seq", "embed")
+        return inp, axes
+
+    # ---- forward -----------------------------------------------------------
+    def _ffn(self, p, x):
+        c = self.cfg
+        if c.moe:
+            return nnmoe.moe_apply(
+                p, x, top_k=c.top_k, capacity_factor=c.capacity_factor,
+                norm_gates=True, act="silu")
+        if c.mlp == "gated_silu":
+            return nnl.gated_mlp_apply(p, x, act="silu"), 0.0
+        if c.mlp == "gated_gelu":
+            return nnl.gated_mlp_apply(p, x, act="gelu"), 0.0
+        return nnl.mlp_apply(p, x, act="gelu"), 0.0
+
+    def _layer(self, p, x, *, positions, is_global, cache=None,
+               cache_index=None, write_through=True):
+        c = self.cfg
+        h = self._norm(p["norm_attn"], x)
+        base = c.rope_base
+        if c.rope_base_global is not None:
+            base = jnp.where(is_global, c.rope_base_global, c.rope_base)
+        if c.mla:
+            a, new_cache = attn.mla_apply(p["attn"], h, self.mla_cfg,
+                                          positions=positions, cache=cache,
+                                          cache_index=cache_index,
+                                          write_through=write_through)
+        else:
+            a, new_cache = attn.gqa_apply(p["attn"], h, self.attn_cfg,
+                                          positions=positions,
+                                          is_global=is_global, rope_base=base,
+                                          cache=cache, cache_index=cache_index,
+                                          write_through=write_through)
+        if c.sandwich_norm:
+            a = self._norm(p["norm_attn_post"], a)
+        x = x + a
+        h = self._norm(p["norm_mlp"], x)
+        f, aux = self._ffn(p["ffn"], h)
+        if c.sandwich_norm:
+            f = self._norm(p["norm_mlp_post"], f)
+        return x + f, aux, new_cache
+
+    def _embed(self, params, batch):
+        c = self.cfg
+        x = nnl.embedding_apply(params["embed"], batch["tokens"])
+        x = x.astype(c.param_dtype)
+        if c.emb_scale:
+            x = x * jnp.sqrt(jnp.float32(c.d_model)).astype(x.dtype)
+        if c.n_prefix and "prefix_embeds" in batch:
+            pre = batch["prefix_embeds"].astype(x.dtype)
+            pre = pre @ params["prefix_proj"]["w"].astype(x.dtype)
+            x = jnp.concatenate([pre, x], axis=1)
+        if c.pos_emb == "learned":
+            S = x.shape[1]
+            x = x + params["pos_embed"]["table"][:S].astype(x.dtype)
+        return x
+
+    def forward(self, params, batch):
+        """Full-sequence forward → (final hidden, aux_loss)."""
+        c = self.cfg
+        x = self._embed(params, batch)
+        x = constrain(x, ("batch", "seq", "embed"))
+        S = x.shape[1]
+        positions = jnp.arange(S)
+        is_global = self.is_global_arr()
+
+        def body(carry, layer):
+            xx, aux = carry
+            p_i, g_i = layer
+            xx = constrain(xx, ("batch", "seq", "embed"))
+            y, a, _ = self._layer(p_i, xx, positions=positions, is_global=g_i)
+            return (y, aux + a), None
+
+        body_fn = remat(body, c.remat)
+        (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.float32(0)),
+                                   (params["layers"], is_global))
+        x = self._norm(params["norm_f"], x)
+        return x, aux / c.n_layers
+
+    def is_global_arr(self):
+        return self.cfg.is_global_layers()
+
+    def loss(self, params, batch):
+        c = self.cfg
+        x, aux = self.forward(params, batch)
+        if c.n_prefix:
+            x = x[:, c.n_prefix:]
+        table = (params["embed"]["table"] if c.tie_embeddings
+                 else params["lm_head"]["w"].T)
+        ce = chunked_cross_entropy(x, table, batch["labels"],
+                                   chunk=c.loss_chunk)
+        return ce + c.aux_loss_weight * aux
+
+    def prefill_logits(self, params, batch):
+        """Inference prefill: full forward, last-position logits."""
+        c = self.cfg
+        x, _ = self.forward(params, batch)
+        table = (params["embed"]["table"] if c.tie_embeddings
+                 else params["lm_head"]["w"].T)
+        return (x[:, -1] @ table.T.astype(x.dtype)).astype(jnp.float32)
+
+    # ---- decode ------------------------------------------------------------
+    def decode_state_specs(self, batch: int, cache_len: int) -> dict:
+        c = self.cfg
+        if c.mla:
+            axes = ("layers", "batch", "cache_seq", "lora")
+            return {
+                "c_kv": ParamSpec((c.n_layers, batch, cache_len, c.kv_lora),
+                                  axes, init="zeros", dtype=c.param_dtype),
+                "k_rope": ParamSpec((c.n_layers, batch, cache_len, c.qk_rope),
+                                    axes, init="zeros", dtype=c.param_dtype),
+            }
+        return cache_spec(c.n_layers, batch, cache_len, c.kv_heads,
+                          c.head_dim, c.param_dtype)
+
+    def serve_step(self, params, state, tokens, index):
+        """One decode step. tokens (B, 1) int32; index: scalar position.
+
+        Returns (logits (B, V), new_state)."""
+        c = self.cfg
+        x = nnl.embedding_apply(params["embed"], tokens).astype(c.param_dtype)
+        if c.emb_scale:
+            x = x * jnp.sqrt(jnp.float32(c.d_model)).astype(x.dtype)
+        if c.pos_emb == "learned":
+            x = x + jnp.take(params["pos_embed"]["table"],
+                             jnp.atleast_1d(index), axis=0).astype(x.dtype)
+        positions = (jnp.array([0]) + index if jnp.ndim(index) == 0
+                     else index[:, None])
+        is_global = self.is_global_arr()
+
+        wt = not c.decode_write_outside
+
+        def body(xx, layer):
+            p_i, g_i, cache_i = layer
+            y, _, new_cache = self._layer(
+                p_i, xx, positions=positions, is_global=g_i,
+                cache=cache_i, cache_index=index, write_through=wt)
+            return y, new_cache
+
+        x, new_state = jax.lax.scan(body, x, (params["layers"], is_global, state))
+        if c.decode_write_outside:
+            # ONE stacked in-place token write per step (§Perf cell A):
+            # scan emitted (L, B, 1, …) token slices, not full caches.
+            new_state = {
+                key: _stacked_token_write(state[key], new_state[key], index)
+                for key in state
+            }
+            if c.constrain_cache:
+                from repro.distributed.sharding import constrain
+                ax = {"k": ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+                      "v": ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+                      "c_kv": ("layers", "batch", "cache_seq", "lora"),
+                      "k_rope": ("layers", "batch", "cache_seq", "lora")}
+                new_state = {key: constrain(val, ax[key])
+                             for key, val in new_state.items()}
+        x = self._norm(params["norm_f"], x)
+        table = (params["embed"]["table"] if c.tie_embeddings
+                 else params["lm_head"]["w"].T)
+        logits = (x[:, 0] @ table.T.astype(x.dtype)).astype(jnp.float32)
+        return logits, new_state

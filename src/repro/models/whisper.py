@@ -1,0 +1,224 @@
+"""Whisper-style encoder-decoder backbone (audio arch, conv frontend stubbed).
+
+Per the assignment, the modality frontend is a STUB: ``train_inputs``
+provides precomputed frame embeddings (B, n_frames, d) — the two conv
+layers + GELU of real Whisper live outside the measured backbone.
+Encoder: bidirectional self-attention. Decoder: causal self-attention +
+cross-attention to the encoder output. LayerNorm + biases + GELU MLP +
+learned positions, per the original architecture.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.nn import attention as attn
+from repro.nn import layers as nnl
+from repro.nn.spec import ParamSpec, stack_specs
+from .base import ArchConfig, chunked_cross_entropy, remat
+
+
+class Whisper:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.attn_cfg = attn.AttnConfig(
+            d_model=cfg.d_model, n_heads=cfg.n_heads, kv_heads=cfg.kv_heads,
+            head_dim=cfg.head_dim, bias=True, rot_dim=0,
+            block_q=cfg.block_q, block_kv=cfg.block_kv)
+
+    # ---- specs -------------------------------------------------------------
+    def _xattn_specs(self):
+        c = self.cfg
+        return attn.gqa_specs(c.d_model, c.n_heads, c.kv_heads, c.head_dim,
+                              bias=True)
+
+    def enc_layer_specs(self) -> dict:
+        c = self.cfg
+        return {
+            "norm_attn": nnl.layernorm_specs(c.d_model),
+            "attn": self._xattn_specs(),
+            "norm_mlp": nnl.layernorm_specs(c.d_model),
+            "ffn": nnl.mlp_specs(c.d_model, c.d_ff, bias=True),
+        }
+
+    def dec_layer_specs(self) -> dict:
+        s = self.enc_layer_specs()
+        s["norm_xattn"] = nnl.layernorm_specs(self.cfg.d_model)
+        s["xattn"] = self._xattn_specs()
+        return s
+
+    def specs(self) -> dict:
+        c = self.cfg
+        return {
+            "enc_pos": {"table": ParamSpec((c.n_frames, c.d_model),
+                                           (None, "embed"), init="small")},
+            "enc_layers": stack_specs(self.enc_layer_specs(), c.encoder_layers),
+            "enc_norm": nnl.layernorm_specs(c.d_model),
+            "embed": nnl.embedding_specs(c.vocab, c.d_model),
+            "dec_pos": {"table": ParamSpec((32768, c.d_model),
+                                           (None, "embed"), init="small")},
+            "dec_layers": stack_specs(self.dec_layer_specs(), c.n_layers),
+            "dec_norm": nnl.layernorm_specs(c.d_model),
+        }
+
+    def train_inputs(self, batch: int, seq: int):
+        c = self.cfg
+        inp = {
+            "frames": jax.ShapeDtypeStruct((batch, c.n_frames, c.d_model),
+                                           c.param_dtype),
+            "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        }
+        axes = {"frames": ("batch", "seq", "embed"),
+                "tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+        return inp, axes
+
+    # ---- attention helpers --------------------------------------------------
+    def _self_attn(self, p, x, positions, *, causal, cache=None, cache_index=None):
+        """GQA without rope; bidirectional when causal=False (encoder)."""
+        cfg = self.attn_cfg
+        B, S, _ = x.shape
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype)) + p["bq"].astype(x.dtype)
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype)) + p["bk"].astype(x.dtype)
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype)) + p["bv"].astype(x.dtype)
+        if cache is not None:
+            k = attn._cache_write(cache["k"], k, cache_index)
+            v = attn._cache_write(cache["v"], v, cache_index)
+            kv_pos = jnp.arange(k.shape[1])
+        else:
+            kv_pos = positions
+        q_pos = positions if causal else jnp.full_like(positions, 2**30)
+        if cache is None and x.shape[1] > 1024:
+            out = attn.mha_chunked(q, k, v, q_pos, kv_pos,
+                                   window=jnp.iinfo(jnp.int32).max,
+                                   is_global=True, block_q=self.attn_cfg.block_q,
+                                   block_kv=self.attn_cfg.block_kv)
+        else:
+            out = attn.mha_direct(q, k, v, q_pos, kv_pos,
+                                  window=jnp.iinfo(jnp.int32).max, is_global=True)
+        y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype)) + p["bo"].astype(x.dtype)
+        new_cache = {"k": k, "v": v} if cache is not None else None
+        return y, new_cache
+
+    def _cross_attn(self, p, x, enc, *, enc_kv=None):
+        """Cross-attention; enc_kv (decode) holds precomputed K/V."""
+        if enc_kv is None:
+            k = jnp.einsum("bsd,dhk->bshk", enc, p["wk"].astype(x.dtype)) + p["bk"].astype(x.dtype)
+            v = jnp.einsum("bsd,dhk->bshk", enc, p["wv"].astype(x.dtype)) + p["bv"].astype(x.dtype)
+        else:
+            k, v = enc_kv["xk"], enc_kv["xv"]
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype)) + p["bq"].astype(x.dtype)
+        S = x.shape[1]
+        q_pos = jnp.full((S,), 2**30)          # no causal constraint
+        kv_pos = jnp.arange(k.shape[1])
+        if S > 1024:
+            out = attn.mha_chunked(q, k, v, q_pos, kv_pos,
+                                   window=jnp.iinfo(jnp.int32).max,
+                                   is_global=True, block_q=self.attn_cfg.block_q,
+                                   block_kv=self.attn_cfg.block_kv)
+        else:
+            out = attn.mha_direct(q, k, v, q_pos, kv_pos,
+                                  window=jnp.iinfo(jnp.int32).max, is_global=True)
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype)) + p["bo"].astype(x.dtype)
+
+    # ---- forward ------------------------------------------------------------
+    def encode(self, params, frames):
+        c = self.cfg
+        x = frames.astype(c.param_dtype) + params["enc_pos"]["table"].astype(c.param_dtype)
+        positions = jnp.arange(x.shape[1])
+
+        def body(xx, p_i):
+            h = nnl.layernorm_apply(p_i["norm_attn"], xx)
+            a, _ = self._self_attn(p_i["attn"], h, positions, causal=False)
+            xx = xx + a
+            h = nnl.layernorm_apply(p_i["norm_mlp"], xx)
+            return xx + nnl.mlp_apply(p_i["ffn"], h, act="gelu"), None
+
+        x, _ = jax.lax.scan(remat(body, c.remat), x, params["enc_layers"])
+        return nnl.layernorm_apply(params["enc_norm"], x)
+
+    def decode_train(self, params, enc, tokens):
+        c = self.cfg
+        S = tokens.shape[1]
+        x = nnl.embedding_apply(params["embed"], tokens).astype(c.param_dtype)
+        x = x + params["dec_pos"]["table"][:S].astype(c.param_dtype)
+        positions = jnp.arange(S)
+
+        def body(xx, p_i):
+            h = nnl.layernorm_apply(p_i["norm_attn"], xx)
+            a, _ = self._self_attn(p_i["attn"], h, positions, causal=True)
+            xx = xx + a
+            h = nnl.layernorm_apply(p_i["norm_xattn"], xx)
+            xx = xx + self._cross_attn(p_i["xattn"], h, enc)
+            h = nnl.layernorm_apply(p_i["norm_mlp"], xx)
+            return xx + nnl.mlp_apply(p_i["ffn"], h, act="gelu"), None
+
+        x, _ = jax.lax.scan(remat(body, c.remat), x, params["dec_layers"])
+        return nnl.layernorm_apply(params["dec_norm"], x)
+
+    def loss(self, params, batch):
+        enc = self.encode(params, batch["frames"])
+        enc = constrain(enc, ("batch", "seq", "embed"))
+        x = self.decode_train(params, enc, batch["tokens"])
+        return chunked_cross_entropy(x, params["embed"]["table"],
+                                     batch["labels"], chunk=self.cfg.loss_chunk)
+
+    def prefill_logits(self, params, batch):
+        enc = self.encode(params, batch["frames"])
+        x = self.decode_train(params, enc, batch["tokens"])
+        return (x[:, -1] @ params["embed"]["table"].T.astype(x.dtype)).astype(jnp.float32)
+
+    # ---- decode -------------------------------------------------------------
+    def decode_state_specs(self, batch: int, cache_len: int) -> dict:
+        c = self.cfg
+        L, KV, hd = c.n_layers, c.kv_heads, c.head_dim
+        axes = ("layers", "batch", "cache_seq", "kv_heads", "head_dim")
+        xaxes = ("layers", "batch", "seq", "kv_heads", "head_dim")
+        return {
+            "k": ParamSpec((L, batch, cache_len, KV, hd), axes, init="zeros",
+                           dtype=c.param_dtype),
+            "v": ParamSpec((L, batch, cache_len, KV, hd), axes, init="zeros",
+                           dtype=c.param_dtype),
+            "xk": ParamSpec((L, batch, c.n_frames, KV, hd), xaxes, init="zeros",
+                            dtype=c.param_dtype),
+            "xv": ParamSpec((L, batch, c.n_frames, KV, hd), xaxes, init="zeros",
+                            dtype=c.param_dtype),
+        }
+
+    def prime_cross_cache(self, params, enc):
+        """Precompute per-layer cross K/V from the encoder output."""
+        def per_layer(p_i):
+            k = jnp.einsum("bsd,dhk->bshk", enc, p_i["xattn"]["wk"].astype(enc.dtype)) + p_i["xattn"]["bk"].astype(enc.dtype)
+            v = jnp.einsum("bsd,dhk->bshk", enc, p_i["xattn"]["wv"].astype(enc.dtype)) + p_i["xattn"]["bv"].astype(enc.dtype)
+            return k, v
+
+        ks, vs = jax.vmap(per_layer)(params["dec_layers"])
+        return ks, vs
+
+    def serve_step(self, params, state, tokens, index):
+        c = self.cfg
+        x = nnl.embedding_apply(params["embed"], tokens).astype(c.param_dtype)
+        x = x + jnp.take(params["dec_pos"]["table"],
+                         jnp.atleast_1d(index), axis=0).astype(x.dtype)
+        positions = (jnp.array([0]) + index if jnp.ndim(index) == 0
+                     else index[:, None])
+
+        def body(xx, layer):
+            p_i, st_i = layer
+            h = nnl.layernorm_apply(p_i["norm_attn"], xx)
+            a, new_cache = self._self_attn(
+                p_i["attn"], h, positions, causal=True,
+                cache={"k": st_i["k"], "v": st_i["v"]}, cache_index=index)
+            xx = xx + a
+            h = nnl.layernorm_apply(p_i["norm_xattn"], xx)
+            xx = xx + self._cross_attn(p_i["xattn"], h, None,
+                                       enc_kv={"xk": st_i["xk"], "xv": st_i["xv"]})
+            h = nnl.layernorm_apply(p_i["norm_mlp"], xx)
+            xx = xx + nnl.mlp_apply(p_i["ffn"], h, act="gelu")
+            return xx, {**new_cache, "xk": st_i["xk"], "xv": st_i["xv"]}
+
+        x, new_state = jax.lax.scan(body, x, (params["dec_layers"], state))
+        x = nnl.layernorm_apply(params["dec_norm"], x)
+        logits = (x[:, 0] @ params["embed"]["table"].T.astype(x.dtype)).astype(jnp.float32)
+        return logits, new_state

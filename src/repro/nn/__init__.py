@@ -1,0 +1,2 @@
+"""Minimal functional NN substrate: ParamSpec trees + layer apply functions."""
+from . import attention, layers, moe, spec, ssm  # noqa: F401

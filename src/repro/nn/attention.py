@@ -1,0 +1,418 @@
+"""Attention: GQA (chunked/flash softmax, sliding-window masks, KV cache)
+and DeepSeek-style MLA (latent KV compression with absorbed decode).
+
+Attention is MXU-bound, so it stays in XLA (DESIGN.md §5); the chunked
+softmax bounds live memory to O(block_q·block_kv) per step so that 32k+
+prefill compiles within HBM at 512 devices.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope
+from .spec import ParamSpec
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def gqa_specs(d: int, n_heads: int, kv_heads: int, head_dim: int,
+              *, bias: bool = False, qk_norm: bool = False) -> dict:
+    s = {
+        "wq": ParamSpec((d, n_heads, head_dim), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, kv_heads, head_dim), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, kv_heads, head_dim), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((n_heads, head_dim, d), ("heads", "head_dim", "embed")),
+    }
+    if bias:
+        s["bq"] = ParamSpec((n_heads, head_dim), ("heads", "head_dim"), init="zeros")
+        s["bk"] = ParamSpec((kv_heads, head_dim), ("kv_heads", "head_dim"), init="zeros")
+        s["bv"] = ParamSpec((kv_heads, head_dim), ("kv_heads", "head_dim"), init="zeros")
+        s["bo"] = ParamSpec((d,), ("embed",), init="zeros")
+    if qk_norm:
+        s["q_norm"] = ParamSpec((head_dim,), ("head_dim",), init="ones")
+        s["k_norm"] = ParamSpec((head_dim,), ("head_dim",), init="ones")
+    return s
+
+
+def _rms(x, scale, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, -1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _window_mask(q_pos, kv_pos, window, is_global):
+    """causal ∧ (global ∨ within sliding window). Traced per-layer scalars OK.
+
+    q_pos: (Sq,) or (B, Sq) — the batched form serves per-slot decode
+    indices (continuous batching). Returns (…, Sq, Skv)."""
+    causal = kv_pos <= q_pos[..., :, None]
+    dist = q_pos[..., :, None] - kv_pos
+    win = jnp.where(is_global, jnp.iinfo(jnp.int32).max, window)
+    return causal & (dist < win)
+
+
+def mha_chunked(q, k, v, q_pos, kv_pos, *, window, is_global,
+                block_q: int = 512, block_kv: int = 1024, scale=None):
+    """Masked online-softmax attention, O(block_q·block_kv) live logits.
+
+    q: (B, Sq, H, hd); k/v: (B, Skv, KV, hd); GQA via head grouping.
+    window/is_global may be traced scalars (scan-over-layers friendly).
+    """
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    dv = v.shape[-1]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    bq = min(block_q, Sq)
+    bkv = min(block_kv, Skv)
+    nq, nkv = -(-Sq // bq), -(-Skv // bkv)
+    # pad to whole blocks
+    qp = jnp.pad(q, ((0, 0), (0, nq * bq - Sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, nkv * bkv - Skv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, nkv * bkv - Skv), (0, 0), (0, 0)))
+    qpos = jnp.pad(q_pos, (0, nq * bq - Sq), constant_values=-1)
+    kpos = jnp.pad(kv_pos, (0, nkv * bkv - Skv), constant_values=jnp.iinfo(jnp.int32).max)
+
+    qb = qp.reshape(B, nq, bq, KV, G, hd)
+    kb = kp.reshape(B, nkv, bkv, KV, hd)
+    vb = vp.reshape(B, nkv, bkv, KV, dv)
+    qposb = qpos.reshape(nq, bq)
+    kposb = kpos.reshape(nkv, bkv)
+
+    def q_block(carry, qi):
+        q_i, qpos_i = qi  # (B, bq, KV, G, hd), (bq,)
+
+        @jax.checkpoint
+        def kv_block(state, kj):
+            m, l, acc = state
+            k_j, v_j, kpos_j = kj
+            logits = jnp.einsum("bqkgh,btkh->bkgqt", q_i, k_j,
+                                preferred_element_type=jnp.float32) * scale
+            mask = _window_mask(qpos_i, kpos_j, window, is_global)
+            logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m, logits.max(-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,btkh->bkgqh", p.astype(v_j.dtype), v_j,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, bq), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, bq, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, (m0, l0, a0),
+            (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), kposb),
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return carry, out  # (B, KV, G, bq, hd)
+
+    _, outs = jax.lax.scan(
+        q_block, None, (jnp.moveaxis(qb, 1, 0), qposb)
+    )  # (nq, B, KV, G, bq, hd)
+    out = jnp.moveaxis(outs, 0, 1)                      # (B, nq, KV, G, bq, hd)
+    out = jnp.moveaxis(out, -2, 2)                      # (B, nq, bq, KV, G, hd)
+    out = out.reshape(B, nq * bq, H, dv)[:, :Sq]
+    return out.astype(q.dtype)
+
+
+def mha_direct(q, k, v, q_pos, kv_pos, *, window, is_global, scale=None):
+    """Un-chunked attention (decode steps, short sequences)."""
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    dv = v.shape[-1]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, Sq, KV, G, hd)
+    # keep K/V in their storage dtype end-to-end: QK and PV accumulate in
+    # f32 on the MXU (preferred_element_type) without materializing an
+    # f32 copy of the cache — the §Perf "dtype discipline" fix.
+    logits = jnp.einsum("bqkgh,btkh->bkgqt", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    mask = _window_mask(q_pos, kv_pos, window, is_global)
+    mask = mask[None, None, None] if mask.ndim == 2 else mask[:, None, None]
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqt,btkh->bkgqh", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    out = jnp.moveaxis(out, -2, 1).reshape(B, Sq, H, dv)
+    return out.astype(q.dtype)
+
+
+def _cache_write(cache, new, index):
+    """Write (B, 1, …) ``new`` at ``index`` (scalar, or (B,) per-slot)."""
+    new = new.astype(cache.dtype)
+    if jnp.ndim(index) == 0:
+        return jax.lax.dynamic_update_slice(
+            cache, new, (0,) + (index,) + (0,) * (cache.ndim - 2))
+    def per_row(c, n, i):
+        # inside vmap the batch dim is stripped: c is (S, …)
+        return jax.lax.dynamic_update_slice(c, n, (i,) + (0,) * (c.ndim - 1))
+    return jax.vmap(per_row)(cache, new, index)
+
+
+def _decode_attend_readonly(q, k_new, v_new, cache, q_pos, window,
+                            is_global, scale=None):
+    """One-token attention over [read-only cache | current token].
+
+    Cache positions strictly before q_pos are visible (the current token's
+    slot in the cache is stale); the current token contributes a separate
+    logit column. Numerically identical to write-then-attend."""
+    B, Sq, H, hd = q.shape
+    kc, vc = cache["k"], cache["v"]
+    KV = kc.shape[2]
+    dv = vc.shape[-1]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, Sq, KV, G, hd)
+    kv_pos = jnp.arange(kc.shape[1])
+    lc = jnp.einsum("bqkgh,btkh->bkgqt", qg, kc,
+                    preferred_element_type=jnp.float32) * scale
+    # strict causal: cache slot at q_pos is stale, exclude it
+    causal = kv_pos < q_pos[..., :, None]
+    dist = q_pos[..., :, None] - kv_pos
+    win = jnp.where(is_global, jnp.iinfo(jnp.int32).max, window)
+    mask = causal & (dist < win)
+    mask = mask[None, None, None] if mask.ndim == 2 else mask[:, None, None]
+    lc = jnp.where(mask, lc, NEG_INF)
+    ls = jnp.einsum("bqkgh,bqkh->bkgq", qg, k_new.reshape(B, Sq, KV, hd),
+                    preferred_element_type=jnp.float32)[..., None] * scale
+    logits = jnp.concatenate([lc, ls], axis=-1)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqt,btkh->bkgqh", p[..., :-1].astype(vc.dtype), vc,
+                     preferred_element_type=jnp.float32)
+    out = out + p[..., -1:].astype(jnp.float32) * v_new.reshape(
+        B, Sq, KV, dv)[:, :, :, None].transpose(0, 2, 3, 1, 4)
+    out = jnp.moveaxis(out, -2, 1).reshape(B, Sq, H, dv)
+    return out.astype(q.dtype)
+
+
+@dataclasses.dataclass
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    kv_heads: int
+    head_dim: int
+    rope_base: float = 10000.0
+    rot_dim: int | None = None          # partial rotary (stablelm/chatglm)
+    bias: bool = False
+    qk_norm: bool = False
+    window: int = 0                     # 0 = always global
+    scale: float | None = None
+    block_q: int = 512
+    block_kv: int = 1024
+    constrain_cache: bool = False       # re-pin decode cache sharding (§Perf)
+
+
+def gqa_apply(p, x, cfg: AttnConfig, *, positions, is_global=True,
+              rope_base=None, cache=None, cache_index=None,
+              write_through=True):
+    """GQA attention over x (B, S, d).
+
+    cache: optional dict {"k","v"} of (B, S_max, KV, hd) for decode; the
+    new k/v are written at ``cache_index`` and attention runs over the
+    whole cache (positions beyond the write point are masked by q_pos).
+    Returns (out, new_cache).
+    """
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    rot = cfg.rot_dim if cfg.rot_dim is not None else hd
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q, k, v = q + p["bq"].astype(x.dtype), k + p["bk"].astype(x.dtype), v + p["bv"].astype(x.dtype)
+    if "q_norm" in p:
+        q = _rms(q, p["q_norm"])
+        k = _rms(k, p["k_norm"])
+    from .layers import rope_table
+
+    base = rope_base if rope_base is not None else cfg.rope_base
+    cos, sin = rope_table(positions, rot, base)
+    q = apply_rope(q, cos, sin, rot)
+    k = apply_rope(k, cos, sin, rot)
+
+    window = cfg.window if cfg.window > 0 else jnp.iinfo(jnp.int32).max
+    if cache is None:
+        kv_pos = positions
+        if S > 1024:
+            out = mha_chunked(q, k, v, positions, kv_pos, window=window,
+                              is_global=is_global, block_q=cfg.block_q,
+                              block_kv=cfg.block_kv, scale=cfg.scale)
+        else:
+            out = mha_direct(q, k, v, positions, kv_pos, window=window,
+                             is_global=is_global, scale=cfg.scale)
+        new_cache = None
+    elif not write_through:
+        # §Perf "write-outside-scan" decode: the cache is read-only here;
+        # the new token's k/v are returned to the caller, which performs
+        # ONE stacked in-place write after the layer scan — the per-layer
+        # full-cache ys copy disappears (EXPERIMENTS.md §Perf cell A).
+        if cfg.constrain_cache:
+            from repro.distributed.sharding import constrain
+            axes = ("batch", None, "kv_heads", "head_dim")
+            k = constrain(k, axes)
+            v = constrain(v, axes)
+        out = _decode_attend_readonly(q, k, v, cache, positions, window,
+                                      is_global, cfg.scale)
+        new_cache = {"k": k.astype(cache["k"].dtype),
+                     "v": v.astype(cache["v"].dtype)}
+    else:
+        # decode: write k/v at cache_index (scalar lockstep or (B,) per-slot
+        # continuous-batching), attend over the full cache
+        kc = _cache_write(cache["k"], k, cache_index)
+        vc = _cache_write(cache["v"], v, cache_index)
+        if cfg.constrain_cache:
+            from repro.distributed.sharding import constrain
+            axes = ("batch", "cache_seq", "kv_heads", "head_dim")
+            kc = constrain(kc, axes)
+            vc = constrain(vc, axes)
+        kv_pos = jnp.arange(kc.shape[1])
+        out = mha_direct(q, kc, vc, positions, kv_pos, window=window,
+                         is_global=is_global, scale=cfg.scale)
+        new_cache = {"k": kc, "v": vc}
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    if "bo" in p:
+        y = y + p["bo"].astype(x.dtype)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): latent KV compression, decoupled RoPE, absorbed decode
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    q_lora: int = 1536
+    kv_lora: int = 512
+    qk_nope: int = 128
+    qk_rope: int = 64
+    v_head: int = 128
+    rope_base: float = 10000.0
+    block_q: int = 512
+    block_kv: int = 1024
+    constrain_cache: bool = False
+
+
+def mla_specs(cfg: MLAConfig) -> dict:
+    d, H = cfg.d_model, cfg.n_heads
+    return {
+        "wq_a": ParamSpec((d, cfg.q_lora), ("embed", "lora")),
+        "q_norm": ParamSpec((cfg.q_lora,), ("lora",), init="ones"),
+        "wq_b": ParamSpec((cfg.q_lora, H, cfg.qk_nope + cfg.qk_rope),
+                          ("lora", "heads", "head_dim")),
+        "wkv_a": ParamSpec((d, cfg.kv_lora + cfg.qk_rope), ("embed", "lora")),
+        "kv_norm": ParamSpec((cfg.kv_lora,), ("lora",), init="ones"),
+        "wk_b": ParamSpec((cfg.kv_lora, H, cfg.qk_nope), ("lora", "heads", "head_dim")),
+        "wv_b": ParamSpec((cfg.kv_lora, H, cfg.v_head), ("lora", "heads", "head_dim")),
+        "wo": ParamSpec((H, cfg.v_head, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def mla_apply(p, x, cfg: MLAConfig, *, positions, cache=None,
+              cache_index=None, write_through=True):
+    """MLA attention. Train/prefill: materialize per-head K/V (parallel path).
+    Decode: cache only the 512-d latent + 64-d rope key; score in latent
+    space with the absorbed-matmul trick (DESIGN.md §4)."""
+    from .layers import rope_table
+
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    scale = 1.0 / math.sqrt(cfg.qk_nope + cfg.qk_rope)
+
+    q_lat = x @ p["wq_a"].astype(x.dtype)
+    q_lat = _rms(q_lat, p["q_norm"])
+    q = jnp.einsum("bsl,lhk->bshk", q_lat, p["wq_b"].astype(x.dtype))
+    q_nope, q_rope = q[..., : cfg.qk_nope], q[..., cfg.qk_nope :]
+
+    kv_a = x @ p["wkv_a"].astype(x.dtype)
+    c_kv, k_rope = kv_a[..., : cfg.kv_lora], kv_a[..., cfg.kv_lora :]
+    c_kv = _rms(c_kv, p["kv_norm"])
+
+    cos, sin = rope_table(positions, cfg.qk_rope, cfg.rope_base)
+    q_rope = apply_rope(q_rope, cos, sin, cfg.qk_rope)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin, cfg.qk_rope)[:, :, 0]
+
+    if cache is None:
+        k_nope = jnp.einsum("bsl,lhk->bshk", c_kv, p["wk_b"].astype(x.dtype))
+        v = jnp.einsum("bsl,lhk->bshk", c_kv, p["wv_b"].astype(x.dtype))
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(
+            k_rope[:, :, None, :], (B, S, H, cfg.qk_rope))], axis=-1)
+        qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+        if S > 1024:
+            out = mha_chunked(qf, k, v, positions, positions,
+                              window=jnp.iinfo(jnp.int32).max, is_global=True,
+                              block_q=cfg.block_q, block_kv=cfg.block_kv,
+                              scale=scale)
+        else:
+            out = mha_direct(qf, k, v, positions, positions,
+                             window=jnp.iinfo(jnp.int32).max, is_global=True,
+                             scale=scale)
+        new_cache = None
+    elif not write_through:
+        # --- absorbed decode, read-only cache (write-outside-scan) ---
+        ckv_c, krope_c = cache["c_kv"], cache["k_rope"]
+        q_abs = jnp.einsum("bshk,lhk->bshl", q_nope, p["wk_b"].astype(x.dtype))
+        lc = (jnp.einsum("bshl,btl->bhst", q_abs, ckv_c,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bshk,btk->bhst", q_rope, krope_c,
+                           preferred_element_type=jnp.float32)) * scale
+        kv_pos = jnp.arange(ckv_c.shape[1])
+        mask = kv_pos < positions[..., :, None]        # strict: stale slot
+        mask = mask[None, None] if mask.ndim == 2 else mask[:, None]
+        lc = jnp.where(mask, lc, NEG_INF)
+        ls = (jnp.einsum("bshl,bsl->bhs", q_abs, c_kv,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bshk,bsk->bhs", q_rope, k_rope,
+                           preferred_element_type=jnp.float32))[..., None] * scale
+        logits = jnp.concatenate([lc, ls], axis=-1)     # (B,H,S,T+1)
+        pattn = jax.nn.softmax(logits, axis=-1)
+        lat_out = jnp.einsum("bhst,btl->bshl", pattn[..., :-1].astype(ckv_c.dtype),
+                             ckv_c, preferred_element_type=jnp.float32)
+        lat_out = lat_out + pattn[..., -1].swapaxes(1, 2)[..., None] * c_kv[:, :, None].astype(jnp.float32)
+        out = jnp.einsum("bshl,lhk->bshk", lat_out.astype(x.dtype),
+                         p["wv_b"].astype(x.dtype))
+        new_cache = {"c_kv": c_kv.astype(ckv_c.dtype),
+                     "k_rope": k_rope.astype(krope_c.dtype)}
+        y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+        return y, new_cache
+    else:
+        # --- absorbed decode ---
+        ckv_c = _cache_write(cache["c_kv"], c_kv, cache_index)
+        krope_c = _cache_write(cache["k_rope"], k_rope, cache_index)
+        if cfg.constrain_cache:
+            from repro.distributed.sharding import constrain
+            ckv_c = constrain(ckv_c, ("batch", "cache_seq", "lora"))
+            krope_c = constrain(krope_c, ("batch", "cache_seq", "lora"))
+        # absorb W_uk into q: q_abs (B,S,H,kv_lora)
+        q_abs = jnp.einsum("bshk,lhk->bshl", q_nope, p["wk_b"].astype(x.dtype))
+        logits = (jnp.einsum("bshl,btl->bhst", q_abs, ckv_c,
+                             preferred_element_type=jnp.float32)
+                  + jnp.einsum("bshk,btk->bhst", q_rope, krope_c,
+                               preferred_element_type=jnp.float32))
+        logits = logits * scale
+        kv_pos = jnp.arange(ckv_c.shape[1])
+        mask = kv_pos <= positions[..., :, None]
+        mask = mask[None, None] if mask.ndim == 2 else mask[:, None]
+        logits = jnp.where(mask, logits, NEG_INF)
+        pattn = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        lat_out = jnp.einsum("bhst,btl->bshl", pattn.astype(ckv_c.dtype),
+                             ckv_c, preferred_element_type=jnp.float32)
+        out = jnp.einsum("bshl,lhk->bshk", lat_out.astype(x.dtype),
+                         p["wv_b"].astype(x.dtype))
+        new_cache = {"c_kv": ckv_c, "k_rope": krope_c}
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, new_cache

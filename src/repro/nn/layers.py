@@ -1,0 +1,159 @@
+"""Core NN layers: norms, dense, embeddings, RoPE variants, MLPs.
+
+Functional style: ``<layer>_specs(...)`` returns a ParamSpec tree,
+``<layer>_apply(params, ...)`` consumes the materialized (or abstract)
+tree. Logical axis names on every ParamSpec drive sharding
+(:mod:`repro.distributed.sharding`).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .spec import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_specs(d: int, *, plus_one: bool = False) -> dict:
+    # gemma convention: scale parameterized around zero, applied as (1+scale)
+    return {"scale": ParamSpec((d,), ("embed",), init="zeros" if plus_one else "ones")}
+
+
+def rmsnorm_apply(p, x, *, eps: float = 1e-6, plus_one: bool = False):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    scale = p["scale"].astype(jnp.float32)
+    if plus_one:
+        scale = scale + 1.0
+    return (y * scale).astype(dt)
+
+
+def layernorm_specs(d: int) -> dict:
+    return {
+        "scale": ParamSpec((d,), ("embed",), init="ones"),
+        "bias": ParamSpec((d,), ("embed",), init="zeros"),
+    }
+
+
+def layernorm_apply(p, x, *, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Dense / embeddings
+# ---------------------------------------------------------------------------
+
+def dense_specs(d_in: int, d_out: int, *, axes=("embed", "ff"), bias: bool = False,
+                init: str = "normal") -> dict:
+    s = {"w": ParamSpec((d_in, d_out), axes, init=init)}
+    if bias:
+        s["b"] = ParamSpec((d_out,), (axes[1],), init="zeros")
+    return s
+
+
+def dense_apply(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def embedding_specs(vocab: int, d: int) -> dict:
+    return {"table": ParamSpec((vocab, d), ("vocab", "embed"), init="embed")}
+
+
+def embedding_apply(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def logits_apply(p, x):
+    """Tied-embedding readout: x @ tableᵀ → (…, vocab)."""
+    return x @ p["table"].T.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (standard / partial / dual-base)
+# ---------------------------------------------------------------------------
+
+def rope_table(positions: jax.Array, rot_dim: int, base: float) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables: positions (…,) → (…, rot_dim/2)."""
+    assert rot_dim % 2 == 0
+    inv = 1.0 / (base ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array, rot_dim: int) -> jax.Array:
+    """Rotate the first ``rot_dim`` features of ``x`` (…, S, H, hd).
+
+    Half-split (NeoX) convention; cos/sin are (…, S, rot_dim/2) and
+    broadcast over the head axis.
+    """
+    if rot_dim == 0:
+        return x
+    rot, rest = x[..., :rot_dim], x[..., rot_dim:]
+    half = rot_dim // 2
+    x1, x2 = rot[..., :half], rot[..., half:]
+    c = cos[..., None, :].astype(x.dtype)
+    s = sin[..., None, :].astype(x.dtype)
+    r1 = x1 * c - x2 * s
+    r2 = x2 * c + x1 * s
+    return jnp.concatenate([r1, r2, rest], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def gated_mlp_specs(d: int, ff: int) -> dict:
+    """SwiGLU/GeGLU style gated MLP (llama/chatglm/dbrx/gemma)."""
+    return {
+        "w_gate": ParamSpec((d, ff), ("embed", "ff")),
+        "w_up": ParamSpec((d, ff), ("embed", "ff")),
+        "w_down": ParamSpec((ff, d), ("ff", "embed")),
+    }
+
+
+def gated_mlp_apply(p, x, *, act: str = "silu"):
+    g = x @ p["w_gate"].astype(x.dtype)
+    u = x @ p["w_up"].astype(x.dtype)
+    if act == "silu":
+        g = jax.nn.silu(g)
+    elif act == "gelu":
+        g = jax.nn.gelu(g, approximate=True)
+    else:
+        raise ValueError(act)
+    return (g * u) @ p["w_down"].astype(x.dtype)
+
+
+def mlp_specs(d: int, ff: int, *, bias: bool = True) -> dict:
+    """Plain 2-layer MLP (starcoder2, whisper)."""
+    s = {
+        "w_in": ParamSpec((d, ff), ("embed", "ff")),
+        "w_out": ParamSpec((ff, d), ("ff", "embed")),
+    }
+    if bias:
+        s["b_in"] = ParamSpec((ff,), ("ff",), init="zeros")
+        s["b_out"] = ParamSpec((d,), ("embed",), init="zeros")
+    return s
+
+
+def mlp_apply(p, x, *, act: str = "gelu"):
+    h = x @ p["w_in"].astype(x.dtype)
+    if "b_in" in p:
+        h = h + p["b_in"].astype(x.dtype)
+    h = jax.nn.gelu(h, approximate=True) if act == "gelu" else jax.nn.silu(h)
+    y = h @ p["w_out"].astype(x.dtype)
+    if "b_out" in p:
+        y = y + p["b_out"].astype(x.dtype)
+    return y

@@ -1,0 +1,110 @@
+"""Parameter-spec system: one source of truth for shapes, init, and sharding.
+
+A model is described by a *spec tree* — a nested dict whose leaves are
+:class:`ParamSpec` (shape + dtype + initializer + **logical axis names**).
+From the one spec tree we derive:
+
+* ``init_params``     — materialized parameters (PRNG-keyed),
+* ``abstract_params`` — ``ShapeDtypeStruct`` stand-ins (dry-run: no alloc),
+* ``axes_tree``       — logical axes per leaf → ``PartitionSpec`` via
+  :mod:`repro.distributed.sharding` rules,
+* ``param_count``     — exact parameter counts (MODEL_FLOPS, logging).
+
+Keeping these derived from a single tree is what makes the 512-device
+dry-run cheap: nothing is ever allocated, yet shardings stay consistent
+with what a real ``init`` would produce.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Shape/dtype/init/logical-axes of one parameter tensor."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]          # logical axis name per dim
+    init: str = "normal"                  # normal | zeros | ones | embed | small
+    scale: float | None = None            # stddev override for 'normal'
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _fan_in(shape: tuple[int, ...]) -> int:
+    return shape[0] if len(shape) >= 2 else max(shape[-1], 1)
+
+
+def _init_leaf(spec: ParamSpec, key: jax.Array) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    std = spec.scale
+    if std is None:
+        if spec.init == "embed":
+            std = 0.02  # conventional LM embedding init (tied readout scale)
+        elif spec.init == "small":
+            std = 0.02
+        else:  # fan-in scaled
+            std = 1.0 / math.sqrt(_fan_in(spec.shape))
+    return (std * jax.random.normal(key, spec.shape)).astype(spec.dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(spec_tree, key: jax.Array):
+    """Materialize a spec tree into parameter arrays (deterministic in key)."""
+    leaves, treedef = jax.tree_util.tree_flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def abstract_params(spec_tree):
+    """ShapeDtypeStruct tree — dry-run stand-in, no device allocation."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), spec_tree, is_leaf=is_spec
+    )
+
+
+def axes_tree(spec_tree):
+    """Logical-axes tree mirroring the params tree."""
+    return jax.tree.map(lambda s: s.axes, spec_tree, is_leaf=is_spec)
+
+
+def param_count(spec_tree) -> int:
+    leaves = jax.tree_util.tree_leaves(spec_tree, is_leaf=is_spec)
+    return int(sum(np.prod(s.shape) for s in leaves))
+
+
+def cast_tree(spec_tree, dtype):
+    """Spec tree with every floating leaf recast (e.g. bf16 training)."""
+    def cast(s: ParamSpec) -> ParamSpec:
+        if jnp.issubdtype(s.dtype, jnp.floating):
+            return dataclasses.replace(s, dtype=dtype)
+        return s
+    return jax.tree.map(cast, spec_tree, is_leaf=is_spec)
+
+
+def stack_specs(spec_tree, n: int, axis_name: str = "layers"):
+    """Stack a per-layer spec tree n× along a new leading 'layers' axis.
+
+    Used by the scan-over-layers models: params for all L layers live in
+    one (L, ...) tensor per leaf, which keeps the HLO O(1) in depth.
+    """
+    def stack(s: ParamSpec) -> ParamSpec:
+        return dataclasses.replace(
+            s, shape=(n,) + s.shape, axes=(axis_name,) + s.axes
+        )
+    return jax.tree.map(stack, spec_tree, is_leaf=is_spec)

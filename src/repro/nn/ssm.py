@@ -1,0 +1,318 @@
+"""State-space / linear-attention blocks: Mamba (Hymba branch) and RWKV6.
+
+Both are driven by the SSAM linear-recurrence plan (DESIGN.md §3): the
+elementwise recurrence ``h_t = a_t·h_{t−1} + b_t`` *is* the paper's Eq. 1
+with the Kogge–Stone dependency graph. Execution paths:
+
+* smoke/small  → :func:`repro.kernels.ops.linear_recurrence` (the SSAM
+  Pallas kernel, interpret-validated) — paper-faithful.
+* production   → chunked matmul forms below (MXU-friendly, O(L²) intra-
+  chunk attention-like matmuls + state passing across chunks), the
+  beyond-paper optimized path recorded in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .spec import ParamSpec
+from .layers import rmsnorm_apply
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM) — used by Hymba's parallel mamba heads
+# ---------------------------------------------------------------------------
+
+def mamba_specs(d: int, *, d_inner: int, ssm_state: int, conv_k: int = 4,
+                dt_rank: int | None = None) -> dict:
+    dt_rank = dt_rank or max(d // 16, 1)
+    return {
+        "in_proj": ParamSpec((d, 2 * d_inner), ("embed", "ff")),
+        "conv_w": ParamSpec((conv_k, d_inner), ("conv", "ff")),
+        "conv_b": ParamSpec((d_inner,), ("ff",), init="zeros"),
+        "x_proj": ParamSpec((d_inner, dt_rank + 2 * ssm_state), ("ff", "lora")),
+        "dt_w": ParamSpec((dt_rank, d_inner), ("lora", "ff")),
+        "dt_b": ParamSpec((d_inner,), ("ff",), init="small"),
+        "A_log": ParamSpec((d_inner, ssm_state), ("ff", "state"), init="small"),
+        "D": ParamSpec((d_inner,), ("ff",), init="ones"),
+        "out_proj": ParamSpec((d_inner, d), ("ff", "embed")),
+    }
+
+
+def selective_scan(delta, A_log, Bmat, Cmat, x, *, chunk: int = 128,
+                   work_dtype=jnp.float32):
+    """Chunked selective scan.
+
+    delta, x: (B, T, Di); Bmat, Cmat: (B, T, N); A_log: (Di, N).
+    h[t] = exp(Δ_t·A)⊙h[t−1] + (Δ_t·x_t)·B_t ;  y[t] = C_t·h[t] + D-term (caller).
+    Only one chunk of the (B, L, Di, N) tensor is ever live.
+    """
+    Bsz, T, Di = x.shape
+    N = A_log.shape[1]
+    L = min(chunk, T)
+    pad = (-T) % L
+    if pad:
+        delta = jnp.pad(delta, ((0, 0), (0, pad), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    nc = (T + pad) // L
+    A = -jnp.exp(A_log.astype(jnp.float32))                       # (Di, N)
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape(Bsz, nc, L, *t.shape[2:]), 1, 0)
+
+    dc, Bc, Cc, xc = map(to_chunks, (delta, Bmat, Cmat, x))
+
+    def chunk_step(h, args):
+        d_k, B_k, C_k, x_k = args                                  # (B, L, …)
+        # §Perf lever: the (B,L,Di,N) transfer pairs and scan levels may
+        # run in bf16 (work_dtype) while the carried state stays f32.
+        a = jnp.exp(d_k.astype(jnp.float32)[..., None] * A).astype(work_dtype)
+        b = ((d_k * x_k).astype(jnp.float32)[..., None]
+             * B_k.astype(jnp.float32)[:, :, None, :]).astype(work_dtype)
+        Ap, Bp = jax.lax.associative_scan(
+            lambda l, r: (l[0] * r[0], l[1] * r[0] + r[1]), (a, b), axis=1)
+        hs = Ap.astype(jnp.float32) * h[:, None] + Bp.astype(jnp.float32)
+        y = jnp.einsum("blin,bln->bli", hs.astype(work_dtype),
+                       C_k.astype(work_dtype),
+                       preferred_element_type=jnp.float32)
+        return hs[:, -1], y
+
+    h0 = jnp.zeros((Bsz, Di, N), jnp.float32)
+    h_last, ys = jax.lax.scan(chunk_step, h0, (dc, Bc, Cc, xc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, T + pad, Di)[:, :T]
+    return y.astype(x.dtype), h_last
+
+
+def mamba_apply(p, x, *, ssm_state: int, conv_k: int = 4, chunk: int = 128,
+                state=None, work_dtype=jnp.float32):
+    """Mamba block. Train/prefill: state=None. Decode: state dict with
+    {"h": (B, Di, N), "conv": (B, K−1, Di)} — O(1) per-token step."""
+    from repro.kernels import ops as kops
+
+    B, T, _ = x.shape
+    Di = p["in_proj"].shape[1] // 2
+    dt_rank = p["dt_w"].shape[0]
+    xz = x @ p["in_proj"].astype(x.dtype)
+    xs, z = xz[..., :Di], xz[..., Di:]
+
+    if state is None:
+        xs = kops.conv1d_causal(xs, p["conv_w"], impl="xla") + p["conv_b"].astype(x.dtype)
+        xs = jax.nn.silu(xs)
+        dbc = xs @ p["x_proj"].astype(x.dtype)
+        dt = jax.nn.softplus(dbc[..., :dt_rank] @ p["dt_w"].astype(x.dtype)
+                             + p["dt_b"].astype(x.dtype))
+        Bmat = dbc[..., dt_rank : dt_rank + ssm_state]
+        Cmat = dbc[..., dt_rank + ssm_state :]
+        y, h_last = selective_scan(dt, p["A_log"], Bmat, Cmat, xs, chunk=chunk,
+                                   work_dtype=work_dtype)
+        y = y + xs * p["D"].astype(x.dtype)
+        new_state = {"h": h_last, "conv": xs[:, -(conv_k - 1):, :] if T >= conv_k - 1 else None}
+    else:
+        # single-token recurrent step (T == 1)
+        conv_tail = state["conv"]                                  # (B, K−1, Di)
+        window = jnp.concatenate([conv_tail, xs], axis=1)          # (B, K, Di)
+        xs1 = jnp.einsum("bkd,kd->bd", window, p["conv_w"].astype(x.dtype))
+        xs1 = jax.nn.silu(xs1 + p["conv_b"].astype(x.dtype))[:, None, :]
+        dbc = xs1 @ p["x_proj"].astype(x.dtype)
+        dt = jax.nn.softplus(dbc[..., :dt_rank] @ p["dt_w"].astype(x.dtype)
+                             + p["dt_b"].astype(x.dtype))          # (B,1,Di)
+        Bmat = dbc[..., dt_rank : dt_rank + ssm_state]
+        Cmat = dbc[..., dt_rank + ssm_state :]
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))
+        a = jnp.exp(dt.astype(jnp.float32)[..., None] * A)[:, 0]   # (B,Di,N)
+        b = (dt * xs1).astype(jnp.float32)[..., None][:, 0] * Bmat.astype(jnp.float32)[:, 0, None, :]
+        h = a * state["h"] + b
+        y = jnp.einsum("bin,bn->bi", h, Cmat.astype(jnp.float32)[:, 0])[:, None, :]
+        y = y.astype(x.dtype) + xs1 * p["D"].astype(x.dtype)
+        new_state = {"h": h, "conv": window[:, 1:, :]}
+    out = (y * jax.nn.silu(z)) @ p["out_proj"].astype(x.dtype)
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 ("Finch"): data-dependent token shift + WKV recurrence
+# ---------------------------------------------------------------------------
+
+def rwkv6_timemix_specs(d: int, *, n_heads: int, head_k: int, head_v: int,
+                        shift_lora: int = 32, decay_lora: int = 64) -> dict:
+    return {
+        "mu_x": ParamSpec((d,), ("embed",), init="small"),
+        "mu": ParamSpec((5, d), (None, "embed"), init="small"),
+        "shift_w1": ParamSpec((d, 5 * shift_lora), ("embed", "lora"), init="small"),
+        "shift_w2": ParamSpec((5, shift_lora, d), (None, "lora", "embed"), init="small"),
+        "w0": ParamSpec((n_heads, head_k), ("heads", "head_dim"), init="small"),
+        "decay_w1": ParamSpec((d, decay_lora), ("embed", "lora"), init="small"),
+        "decay_w2": ParamSpec((decay_lora, n_heads, head_k), ("lora", "heads", "head_dim"), init="small"),
+        "u": ParamSpec((n_heads, head_k), ("heads", "head_dim"), init="small"),
+        "wr": ParamSpec((d, n_heads, head_k), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, n_heads, head_k), ("embed", "heads", "head_dim")),
+        "wv": ParamSpec((d, n_heads, head_v), ("embed", "heads", "head_dim")),
+        "wg": ParamSpec((d, n_heads, head_v), ("embed", "heads", "head_dim")),
+        "ln_x": ParamSpec((n_heads, head_v), ("heads", "head_dim"), init="ones"),
+        "wo": ParamSpec((n_heads, head_v, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def wkv6_chunked(r, k, v, logw, u, *, chunk: int = 64,
+                 work_dtype=jnp.float32):
+    """Chunked WKV6: y_t = r_t·S_{t−1} + (r_t⊙u⊙k_t)·v_t,
+    S_t = diag(exp(logw_t))·S_{t−1} + k_tᵀv_t.
+
+    r, k, logw: (B, T, H, K); v: (B, T, H, V); u: (H, K). logw ≤ 0.
+    Intra-chunk terms use the factorized r̃/k̃ matmul form (log-domain
+    cumulative decays) — the GLA-style chunk algebra, same associative
+    operator as the SSAM linear-recurrence plan.
+    Returns (y, S_last) with S_last (B, H, K, V).
+    """
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    L = min(chunk, T)
+    pad = (-T) % L
+    if pad:
+        z = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (T + pad) // L
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape(B, nc, L, H, -1), 1, 0)
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, logw))
+    mask_strict = jnp.tril(jnp.ones((L, L), jnp.float32), -1)
+
+    def chunk_step(S, args):
+        r_k, k_k, v_k, w_k = args
+        # cumulative decays stay f32; the big intra-chunk operands may run
+        # in bf16 (work_dtype, §Perf lever) with f32 MXU accumulation.
+        k_f = k_k.astype(jnp.float32)
+        w_k = w_k.astype(jnp.float32)
+        cum_incl = jnp.cumsum(w_k, axis=1)             # Σ_{i≤t} logw
+        cum_excl = cum_incl - w_k
+        r_t = (r_k.astype(jnp.float32) * jnp.exp(cum_excl)).astype(work_dtype)
+        k_t = (k_f * jnp.exp(-cum_incl)).astype(work_dtype)
+        v_w = v_k.astype(work_dtype)
+        A = jnp.einsum("blhk,bmhk->bhlm", r_t, k_t,
+                       preferred_element_type=jnp.float32)
+        A = (A * mask_strict[None, None]).astype(work_dtype)
+        diag = jnp.einsum("blhk,hk,blhk->blh", r_k.astype(jnp.float32),
+                          u.astype(jnp.float32), k_f)
+        y_intra = jnp.einsum("bhlm,bmhv->blhv", A, v_w,
+                             preferred_element_type=jnp.float32) \
+            + diag[..., None] * v_k.astype(jnp.float32)
+        y_inter = jnp.einsum("blhk,bhkv->blhv", r_t, S.astype(work_dtype),
+                             preferred_element_type=jnp.float32)
+        d_all = jnp.exp(cum_incl[:, -1])               # (B,H,K)
+        k_tail = (k_f * jnp.exp(cum_incl[:, -1][:, None] - cum_incl)).astype(work_dtype)
+        S_new = d_all[..., None] * S + jnp.einsum(
+            "blhk,blhv->bhkv", k_tail, v_w, preferred_element_type=jnp.float32)
+        return S_new, y_inter + y_intra
+
+    S0 = jnp.zeros((B, H, K, V), jnp.float32)
+    S_last, ys = jax.lax.scan(chunk_step, S0, (rc, kc, vc, wc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T + pad, H, V)[:, :T]
+    return y.astype(r.dtype), S_last
+
+
+def wkv6_sequential(r, k, v, logw, u):
+    """Sequential oracle for wkv6 (lax.scan over time) — test reference."""
+    B, T, H, K = r.shape
+
+    def step(S, args):
+        r_t, k_t, v_t, w_t = args
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, S) + (
+            (r_t * u[None] * k_t).sum(-1)[..., None] * v_t)
+        S = jnp.exp(w_t)[..., None] * S + k_t[..., None] * v_t[..., None, :]
+        return S, y
+
+    S0 = jnp.zeros((B, H, K, v.shape[-1]), jnp.float32)
+    tfirst = lambda t: jnp.moveaxis(t.astype(jnp.float32), 1, 0)
+    S_last, ys = jax.lax.scan(step, S0, (tfirst(r), tfirst(k), tfirst(v), tfirst(logw)))
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), S_last
+
+
+def _token_shift(x, shifted=None):
+    """Previous-token stream: the width-2 SSAM conv1d special case."""
+    if shifted is not None:
+        return shifted
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def rwkv6_timemix_apply(p, x, *, n_heads: int, head_k: int, head_v: int,
+                        chunk: int = 64, state=None,
+                        work_dtype=jnp.float32):
+    """RWKV6 time-mix. state (decode): {"S": (B,H,K,V), "prev": (B,1,d)}."""
+    B, T, d = x.shape
+    H, K, V = n_heads, head_k, head_v
+    prev = _token_shift(x) if state is None else jnp.concatenate(
+        [state["prev"], x[:, :-1]], axis=1)
+    dx = prev - x
+    # data-dependent token shift (ddlerp, the "Finch" contribution).
+    # (§Perf note: a per-stream restructure of this block measured +54%
+    # memory — the batched (B,T,5,d) einsum is the better schedule; kept.)
+    xxx = x + dx * p["mu_x"].astype(x.dtype)
+    lora = jnp.tanh(xxx @ p["shift_w1"].astype(x.dtype))
+    lora = lora.reshape(B, T, 5, -1)
+    mix = jnp.einsum("btfl,fld->btfd", lora, p["shift_w2"].astype(x.dtype))
+    mix = mix + p["mu"].astype(x.dtype)[None, None]
+    xw, xk, xv, xr, xg = [x + dx * mix[:, :, i] for i in range(5)]
+
+    # (§Perf note: batching these four projections into one stacked einsum
+    # measured +6% memory — reverted; see EXPERIMENTS.md §Perf cell C.)
+    r = jnp.einsum("btd,dhk->bthk", xr, p["wr"].astype(x.dtype))
+    kk = jnp.einsum("btd,dhk->bthk", xk, p["wk"].astype(x.dtype))
+    vv = jnp.einsum("btd,dhk->bthk", xv, p["wv"].astype(x.dtype))
+    g = jnp.einsum("btd,dhk->bthk", xg, p["wg"].astype(x.dtype))
+    dec = jnp.einsum("btd,dl->btl", xw, p["decay_w1"].astype(x.dtype))
+    w = p["w0"].astype(jnp.float32) + jnp.einsum(
+        "btl,lhk->bthk", jnp.tanh(dec).astype(jnp.float32),
+        p["decay_w2"].astype(jnp.float32))
+    logw = -jnp.exp(w)                                  # log decay ≤ 0
+
+    if state is None:
+        y, S_last = wkv6_chunked(r, kk, vv, logw.astype(r.dtype), p["u"],
+                                 chunk=chunk, work_dtype=work_dtype)
+        new_state = {"S": S_last, "prev": x[:, -1:]}
+    else:
+        S = state["S"]
+        r1 = r[:, 0].astype(jnp.float32)
+        k1 = kk[:, 0].astype(jnp.float32)
+        v1 = vv[:, 0].astype(jnp.float32)
+        y = jnp.einsum("bhk,bhkv->bhv", r1, S) + (
+            (r1 * p["u"][None].astype(jnp.float32) * k1).sum(-1)[..., None] * v1)
+        S = jnp.exp(logw[:, 0])[..., None] * S + k1[..., None] * v1[..., None, :]
+        y = y[:, None].astype(x.dtype)
+        new_state = {"S": S, "prev": x[:, -1:]}
+
+    # per-head groupnorm, gate, project out
+    y32 = y.astype(jnp.float32)
+    mu = y32.mean(-1, keepdims=True)
+    var = y32.var(-1, keepdims=True)
+    y = ((y32 - mu) * jax.lax.rsqrt(var + 64e-5) * p["ln_x"].astype(jnp.float32))
+    y = y.astype(x.dtype) * jax.nn.silu(g)
+    out = jnp.einsum("bthv,hvd->btd", y, p["wo"].astype(x.dtype))
+    return out, new_state
+
+
+def rwkv6_channelmix_specs(d: int, ff: int) -> dict:
+    return {
+        "mu_k": ParamSpec((d,), ("embed",), init="small"),
+        "mu_r": ParamSpec((d,), ("embed",), init="small"),
+        "wk": ParamSpec((d, ff), ("embed", "ff")),
+        "wv": ParamSpec((ff, d), ("ff", "embed")),
+        "wr": ParamSpec((d, d), ("embed", None)),
+    }
+
+
+def rwkv6_channelmix_apply(p, x, *, state=None):
+    prev = _token_shift(x) if state is None else jnp.concatenate(
+        [state["prev"], x[:, :-1]], axis=1)
+    dx = prev - x
+    xk = x + dx * p["mu_k"].astype(x.dtype)
+    xr = x + dx * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ p["wk"].astype(x.dtype)))
+    out = jax.nn.sigmoid(xr @ p["wr"].astype(x.dtype)) * (k @ p["wv"].astype(x.dtype))
+    return out, {"prev": x[:, -1:]}

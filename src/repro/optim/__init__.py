@@ -1,0 +1,2 @@
+"""Optimizer substrate: sharded AdamW + schedules + gradient clipping."""
+from .adamw import adamw_state_specs, adamw_update, cosine_schedule, global_norm  # noqa: F401

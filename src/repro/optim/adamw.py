@@ -1,0 +1,71 @@
+"""AdamW with decoupled weight decay, global-norm clipping, cosine schedule.
+
+Optimizer state is described by ParamSpec trees mirroring the parameter
+tree (same logical axes ⇒ same sharding ⇒ fully sharded optimizer states,
+ZeRO-style along whatever axes the params are sharded on). Moments are
+kept in f32 regardless of the (possibly bf16) parameter dtype; the update
+is computed in f32 and cast back — the usual mixed-precision recipe.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.spec import ParamSpec, is_spec
+
+
+def adamw_state_specs(param_specs) -> dict:
+    """{'m','v'}: f32 zero trees with the parameters' logical axes; 'step'."""
+    def f32_zeros(s: ParamSpec) -> ParamSpec:
+        return dataclasses.replace(s, init="zeros", dtype=jnp.float32)
+
+    return {
+        "m": jax.tree.map(f32_zeros, param_specs, is_leaf=is_spec),
+        "v": jax.tree.map(f32_zeros, param_specs, is_leaf=is_spec),
+        "step": ParamSpec((), (), init="zeros", dtype=jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+
+
+def cosine_schedule(step, *, base_lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1):
+    step = step.astype(jnp.float32)
+    warm = base_lr * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def adamw_update(params, grads, state, *, lr, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.1,
+                 clip_norm: float = 1.0):
+    """One AdamW step. ``lr`` may be a traced scalar (schedule applied by caller)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32) * scale
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * jnp.square(g32)
+        mhat = m_new / (1 - b1 ** step.astype(jnp.float32))
+        vhat = v_new / (1 - b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, gnorm

@@ -1,0 +1,105 @@
+"""Checkpointing: roundtrip, atomicity, async, elastic mesh reshard."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpointing import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.checkpointing.checkpoint import latest_step
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.bfloat16),
+                  "d": jnp.int32(7)}}
+
+
+class TestBasics:
+    def test_roundtrip(self, tmp_path):
+        t = tree()
+        save_checkpoint(str(tmp_path), 3, t)
+        t2 = load_checkpoint(str(tmp_path), 3, jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t))
+        for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(t2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_atomicity_no_commit_ignored(self, tmp_path):
+        save_checkpoint(str(tmp_path), 1, tree())
+        save_checkpoint(str(tmp_path), 2, tree())
+        os.remove(tmp_path / "step_00000002" / "COMMIT")   # simulated crash
+        assert latest_step(str(tmp_path)) == 1
+
+    def test_manager_async_and_gc(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, tree())
+        mgr.wait()
+        steps = sorted(n for n in os.listdir(tmp_path) if n.startswith("step_"))
+        assert steps == ["step_00000003", "step_00000004"]
+
+    def test_restore_latest(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        t = tree()
+        mgr.save(9, t)
+        mgr.wait()
+        step, t2 = mgr.restore_latest(jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t))
+        assert step == 9
+        np.testing.assert_array_equal(np.asarray(t["a"]), np.asarray(t2["a"]))
+
+    def test_shape_mismatch_rejected(self, tmp_path):
+        save_checkpoint(str(tmp_path), 1, tree())
+        bad = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree())
+        bad["a"] = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+        with pytest.raises(ValueError):
+            load_checkpoint(str(tmp_path), 1, bad)
+
+
+class TestElastic:
+    def test_reshard_8_to_4_devices(self, tmp_path):
+        """Save under an 8-device (4,2) mesh, restore under 4-device (2,2):
+        elastic scaling across device counts."""
+        d = str(tmp_path)
+        save_code = textwrap.dedent(f"""
+            import jax, jax.numpy as jnp
+            from repro.checkpointing import save_checkpoint
+            from repro.distributed.sharding import shardings_for_specs
+            from repro.nn.spec import ParamSpec, init_params
+            specs = {{"w": ParamSpec((16, 8), ("ff", "embed"))}}
+            mesh = jax.make_mesh((4, 2), ("data", "model"))
+            sh = shardings_for_specs(specs, mesh)
+            t = jax.device_put(init_params(specs, jax.random.PRNGKey(0)), sh)
+            save_checkpoint({d!r}, 5, t)
+            print("saved")
+        """)
+        restore_code = textwrap.dedent(f"""
+            import jax, jax.numpy as jnp, numpy as np
+            from repro.checkpointing import load_checkpoint
+            from repro.distributed.sharding import shardings_for_specs
+            from repro.nn.spec import ParamSpec, init_params, abstract_params
+            specs = {{"w": ParamSpec((16, 8), ("ff", "embed"))}}
+            mesh = jax.make_mesh((2, 2), ("data", "model"))
+            sh = shardings_for_specs(specs, mesh)
+            t = load_checkpoint({d!r}, 5, abstract_params(specs), shardings=sh)
+            ref = init_params(specs, jax.random.PRNGKey(0))
+            np.testing.assert_allclose(np.asarray(t["w"]), np.asarray(ref["w"]))
+            assert len(t["w"].sharding.device_set) == 4
+            print("restored")
+        """)
+        for code, n, expect in ((save_code, 8, "saved"),
+                                (restore_code, 4, "restored")):
+            env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu",
+                       XLA_FLAGS=f"--xla_force_host_platform_device_count={n}")
+            out = subprocess.run([sys.executable, "-c", code],
+                                 capture_output=True, text=True, env=env,
+                                 timeout=300)
+            assert out.returncode == 0, out.stderr[-3000:]
+            assert expect in out.stdout

@@ -1,0 +1,132 @@
+"""SSAM core model: plan algebra + executor vs mathematical oracles.
+
+Property tests (hypothesis) pin down the invariants of §4/§5 of the
+paper: register-cache geometry C = N + P − 1, valid lanes S − M + 1,
+halo-ratio algebra, and executor equivalence with direct math for
+arbitrary shapes/filters.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (conv2d_plan, execute_conv_block, execute_conv_global,
+                        execute_linear_recurrence, execute_scan,
+                        linear_recurrence_plan, scan_plan, stencil2d_plan)
+from repro.core.perfmodel import P100, TPU_V5E, V100, dif_smem_reg, l_reg, l_smem
+
+
+class TestPlanGeometry:
+    @given(M=st.integers(1, 12), N=st.integers(1, 12), P=st.integers(1, 8))
+    def test_register_cache_size_eq3(self, M, N, P):
+        plan = conv2d_plan(M, N, P=P)
+        assert plan.C == N + P - 1            # Eq. 3
+
+    @given(M=st.integers(1, 12), N=st.integers(1, 12))
+    def test_valid_lanes(self, M, N):
+        plan = conv2d_plan(M, N, S=32)
+        assert plan.valid_lanes == 32 - M + 1  # §4.4
+
+    @given(M=st.integers(1, 8), N=st.integers(1, 8), P=st.integers(1, 8))
+    def test_halo_ratio_bounds(self, M, N, P):
+        plan = conv2d_plan(M, N, P=P)
+        hr = plan.halo_ratio()
+        assert 0.0 <= hr < 1.0
+        if M == N == 1:
+            assert hr == 0.0
+
+    @given(M=st.integers(2, 8), N=st.integers(2, 8))
+    def test_shift_count_is_m_minus_1(self, M, N):
+        plan = conv2d_plan(M, N)
+        assert plan.shift_count() == M - 1     # (M−1)·T_shfl of Eq. 4
+        assert plan.mads_per_output_window() == M * N
+
+    def test_stencil_grouping_matches_listing2(self):
+        # 5-point stencil groups into {W}, {N,C,S}, {E} — 3 columns
+        offs = [(0, -1), (-1, 0), (0, 0), (1, 0), (0, 1)]
+        plan = stencil2d_plan(offs)
+        assert plan.M == 3
+        assert [len(s.taps) for s in plan.steps] == [1, 3, 1]
+
+
+class TestPerfModel:
+    @pytest.mark.parametrize("hw", [P100, V100, TPU_V5E])
+    @given(M=st.integers(2, 20), N=st.integers(2, 20))
+    @settings(max_examples=20)
+    def test_eq5_positive(self, hw, M, N):
+        # the paper's claim: Dif_smem_reg ≫ 0 for M, N ≥ 2
+        assert dif_smem_reg(hw, M, N) > 0
+        assert l_smem(hw, M, N) > l_reg(hw, M, N)
+
+    def test_advantage_grows_with_filter(self):
+        # Fig. 4's trend: the SSAM advantage grows with filter size
+        d = [dif_smem_reg(V100, m, m) for m in range(2, 21)]
+        assert all(b > a for a, b in zip(d, d[1:]))
+
+
+class TestExecutor:
+    @given(
+        M=st.integers(1, 5), N=st.integers(1, 5),
+        H=st.integers(6, 16), W=st.integers(8, 40),
+        seed=st.integers(0, 2**31),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_conv_global_matches_oracle(self, M, N, H, W, seed):
+        r = np.random.default_rng(seed)
+        x = r.standard_normal((max(H, N), max(W, M))).astype(np.float32)
+        w = r.standard_normal((N, M)).astype(np.float32)
+        plan = conv2d_plan(M, N, S=x.shape[1], P=1)
+        out = np.asarray(execute_conv_global(plan, jnp.array(x), jnp.array(w)))
+        oh, ow = x.shape[0] - N + 1, x.shape[1] - M + 1
+        ref = np.zeros((oh, ow), np.float32)
+        for y in range(oh):
+            for xx in range(ow):
+                ref[y, xx] = (x[y:y + N, xx:xx + M] * w).sum()
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+    def test_conv_block_valid_lanes(self, rng):
+        M, N, P, S = 4, 3, 2, 32
+        plan = conv2d_plan(M, N, S=S, P=P)
+        x = rng.standard_normal((plan.C, S)).astype(np.float32)
+        w = rng.standard_normal((N, M)).astype(np.float32)
+        out = np.asarray(execute_conv_block(plan, jnp.array(x), jnp.array(w)))
+        for i in range(P):
+            for lane in range(M - 1, S):
+                ref = (x[i:i + N, lane - M + 1:lane + 1] * w).sum()
+                np.testing.assert_allclose(out[i, lane], ref, rtol=1e-4)
+
+    @given(n=st.sampled_from([8, 32, 128]), seed=st.integers(0, 2**31))
+    @settings(max_examples=10, deadline=None)
+    def test_scan_is_cumsum(self, n, seed):
+        r = np.random.default_rng(seed)
+        x = r.standard_normal((3, n)).astype(np.float32)
+        out = np.asarray(execute_scan(scan_plan(n), jnp.array(x)))
+        np.testing.assert_allclose(out, np.cumsum(x, -1), rtol=1e-4, atol=1e-4)
+
+    @given(n=st.sampled_from([8, 64]), seed=st.integers(0, 2**31))
+    @settings(max_examples=10, deadline=None)
+    def test_linear_recurrence(self, n, seed):
+        r = np.random.default_rng(seed)
+        a = r.uniform(0.2, 1.0, (2, n)).astype(np.float32)
+        b = r.standard_normal((2, n)).astype(np.float32)
+        out = np.asarray(execute_linear_recurrence(
+            linear_recurrence_plan(n), jnp.array(a), jnp.array(b)))
+        h = np.zeros((2,), np.float32)
+        ref = np.zeros_like(b)
+        for t in range(n):
+            h = a[:, t] * h + b[:, t]
+            ref[:, t] = h
+        np.testing.assert_allclose(out, ref, rtol=1e-3, atol=1e-3)
+
+    def test_scan_associativity_property(self, rng):
+        """KS scan == sequential fold for a non-commutative affine op —
+        the associativity property the recurrence plan relies on."""
+        n = 64
+        a = rng.uniform(0.5, 1.5, (1, n)).astype(np.float32)
+        b = rng.standard_normal((1, n)).astype(np.float32)
+        ks = np.asarray(execute_linear_recurrence(
+            linear_recurrence_plan(n), jnp.array(a), jnp.array(b)))
+        h = 0.0
+        for t in range(n):
+            h = a[0, t] * h + b[0, t]
+        np.testing.assert_allclose(ks[0, -1], h, rtol=1e-4)

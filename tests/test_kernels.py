@@ -1,0 +1,240 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles.
+
+Shape/dtype sweeps per the assignment; hypothesis property tests for the
+algebraic invariants (linearity, shift-equivariance, associativity).
+Block sizes are deliberately small so the interpret-mode grid actually
+exercises multi-block + halo paths.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.stencils import BENCHMARKS
+
+
+def assert_close(a, b, tol=3e-5):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# conv2d
+# ---------------------------------------------------------------------------
+
+class TestConv2d:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("fshape", [(2, 2), (3, 3), (5, 2), (2, 5),
+                                        (7, 7), (11, 11)])
+    def test_filter_sweep(self, rng, fshape, dtype):
+        N, M = fshape
+        tol = 3e-5 if dtype == jnp.float32 else 3e-2
+        x = jnp.array(rng.standard_normal((33, 70)), dtype)
+        w = jnp.array(rng.standard_normal((N, M)), dtype)
+        out = ops.conv2d(x, w, mode="valid", impl="interpret",
+                         block_h=8, block_w=32)
+        assert_close(out, ref.conv2d_valid(x, w), tol)
+
+    @pytest.mark.parametrize("variant", ["shift_psum", "shift_data"])
+    def test_variants_match(self, rng, variant):
+        x = jnp.array(rng.standard_normal((20, 64)), jnp.float32)
+        w = jnp.array(rng.standard_normal((4, 6)), jnp.float32)
+        out = ops.conv2d(x, w, mode="same", impl="interpret",
+                         block_h=4, block_w=16, variant=variant)
+        assert_close(out, ref.conv2d_same(x, w))
+
+    @given(
+        H=st.integers(5, 24), W=st.integers(8, 48),
+        N=st.integers(1, 4), M=st.integers(1, 4), seed=st.integers(0, 2**31),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_arbitrary_shapes(self, H, W, N, M, seed):
+        r = np.random.default_rng(seed)
+        x = jnp.array(r.standard_normal((max(H, N), max(W, M))), jnp.float32)
+        w = jnp.array(r.standard_normal((N, M)), jnp.float32)
+        out = ops.conv2d(x, w, mode="valid", impl="interpret",
+                         block_h=4, block_w=16)
+        assert_close(out, ref.conv2d_valid(x, w))
+
+    def test_linearity_property(self, rng):
+        """conv(αx + βy) == α·conv(x) + β·conv(y)."""
+        x = jnp.array(rng.standard_normal((16, 40)), jnp.float32)
+        y = jnp.array(rng.standard_normal((16, 40)), jnp.float32)
+        w = jnp.array(rng.standard_normal((3, 3)), jnp.float32)
+        k = lambda v: ops.conv2d(v, w, mode="valid", impl="interpret",
+                                 block_h=4, block_w=16)
+        assert_close(k(2.0 * x + 0.5 * y), 2.0 * k(x) + 0.5 * k(y), 1e-4)
+
+    def test_delta_filter_is_identity(self, rng):
+        x = jnp.array(rng.standard_normal((12, 40)), jnp.float32)
+        w = jnp.zeros((3, 3), jnp.float32).at[1, 1].set(1.0)
+        out = ops.conv2d(x, w, mode="same", impl="interpret",
+                         block_h=4, block_w=16)
+        assert_close(out, x)
+
+
+# ---------------------------------------------------------------------------
+# stencils
+# ---------------------------------------------------------------------------
+
+class TestStencil2d:
+    @pytest.mark.parametrize("name", [n for n, d in BENCHMARKS.items()
+                                      if d.ndim == 2])
+    def test_all_2d_benchmarks(self, rng, name):
+        x = jnp.array(rng.standard_normal((26, 70)), jnp.float32)
+        out = ops.stencil(x, name, impl="interpret", block_h=8, block_w=32)
+        assert_close(out, ref.stencil_iterate(x, BENCHMARKS[name], 1))
+
+    @pytest.mark.parametrize("t", [2, 4])
+    @pytest.mark.parametrize("name", ["2d5pt", "2d9pt"])
+    def test_temporal_blocking(self, rng, name, t):
+        x = jnp.array(rng.standard_normal((24, 48)), jnp.float32)
+        out = ops.stencil(x, name, time_steps=t, impl="interpret",
+                          block_h=8, block_w=16)
+        assert_close(out, ref.stencil_iterate(x, BENCHMARKS[name], t), 1e-4)
+
+    def test_temporal_matches_dirichlet_interior(self, rng):
+        """Pad-once semantics == classic zero-boundary iteration on the
+        interior at distance > t·r from the edge (documented property)."""
+        sdef = BENCHMARKS["2d5pt"]
+        t = 3
+        x = jnp.array(rng.standard_normal((30, 40)), jnp.float32)
+        a = np.asarray(ref.stencil_iterate(x, sdef, t))
+        b = np.asarray(ref.stencil_iterate_dirichlet(x, sdef, t))
+        m = t * sdef.radius
+        np.testing.assert_allclose(a[m:-m, m:-m], b[m:-m, m:-m],
+                                   rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, rng, dtype):
+        tol = 1e-4 if dtype == jnp.float32 else 3e-2
+        x = jnp.array(rng.standard_normal((16, 40)), dtype)
+        out = ops.stencil(x, "2d9pt", impl="interpret", block_h=8, block_w=32)
+        assert_close(out, ref.stencil_iterate(x, BENCHMARKS["2d9pt"], 1), tol)
+
+
+class TestStencil3d:
+    @pytest.mark.parametrize("name", [n for n, d in BENCHMARKS.items()
+                                      if d.ndim == 3])
+    def test_all_3d_benchmarks(self, rng, name):
+        x = jnp.array(rng.standard_normal((10, 12, 40)), jnp.float32)
+        out = ops.stencil(x, name, impl="interpret", block_z=4, block_h=8,
+                          block_w=16)
+        assert_close(out, ref.stencil_iterate(x, BENCHMARKS[name], 1))
+
+    def test_3d_temporal(self, rng):
+        x = jnp.array(rng.standard_normal((8, 10, 24)), jnp.float32)
+        out = ops.stencil(x, "3d7pt", time_steps=2, impl="interpret",
+                          block_z=4, block_h=4, block_w=8)
+        assert_close(out, ref.stencil_iterate(x, BENCHMARKS["3d7pt"], 2), 1e-4)
+
+
+# ---------------------------------------------------------------------------
+# conv1d + scans
+# ---------------------------------------------------------------------------
+
+class TestConv1d:
+    @pytest.mark.parametrize("K", [1, 2, 4, 8])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_k_sweep(self, rng, K, dtype):
+        tol = 1e-4 if dtype == jnp.float32 else 3e-2
+        x = jnp.array(rng.standard_normal((2, 37, 24)), dtype)
+        w = jnp.array(rng.standard_normal((K, 24)), dtype)
+        out = ops.conv1d_causal(x, w, impl="interpret", block_t=16, block_d=8)
+        assert_close(out, ref.conv1d_causal(x, w), tol)
+
+    def test_token_shift_special_case(self, rng):
+        """RWKV token shift == conv1d with w = [1, 0] (K=2)."""
+        x = jnp.array(rng.standard_normal((1, 20, 8)), jnp.float32)
+        w = jnp.zeros((2, 8), jnp.float32).at[0].set(1.0)
+        out = ops.conv1d_causal(x, w, impl="interpret", block_t=8, block_d=8)
+        shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        assert_close(out, shifted)
+
+
+class TestScan:
+    @pytest.mark.parametrize("T", [32, 100, 256])
+    def test_cumsum(self, rng, T):
+        x = jnp.array(rng.standard_normal((5, T)), jnp.float32)
+        out = ops.cumsum(x, impl="interpret", block_r=4, block_t=32)
+        assert_close(out, ref.cumsum(x), 1e-4)
+
+    @pytest.mark.parametrize("T", [32, 100, 256])
+    def test_linear_recurrence(self, rng, T):
+        a = jnp.array(rng.uniform(0.5, 1.0, (5, T)), jnp.float32)
+        b = jnp.array(rng.standard_normal((5, T)), jnp.float32)
+        out = ops.linear_recurrence(a, b, impl="interpret",
+                                    block_r=4, block_t=32)
+        assert_close(out, ref.linear_recurrence(a, b), 1e-3)
+
+    @given(T=st.integers(4, 80), seed=st.integers(0, 2**31))
+    @settings(max_examples=15, deadline=None)
+    def test_chunked_recurrence_property(self, T, seed):
+        r = np.random.default_rng(seed)
+        a = jnp.array(r.uniform(0.3, 1.0, (3, T)), jnp.float32)
+        b = jnp.array(r.standard_normal((3, T)), jnp.float32)
+        out = ops.chunked_linear_recurrence(a, b, chunk=16)
+        assert_close(out, ref.linear_recurrence(a, b), 1e-3)
+
+    def test_sat(self, rng):
+        """Summed-area table == double cumsum oracle (paper §3.6 app)."""
+        x = jnp.array(rng.standard_normal((24, 40)), jnp.float32)
+        out = ops.sat(x, impl="interpret", block_r=8, block_t=32)
+        assert_close(out, ref.sat(x), 1e-4)
+
+    def test_sat_box_sum_property(self, rng):
+        """Any box sum from 4 SAT corner reads — the SAT use-case."""
+        x = jnp.array(rng.standard_normal((16, 16)), jnp.float32)
+        s = np.asarray(ref.sat(x))
+        y0, y1, x0, x1 = 3, 11, 2, 13
+        box = s[y1, x1] - s[y0 - 1, x1] - s[y1, x0 - 1] + s[y0 - 1, x0 - 1]
+        np.testing.assert_allclose(
+            box, np.asarray(x)[y0:y1 + 1, x0:x1 + 1].sum(), rtol=1e-4)
+
+    def test_cumsum_is_recurrence_with_a1(self, rng):
+        """cumsum == linear recurrence with a ≡ 1 (plan unification)."""
+        x = jnp.array(rng.standard_normal((3, 64)), jnp.float32)
+        out = ops.linear_recurrence(jnp.ones_like(x), x, impl="interpret",
+                                    block_r=4, block_t=32)
+        assert_close(out, ref.cumsum(x), 1e-4)
+
+
+# ---------------------------------------------------------------------------
+# SSAM model ↔ kernels: the executor and the Pallas kernel implement the
+# same schedule
+# ---------------------------------------------------------------------------
+
+class TestModelKernelAgreement:
+    def test_conv2d_kernel_matches_executor(self, rng):
+        from repro.core import conv2d_plan, execute_conv_global
+        x = jnp.array(rng.standard_normal((14, 60)), jnp.float32)
+        w = jnp.array(rng.standard_normal((3, 5)), jnp.float32)
+        plan = conv2d_plan(5, 3, S=60, P=1)
+        a = execute_conv_global(plan, x, w)
+        b = ops.conv2d(x, w, mode="valid", impl="interpret",
+                       block_h=4, block_w=16)
+        assert_close(a, b, 1e-4)
+
+    def test_wkv6_vs_ssam_linear_recurrence(self, rng):
+        """RWKV6's WKV (chunked matmul form) == the SSAM elementwise
+        linear-recurrence kernel on the flattened channel view."""
+        from repro.nn.ssm import wkv6_chunked
+        B, T, H, K, V = 1, 40, 2, 4, 4
+        r = jnp.array(rng.standard_normal((B, T, H, K)) * 0.5, jnp.float32)
+        k = jnp.array(rng.standard_normal((B, T, H, K)) * 0.5, jnp.float32)
+        v = jnp.array(rng.standard_normal((B, T, H, V)), jnp.float32)
+        logw = -jnp.exp(jnp.array(rng.standard_normal((B, T, H, K)) * 0.3,
+                                  jnp.float32))
+        u = jnp.zeros((H, K), jnp.float32)   # drop bonus for pure recurrence
+        y, S_last = wkv6_chunked(r, k, v, logw, u, chunk=16)
+        # State recurrence per (h, kk, vv) channel: S_t = e^{logw}·S + k·v
+        a = jnp.exp(logw)[..., None] * jnp.ones((1, 1, 1, 1, V))
+        b = k[..., None] * v[..., None, :]
+        aa = a.transpose(0, 2, 3, 4, 1).reshape(-1, T)
+        bb = b.transpose(0, 2, 3, 4, 1).reshape(-1, T)
+        S_t = ops.linear_recurrence(aa, bb, impl="interpret",
+                                    block_r=4, block_t=16)
+        S_ref = S_t[:, -1].reshape(B, H, K, V)
+        assert_close(S_last, S_ref, 1e-3)

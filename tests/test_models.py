@@ -1,0 +1,189 @@
+"""Per-architecture smoke tests (assignment requirement): reduced config,
+one forward/train step on CPU, output shapes + no NaNs — plus
+prefill↔decode consistency for every family's cache/state machinery.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ARCHS, get_config
+from repro.models import build_model
+from repro.nn.spec import abstract_params, init_params, param_count
+from repro.optim import adamw_state_specs, adamw_update
+
+
+def make_batch(cfg, B=2, S=24, seed=7):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    batch = {"tokens": jax.random.randint(k1, (B, S), 0, cfg.vocab),
+             "labels": jax.random.randint(k2, (B, S), 0, cfg.vocab)}
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(k3, (B, cfg.n_frames, cfg.d_model))
+    if cfg.family == "vlm":
+        batch["prefix_embeds"] = jax.random.normal(k3, (B, cfg.n_prefix, cfg.d_model))
+    return batch
+
+
+@pytest.fixture(scope="module")
+def smoke_models():
+    out = {}
+    for arch in ARCHS:
+        cfg = get_config(arch, smoke=True)
+        model = build_model(cfg)
+        params = init_params(model.specs(), jax.random.PRNGKey(0))
+        out[arch] = (cfg, model, params)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+class TestSmoke:
+    def test_forward_loss_finite(self, smoke_models, arch):
+        cfg, model, params = smoke_models[arch]
+        loss = jax.jit(model.loss)(params, make_batch(cfg))
+        assert loss.shape == ()
+        assert bool(jnp.isfinite(loss)), arch
+        # init loss ≈ ln(vocab) for a calibrated readout
+        assert abs(float(loss) - np.log(cfg.vocab)) < 1.5, float(loss)
+
+    def test_train_step_updates_and_finite(self, smoke_models, arch):
+        cfg, model, params = smoke_models[arch]
+        ospecs = adamw_state_specs(model.specs())
+        opt = init_params(ospecs, jax.random.PRNGKey(1))
+        batch = make_batch(cfg)
+
+        @jax.jit
+        def step(p, o, b):
+            loss, g = jax.value_and_grad(model.loss)(p, b)
+            p2, o2, gn = adamw_update(p, g, o, lr=1e-3)
+            return p2, o2, loss, gn
+
+        p2, o2, loss, gnorm = step(params, opt, batch)
+        assert bool(jnp.isfinite(loss)) and bool(jnp.isfinite(gnorm))
+        # params actually moved
+        moved = jax.tree.reduce(
+            lambda acc, ab: acc + float(jnp.abs(ab).max()),
+            jax.tree.map(lambda a, b: a - b, params, p2), 0.0)
+        assert moved > 0.0
+        finite = jax.tree.map(lambda x: bool(jnp.all(jnp.isfinite(x))), p2)
+        assert all(jax.tree.leaves(finite)), arch
+
+    def test_serve_step_shapes(self, smoke_models, arch):
+        cfg, model, params = smoke_models[arch]
+        B, CL = 2, 32
+        state = init_params(model.decode_state_specs(B, CL), jax.random.PRNGKey(2))
+        tokens = jnp.zeros((B, 1), jnp.int32)
+        logits, new_state = jax.jit(model.serve_step)(params, state, tokens,
+                                                      jnp.int32(0))
+        assert logits.shape == (B, cfg.vocab)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+        # state structure preserved
+        assert jax.tree_util.tree_structure(state) == \
+            jax.tree_util.tree_structure(new_state)
+
+
+@pytest.mark.parametrize("arch", ["stablelm_12b", "gemma3_1b", "hymba_1g5b",
+                                  "rwkv6_1g6b", "deepseek_v2_236b"])
+def test_prefill_decode_consistency(smoke_models, arch):
+    """Decoding token-by-token reproduces the full-sequence forward —
+    validates every cache/recurrent-state path end to end."""
+    cfg, model, params = smoke_models[arch]
+    if cfg.moe:
+        # capacity-dropping MoE routes differently at different batch
+        # shapes by design — test with drop-free capacity
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+        model = build_model(cfg)
+    B, S = 2, 16
+    batch = make_batch(cfg, B, S)
+    if cfg.family == "vlm":
+        pytest.skip("prefix handling covered in full-forward test")
+    x_full, _ = model.forward(params, batch)
+    table = (params["embed"]["table"] if cfg.tie_embeddings
+             else params["lm_head"]["w"].T)
+    logits_full = x_full[:, -1] @ table.T
+
+    state = init_params(model.decode_state_specs(B, S + 4), jax.random.PRNGKey(3))
+    step = jax.jit(model.serve_step)
+    for t in range(S):
+        logits, state = step(params, state, batch["tokens"][:, t:t + 1],
+                             jnp.int32(t))
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(logits_full),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_vector_index_decode_matches_scalar(smoke_models):
+    """Per-slot (continuous batching) indices == scalar lockstep when equal."""
+    cfg, model, params = smoke_models["gemma3_1b"]
+    B = 2
+    state = init_params(model.decode_state_specs(B, 16), jax.random.PRNGKey(0))
+    tok = jnp.array([[3], [5]], jnp.int32)
+    l1, s1 = jax.jit(model.serve_step)(params, state, tok, jnp.int32(4))
+    l2, s2 = jax.jit(model.serve_step)(params, state, tok,
+                                       jnp.array([4, 4], jnp.int32))
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_exact_param_counts():
+    """The full configs reproduce the published parameter counts."""
+    expect = {
+        "rwkv6_1g6b": (1.4, 1.7), "stablelm_12b": (11.5, 12.5),
+        "chatglm3_6b": (5.9, 6.5), "gemma3_1b": (0.9, 1.1),
+        "starcoder2_3b": (2.8, 3.3), "dbrx_132b": (125, 136),
+        "deepseek_v2_236b": (230, 243), "hymba_1g5b": (1.4, 1.75),
+        "internvl2_1b": (0.4, 0.55), "whisper_base": (0.06, 0.12),
+    }
+    for arch, (lo, hi) in expect.items():
+        cfg = get_config(arch)
+        n = param_count(build_model(cfg).specs()) / 1e9
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_gemma3_local_global_pattern():
+    cfg = get_config("gemma3_1b")
+    g = np.asarray(cfg.is_global_layers())
+    assert g.sum() == 4                      # 26 layers, every 6th global
+    assert g[5] and g[11] and g[17] and g[23]
+    assert not g[0] and not g[4]
+
+
+def test_hymba_global_layers():
+    cfg = get_config("hymba_1g5b")
+    g = np.asarray(cfg.is_global_layers())
+    assert g[0] and g[15] and g[31] and g.sum() == 3
+
+
+def test_moe_matches_dense_oracle():
+    """Sort-based dispatch == per-token dense top-k mixture (no drops)."""
+    from repro.nn import moe as M
+    from repro.nn.spec import init_params as ip
+    p = ip(M.moe_specs(16, 32, 4), jax.random.PRNGKey(3))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 6, 16))
+    out, aux = M.moe_apply(p, x, top_k=2, capacity_factor=4.0)
+    xf = x.reshape(-1, 16)
+    probs = jax.nn.softmax((xf @ p["router"]).astype(jnp.float32), -1)
+    g, idx = jax.lax.top_k(probs, 2)
+    g = g / g.sum(-1, keepdims=True)
+    ref = jnp.zeros_like(xf)
+    for t in range(xf.shape[0]):
+        for k in range(2):
+            e = int(idx[t, k])
+            h = jax.nn.silu(xf[t] @ p["w_gate"][e]) * (xf[t] @ p["w_up"][e])
+            ref = ref.at[t].add(g[t, k] * (h @ p["w_down"][e]))
+    np.testing.assert_allclose(np.asarray(out.reshape(-1, 16)),
+                               np.asarray(ref), rtol=1e-4, atol=1e-4)
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops_tokens():
+    """With tight capacity some assignments drop; output = partial mixture
+    (never NaN, never the full mixture)."""
+    from repro.nn import moe as M
+    from repro.nn.spec import init_params as ip
+    p = ip(M.moe_specs(16, 32, 2), jax.random.PRNGKey(3))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 16))
+    tight, _ = M.moe_apply(p, x, top_k=2, capacity_factor=0.25)
+    loose, _ = M.moe_apply(p, x, top_k=2, capacity_factor=4.0)
+    assert bool(jnp.all(jnp.isfinite(tight)))
+    assert float(jnp.abs(tight - loose).max()) > 1e-3
