@@ -187,6 +187,58 @@ def bench_scan(rows: int = 64, T: int = 8192):
 
 
 # ---------------------------------------------------------------------------
+# Autotuner: tuned vs default block configs for the Table 3 suite
+# ---------------------------------------------------------------------------
+
+def bench_autotune(size2d: int = 192, size3d: int = 32):
+    """Tuned vs default engine configs (µs + §5 model cost) per stencil.
+
+    The tuner measures its model's top candidates *and* the default, so
+    ``speedup`` is ≥ ~1.0 up to timer noise. Sizes are kept modest: the
+    interpret-mode Pallas kernels this container can run are far slower
+    than compiled Mosaic, and the point here is config selection, not
+    absolute throughput.
+    """
+    from repro.core import tuning
+    from repro.kernels import ops
+    from repro.kernels import ssam_stencil2d, ssam_stencil3d
+    from repro.kernels.stencils import BENCHMARKS
+
+    rng = np.random.default_rng(0)
+    print(f"# Autotune: tuned vs default block configs (2D {size2d}^2, "
+          f"3D {size3d}^3, interpret-mode wall-time)")
+    for name, sdef in BENCHMARKS.items():
+        if sdef.ndim == 2:
+            x = jnp.array(rng.standard_normal((size2d, size2d)), jnp.float32)
+            mod, default = ssam_stencil2d, tuning.KernelConfig((8, 128))
+        else:
+            x = jnp.array(rng.standard_normal((size3d,) * 3), jnp.float32)
+            mod, default = ssam_stencil3d, tuning.KernelConfig((4, 8, 128))
+        plan = mod.plan_for(sdef)
+        t_default = tuning.measure_us(
+            lambda: ops.stencil(x, sdef, impl="interpret",
+                                **default.as_kwargs(plan)))
+        runner = lambda cfg: tuning.measure_us(
+            lambda: ops.stencil(x, sdef, impl="interpret",
+                                **cfg.as_kwargs(plan)))
+        t0 = time.perf_counter()
+        tuned = tuning.autotune(plan, x.shape, default=default, runner=runner)
+        tune_s = time.perf_counter() - t0
+        cfg = tuned.config
+        t_tuned = tuning.measure_us(
+            lambda: ops.stencil(x, sdef, impl="interpret",
+                                **cfg.as_kwargs(plan)))
+        dif = (tuning.model_cost(plan, default)
+               - tuning.model_cost(plan, cfg))
+        _row(f"autotune_{name}_default", t_default,
+             f"cfg={'x'.join(map(str, default.block))}")
+        _row(f"autotune_{name}_tuned", t_tuned,
+             f"cfg={'x'.join(map(str, cfg.block))};variant={cfg.variant};"
+             f"model_dif={dif:.1f}cyc;speedup={t_default / t_tuned:.2f}x;"
+             f"tune_cost_s={tune_s:.1f}")
+
+
+# ---------------------------------------------------------------------------
 # LM roofline summary (assignment §Roofline)
 # ---------------------------------------------------------------------------
 
@@ -215,6 +267,7 @@ def main() -> None:
     bench_stencil_suite()
     bench_temporal_blocking()
     bench_scan()
+    bench_autotune()
     bench_lm_roofline()
 
 

@@ -34,7 +34,14 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # zstd compression is optional: bare environments fall back to raw
+    import zstandard
+except ImportError:  # pragma: no cover - exercised on bare images
+    zstandard = None
+
+_COMPRESSED = "tree.msgpack.zst"
+_RAW = "tree.msgpack"
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -69,8 +76,19 @@ def save_checkpoint(directory: str, step: int, tree, *, meta: dict | None = None
             "data": v.tobytes()} for k, v in flat.items()
     }
     raw = msgpack.packb(payload, use_bin_type=True)
-    with open(os.path.join(d, "tree.msgpack.zst"), "wb") as f:
-        f.write(zstandard.ZstdCompressor(level=3).compress(raw))
+    if zstandard is not None:
+        write, stale = _COMPRESSED, _RAW
+        raw = zstandard.ZstdCompressor(level=3).compress(raw)
+    else:
+        write, stale = _RAW, _COMPRESSED
+    with open(os.path.join(d, write), "wb") as f:
+        f.write(raw)
+    # A re-save of the same step from an env with the other format must
+    # not leave the old file behind — load prefers .zst and would
+    # silently restore stale weights.
+    stale_path = os.path.join(d, stale)
+    if os.path.exists(stale_path):
+        os.remove(stale_path)
     with open(os.path.join(d, "META.json"), "w") as f:
         json.dump({"step": step, "time": time.time(), **(meta or {})}, f)
     with open(os.path.join(d, "COMMIT"), "w") as f:
@@ -82,8 +100,17 @@ def load_checkpoint(directory: str, step: int, template, *, shardings=None):
     """Load into the structure of ``template``; optionally re-place under
     ``shardings`` (elastic restore onto a different mesh)."""
     d = os.path.join(directory, f"step_{step:08d}")
-    with open(os.path.join(d, "tree.msgpack.zst"), "rb") as f:
-        raw = zstandard.ZstdDecompressor().decompress(f.read())
+    zst_path = os.path.join(d, _COMPRESSED)
+    if os.path.exists(zst_path):
+        if zstandard is None:
+            raise RuntimeError(
+                f"{zst_path} is zstd-compressed but the 'zstandard' package "
+                "is not installed (pip install repro-ssam[compress])")
+        with open(zst_path, "rb") as f:
+            raw = zstandard.ZstdDecompressor().decompress(f.read())
+    else:
+        with open(os.path.join(d, _RAW), "rb") as f:
+            raw = f.read()
     payload = msgpack.unpackb(raw, raw=False)
     flat = {
         k: np.frombuffer(v["data"], dtype=v["dtype"]).reshape(v["shape"])

@@ -2,6 +2,8 @@
 
 - :mod:`repro.core.plan` — 𝒥 = (O, D, X, Y) plan formulation (§3.4).
 - :mod:`repro.core.executor` — pure-JAX lane-roll interpreter of plans.
+- :mod:`repro.core.engine` — generic plan→Pallas lowering (every kernel).
+- :mod:`repro.core.tuning` — §5 perf-model-guided block-config autotuner.
 - :mod:`repro.core.perfmodel` — the paper's §5 analytical latency model.
 - :mod:`repro.core.rooflines` — TPU v5e 3-term roofline from XLA artifacts.
 """
@@ -13,6 +15,7 @@ from .plan import (
     Tap,
     conv1d_plan,
     conv2d_plan,
+    depthwise_conv1d_plan,
     linear_recurrence_plan,
     scan_plan,
     stencil2d_plan,
@@ -24,6 +27,7 @@ from .executor import (
     execute_linear_recurrence,
     execute_scan,
 )
+from .engine import run_scan_plan, run_window_plan
 
 __all__ = [
     "GPU_WARP_LANES",
@@ -33,6 +37,7 @@ __all__ = [
     "Tap",
     "conv1d_plan",
     "conv2d_plan",
+    "depthwise_conv1d_plan",
     "linear_recurrence_plan",
     "scan_plan",
     "stencil2d_plan",
@@ -41,4 +46,6 @@ __all__ = [
     "execute_conv_global",
     "execute_linear_recurrence",
     "execute_scan",
+    "run_scan_plan",
+    "run_window_plan",
 ]

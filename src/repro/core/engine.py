@@ -1,0 +1,290 @@
+"""Generic plan→Pallas lowering — one engine for every systolic plan.
+
+This module is the "compiler" half of the SSAM formulation: a
+:class:`repro.core.plan.SystolicPlan` is pure data (𝒥 = (O, D, X, Y),
+§3.4) and the engine lowers *any* plan to a Pallas TPU kernel. The five
+former per-family kernels (``ssam_conv1d/conv2d/stencil2d/stencil3d/
+ssam_scan``) are now ~20-line plan builders over two lowerings here:
+
+* :func:`run_window_plan` — the windowed (conv/stencil) family. From the
+  plan's geometry it derives the overlapped-block ``pl.Element``
+  BlockSpecs (§4.5), the pad/halo arithmetic (lead/trail origin padding,
+  tile round-up), temporal blocking (t-step fusion inside the block,
+  §6.4), the valid-lane crop (outputs live in lanes ``[M−1, S)``, §4.4)
+  and both schedule variants (DESIGN.md §2):
+
+  - ``variant='shift_psum'`` — paper-faithful: the *partial sums* roll
+    along the lane axis (the ``__shfl_up_sync`` of §4.4).
+  - ``variant='shift_data'`` — re-associated: the accumulator stays put
+    and the *data* rolls by the cumulative shift instead; the rolls of
+    all M steps become independent of the accumulator chain and can
+    issue in parallel with the FMAs. Per output lane the same products
+    are added in the same order, so results agree to the last ulp modulo
+    XLA's FMA-contraction choices (observed ≤ 1 ulp on CPU).
+
+* :func:`run_scan_plan` — the scan family (cumsum / linear recurrence):
+  Kogge–Stone masked shift-accumulate over the lane axis (§3.6, Fig. 1e)
+  with an inter-block carry in VMEM scratch — scratchpad used only
+  *between* systolic blocks, exactly as SSAM prescribes (§1).
+
+Everything the lowering needs — footprint extents, origin padding, batch
+axes, coefficient source — comes from plan fields, so a new kernel family
+is a new plan builder, not a new kernel body.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .plan import SystolicPlan, Tap
+
+
+# ---------------------------------------------------------------------------
+# Windowed family: conv1d / conv2d / stencil2d / stencil3d
+# ---------------------------------------------------------------------------
+
+def _coeff(plan: SystolicPlan, w_ref, tap: Tap, acc_dtype):
+    """Resolve a tap's coefficient per the plan's coeff_mode."""
+    if plan.coeff_mode == "table":          # compile-time immediate (§4.8)
+        return plan.coeffs[tap.coeff_id[-1]]
+    if plan.coeff_mode == "dense":          # runtime filter, scalar element
+        return w_ref[tap.coeff_id].astype(acc_dtype)
+    if plan.coeff_mode == "perlane":        # runtime per-lane coefficient row
+        return w_ref[tap.coeff_id[-1], :].astype(acc_dtype)
+    raise ValueError(plan.coeff_mode)
+
+
+def _tap_read(xb: jnp.ndarray, tap: Tap, valid: tuple[int, ...]) -> jnp.ndarray:
+    """The vertical (in-lane, cheap-direction) register read of Fig. 1d."""
+    if xb.ndim == 3:
+        return xb[
+            tap.z_offset : tap.z_offset + valid[0],
+            tap.row_offset : tap.row_offset + valid[1],
+            :,
+        ]
+    return xb[tap.row_offset : tap.row_offset + valid[0], :]
+
+
+def _window_kernel(*refs, plan: SystolicPlan, block: tuple[int, ...],
+                   time_steps: int, variant: str, acc_dtype):
+    """One overlapped block of any windowed plan.
+
+    ``refs`` is ``(x_ref, [w_ref,] o_ref)``. The block runs ``time_steps``
+    fused plan applications (§6.4); each iterate consumes one footprint of
+    halo per axis and the valid lanes shrink by M−1 (§4.4).
+    """
+    x_ref = refs[0]
+    w_ref = refs[1] if plan.coeff_mode != "table" else None
+    o_ref = refs[-1]
+    xb = (x_ref[0] if plan.batch_axes else x_ref[...]).astype(acc_dtype)
+    exts = plan.exts
+    M = plan.M
+    for _ in range(time_steps):
+        valid = tuple(s - (e - 1) for s, e in zip(xb.shape, exts))
+        # Partial sums keep the full lane width until the valid-lane crop.
+        s = jnp.zeros(valid[:-1] + (xb.shape[-1],), acc_dtype)
+        if variant == "shift_psum":
+            # Paper Listing 1/2: shift the partial sums one lane per
+            # column-step, then accumulate that column's vertical taps.
+            for step in plan.steps:
+                if step.shift:
+                    s = jnp.roll(s, step.shift, axis=-1)
+                for tap in step.taps:
+                    s = s + _tap_read(xb, tap, valid) * _coeff(
+                        plan, w_ref, tap, acc_dtype)
+            xb = s[..., M - 1 : M - 1 + valid[-1]]
+        elif variant == "shift_data":
+            # Stationary accumulator: roll the data by the cumulative
+            # shift instead. Same per-lane sums in the same order.
+            cum = 0
+            for step in plan.steps:
+                cum += step.shift
+                xs = jnp.roll(xb, -cum, axis=-1) if cum else xb
+                for tap in step.taps:
+                    s = s + _tap_read(xs, tap, valid) * _coeff(
+                        plan, w_ref, tap, acc_dtype)
+            xb = s[..., : valid[-1]]
+        else:
+            raise ValueError(variant)
+    out = xb[tuple(slice(0, b) for b in block)].astype(o_ref.dtype)
+    if plan.batch_axes:
+        o_ref[0] = out
+    else:
+        o_ref[...] = out
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("plan", "block", "time_steps", "variant", "interpret",
+                     "acc_dtype"),
+)
+def run_window_plan(
+    x: jax.Array,
+    w: jax.Array | None = None,
+    *,
+    plan: SystolicPlan,
+    block: tuple[int, ...],
+    time_steps: int = 1,
+    variant: str = "shift_psum",
+    interpret: bool = True,
+    acc_dtype=jnp.float32,
+) -> jax.Array:
+    """Lower a windowed plan to a Pallas call and run it.
+
+    Args:
+      x: ``batch_axes + ndim_spatial``-dim input, lane axis last.
+      w: runtime coefficients for ``coeff_mode`` 'dense' (full filter) or
+        'perlane' (``(K, lanes)`` rows); None for 'table' plans.
+      plan: the systolic schedule + geometry (lead/trail, footprint).
+      block: output block size per windowed axis, lane axis last.
+      time_steps: fused plan applications per block (§6.4).
+
+    Returns:
+      The plan's output: per windowed axis,
+      ``out = in + t·(lead+trail) − t·(ext−1)``.
+    """
+    nb, nd = plan.batch_axes, plan.ndim_spatial
+    assert nb in (0, 1), f"engine supports at most one batch axis, got {nb}"
+    assert x.ndim == nb + nd, (x.shape, nb, nd)
+    assert len(block) == nd, (block, nd)
+    t = time_steps
+    exts = plan.exts
+    lead, _ = plan.lead_trail()
+    spatial_in = x.shape[nb:]
+    out_sp = plan.out_shape(spatial_in, t)
+    assert all(o >= 1 for o in out_sp), (spatial_in, out_sp)
+
+    B = tuple(min(b, o) for b, o in zip(block, out_sp))
+    g = tuple(pl.cdiv(o, b) for o, b in zip(out_sp, B))
+    halo = plan.halo(t)
+    # Pad: t·lead zeros ahead of the origin, then enough behind so every
+    # (including the last) overlapped input block is in-bounds.
+    lead_pad = tuple(t * l for l in lead)
+    pads = [(0, 0)] * nb + [
+        (lp, gi * bi + h - lp - s)
+        for lp, gi, bi, h, s in zip(lead_pad, g, B, halo, spatial_in)
+    ]
+    xp = jnp.pad(x, pads)
+
+    # Overlapped input blocks (§4.5): element-indexed specs — output tiles
+    # are disjoint, input tiles overlap by the halo, so grid steps never
+    # communicate (the TPU analogue of the paper's branch-free warp blocks).
+    in_block = plan.block_in_shape(B, t)
+    x_spec = pl.BlockSpec(
+        (1,) * nb + in_block,
+        lambda *ids: ids[:nb] + tuple(
+            i * b for i, b in zip(ids[nb:], B)),
+        indexing_mode=pl.Unblocked(),
+    )
+    in_specs = [x_spec]
+    operands = [xp]
+    if plan.coeff_mode == "dense":
+        in_specs.append(pl.BlockSpec(w.shape, lambda *ids: (0,) * w.ndim))
+        operands.append(w)
+    elif plan.coeff_mode == "perlane":
+        assert w.shape[-1] == spatial_in[-1], (w.shape, spatial_in)
+        wp = jnp.pad(w, ((0, 0), (0, g[-1] * B[-1] - w.shape[-1])))
+        in_specs.append(
+            pl.BlockSpec((w.shape[0], B[-1]), lambda *ids: (0, ids[-1])))
+        operands.append(wp)
+
+    kern = functools.partial(
+        _window_kernel, plan=plan, block=B, time_steps=t, variant=variant,
+        acc_dtype=acc_dtype,
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=x.shape[:nb] + g,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1,) * nb + B, lambda *ids: ids),
+        out_shape=jax.ShapeDtypeStruct(
+            x.shape[:nb] + tuple(gi * bi for gi, bi in zip(g, B)), x.dtype),
+        interpret=interpret,
+    )(*operands)
+    return out[(slice(None),) * nb + tuple(slice(0, o) for o in out_sp)]
+
+
+# ---------------------------------------------------------------------------
+# Scan family: cumsum / linear recurrence (§3.6, Fig. 1e)
+# ---------------------------------------------------------------------------
+
+def _scan_kernel(*refs, plan: SystolicPlan, acc_dtype):
+    """Kogge–Stone over one ``(BR, BT)`` tile, carry across grid steps."""
+    carry = refs[-1]
+    o_ref = refs[-2]
+    ins = refs[:-2]
+
+    @pl.when(pl.program_id(1) == 0)
+    def _reset():
+        carry[:] = jnp.zeros_like(carry)   # h₋₁ = 0 for both combines
+
+    lane = jax.lax.broadcasted_iota(jnp.int32, ins[0].shape, 1)
+    if plan.combine == "add":
+        s = ins[0][:].astype(acc_dtype)
+        for step in plan.steps:           # ctrl() of Eq. 1 gates each arrow
+            shifted = jnp.roll(s, step.shift, axis=1)
+            s = s + jnp.where(lane >= step.shift, shifted, jnp.zeros_like(s))
+        s = s + carry[:]                  # inter-block carry (scratchpad)
+        carry[:] = s[:, -1:]
+        o_ref[:] = s.astype(o_ref.dtype)
+    elif plan.combine == "linrec":
+        A = ins[0][:].astype(acc_dtype)   # transfer pairs (a, b)
+        B = ins[1][:].astype(acc_dtype)
+        for step in plan.steps:
+            As = jnp.roll(A, step.shift, axis=1)
+            Bs = jnp.roll(B, step.shift, axis=1)
+            ctrl = lane >= step.shift
+            As = jnp.where(ctrl, As, jnp.ones_like(As))   # identity (1, 0)
+            Bs = jnp.where(ctrl, Bs, jnp.zeros_like(Bs))
+            A, B = A * As, A * Bs + B     # f_t ∘ f_{t−d}
+        h = A * carry[:] + B              # prefix applied to the carry
+        carry[:] = h[:, -1:]
+        o_ref[:] = h.astype(o_ref.dtype)
+    else:
+        raise ValueError(plan.combine)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("plan", "block_r", "interpret", "acc_dtype")
+)
+def run_scan_plan(
+    *operands: jax.Array,
+    plan: SystolicPlan,
+    block_r: int = 8,
+    interpret: bool = True,
+    acc_dtype=jnp.float32,
+) -> jax.Array:
+    """Lower a scan/recurrence plan over ``(R, T)`` operands.
+
+    ``plan.S`` is the lane-tile width BT (a power of two); T is tiled into
+    sequential grid steps whose carries ride in VMEM scratch. Padding uses
+    the combine's identity element ('add': 0; 'linrec': (1, 0)) so padded
+    tail lanes are no-ops.
+    """
+    R, T = operands[0].shape
+    BT = plan.S
+    BR = min(block_r, R)
+    gr, gt = pl.cdiv(R, BR), pl.cdiv(T, BT)
+    pad = ((0, gr * BR - R), (0, gt * BT - T))
+    if plan.combine == "linrec":
+        a, b = operands
+        assert a.shape == b.shape
+        padded = (jnp.pad(a, pad, constant_values=1), jnp.pad(b, pad))
+    else:
+        padded = (jnp.pad(operands[0], pad),)
+
+    kern = functools.partial(_scan_kernel, plan=plan, acc_dtype=acc_dtype)
+    out = pl.pallas_call(
+        kern,
+        grid=(gr, gt),                    # T sequential per row-tile
+        in_specs=[pl.BlockSpec((BR, BT), lambda i, j: (i, j))] * len(padded),
+        out_specs=pl.BlockSpec((BR, BT), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((gr * BR, gt * BT), operands[0].dtype),
+        scratch_shapes=[pltpu.VMEM((BR, 1), acc_dtype)],
+        interpret=interpret,
+    )(*padded)
+    return out[:R, :T]

@@ -18,9 +18,11 @@ memory-bound kernel executes on a software systolic array of ``S`` lanes
   ``[M−1, S)`` (§4.4).
 
 Plans are *data*: they are executed by :mod:`repro.core.executor` (pure
-JAX, lane rolls) and consumed as schedule parameters by the Pallas
-kernels in :mod:`repro.kernels`. The perf model (:mod:`repro.core.perfmodel`)
-prices a plan with the paper's §5 equations.
+JAX, lane rolls) and lowered to Pallas kernels by the generic engine in
+:mod:`repro.core.engine` — the modules in :mod:`repro.kernels` are thin
+plan builders over that engine. The perf model
+(:mod:`repro.core.perfmodel`) prices a plan with the paper's §5
+equations, and :mod:`repro.core.tuning` picks block configs with it.
 """
 from __future__ import annotations
 
@@ -42,10 +44,15 @@ class Tap:
     is ``(row, col)`` into the filter; for stencils it is the index of the
     coefficient grouped into this column (Listing 2 groups {West},
     {North, Current, South}, {East}).
+
+    ``z_offset`` is the depth (Z-slice) offset of the read for 3-D plans —
+    on TPU the Z window is VREG-resident, so a Z tap is just another cheap
+    vertical read (DESIGN.md §7.5); 2-D plans leave it at 0.
     """
 
     row_offset: int
     coeff_id: tuple[int, ...]
+    z_offset: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,7 +73,25 @@ class Step:
 
 @dataclasses.dataclass(frozen=True)
 class SystolicPlan:
-    """Static schedule for one SSAM kernel — see module docstring."""
+    """Static schedule for one SSAM kernel — see module docstring.
+
+    Beyond the paper's (O, D, X, Y) fields, a plan carries the geometry the
+    generic lowering (:mod:`repro.core.engine`) needs to emit a Pallas
+    kernel without per-family code:
+
+    * ``depth``/``ndim_spatial`` — footprint extent along Z and the number
+      of windowed (blocked, overlapped) axes; the lane axis is always last.
+    * ``batch_axes`` — leading axes iterated by the grid with block size 1
+      (the depthwise-conv batch dimension).
+    * ``lead``/``trail`` — semantic zero-padding per windowed axis applied
+      ahead of / behind the data origin *per temporal iterate*: a stencil
+      plan pads by its footprint (same-shape output), a causal conv pads
+      ``K−1`` in front, a valid conv pads nothing (output shrinks).
+    * ``coeffs``/``coeff_mode`` — where tap coefficients come from:
+      ``'table'`` (compile-time immediates stored on the plan, §4.8),
+      ``'dense'`` (a runtime filter array indexed by ``coeff_id``), or
+      ``'perlane'`` (runtime per-lane coefficient rows, depthwise conv).
+    """
 
     kind: str            # 'conv1d' | 'conv2d' | 'stencil2d' | 'stencil3d' | 'scan' | 'recurrence'
     S: int               # systolic array width (lanes)
@@ -76,6 +101,43 @@ class SystolicPlan:
     N: int               # vertical extent (filter rows) — taps per column upper bound
     steps: tuple[Step, ...]
     combine: str = "fma"  # O of Eq. 1: 'fma' (r⊗x ⊕ s) or 'add' (scan) or 'linrec'
+    depth: int = 1        # Z extent of the footprint (3-D plans)
+    ndim_spatial: int = 2  # windowed axes (lane axis last): 2 or 3
+    batch_axes: int = 0   # leading grid axes with block size 1
+    lead: tuple[int, ...] | None = None   # zero-pad ahead of origin per axis
+    trail: tuple[int, ...] | None = None  # zero-pad behind the data per axis
+    coeffs: tuple[float, ...] | None = None  # immediates for 'table' mode
+    coeff_mode: str = "dense"  # 'table' | 'dense' | 'perlane'
+
+    # ---- X geometry: what the engine lowers from --------------------------
+    @property
+    def exts(self) -> tuple[int, ...]:
+        """Footprint extent per windowed axis, lane axis last."""
+        if self.ndim_spatial == 3:
+            return (self.depth, self.N, self.M)
+        return (self.N, self.M)
+
+    def lead_trail(self) -> tuple[tuple[int, ...], tuple[int, ...]]:
+        zeros = (0,) * self.ndim_spatial
+        return (self.lead or zeros, self.trail or zeros)
+
+    def halo(self, time_steps: int = 1) -> tuple[int, ...]:
+        """Input-over-output overlap per windowed axis — the §4.5 halo,
+        widened ``time_steps``-fold under temporal blocking (§6.4)."""
+        return tuple(time_steps * (e - 1) for e in self.exts)
+
+    def out_shape(self, in_shape: tuple[int, ...], time_steps: int = 1) -> tuple[int, ...]:
+        """Windowed-axes output shape: each valid application shrinks an
+        axis by ``ext−1`` and the lead/trail zero-pad grows it back."""
+        lead, trail = self.lead_trail()
+        return tuple(
+            s + time_steps * (l + r) - time_steps * (e - 1)
+            for s, l, r, e in zip(in_shape, lead, trail, self.exts)
+        )
+
+    def block_in_shape(self, block: tuple[int, ...], time_steps: int = 1) -> tuple[int, ...]:
+        """Overlapped input block for a given output block (§4.5)."""
+        return tuple(b + h for b, h in zip(block, self.halo(time_steps)))
 
     # ---- Y geometry -------------------------------------------------------
     @property
@@ -121,6 +183,18 @@ class SystolicPlan:
 # Plan builders
 # ---------------------------------------------------------------------------
 
+def _check_origin_straddle(kind: str, bounds: tuple[tuple[int, int], ...]):
+    """Stencil offsets must straddle the output point on every axis
+    (lo ≤ 0 ≤ hi) — same-shape zero-boundary semantics need non-negative
+    lead/trail padding. Caught here so the failure names the stencil
+    instead of surfacing as a negative-pad error inside the jitted engine.
+    """
+    for axis, (lo, hi) in enumerate(bounds):
+        if not (lo <= 0 <= hi):
+            raise ValueError(
+                f"{kind}: offsets must straddle the origin on every axis; "
+                f"axis {axis} spans [{lo}, {hi}]")
+
 def conv1d_plan(M: int, *, S: int = TPU_VREG_LANES, P: int = 1) -> SystolicPlan:
     """§3.5 motivating example: 1-D convolution of filter width M.
 
@@ -148,6 +222,7 @@ def conv2d_plan(M: int, N: int, *, S: int = TPU_VREG_LANES, P: int = 4) -> Systo
 def stencil2d_plan(
     offsets: Sequence[tuple[int, int]],
     *,
+    coeffs: Sequence[float] | None = None,
     S: int = TPU_VREG_LANES,
     P: int = 4,
 ) -> SystolicPlan:
@@ -161,6 +236,7 @@ def stencil2d_plan(
     dxs = [dx for _, dx in offsets]
     lo_dy, hi_dy = min(dys), max(dys)
     lo_dx, hi_dx = min(dxs), max(dxs)
+    _check_origin_straddle("stencil2d", ((lo_dy, hi_dy), (lo_dx, hi_dx)))
     M = hi_dx - lo_dx + 1
     N = hi_dy - lo_dy + 1
     cols: dict[int, list[tuple[int, int]]] = {}
@@ -171,13 +247,17 @@ def stencil2d_plan(
         taps = tuple(Tap(row, (k,)) for row, k in sorted(cols.get(m, ())))
         steps.append(Step(shift=1 if m > 0 else 0, taps=taps))
     return SystolicPlan(
-        "stencil2d", S=S, C=N + P - 1, P=P, M=M, N=N, steps=tuple(steps)
+        "stencil2d", S=S, C=N + P - 1, P=P, M=M, N=N, steps=tuple(steps),
+        lead=(-lo_dy, -lo_dx), trail=(hi_dy, hi_dx),
+        coeffs=None if coeffs is None else tuple(float(c) for c in coeffs),
+        coeff_mode="table",
     )
 
 
 def stencil3d_plan(
     offsets: Sequence[tuple[int, int, int]],
     *,
+    coeffs: Sequence[float] | None = None,
     S: int = TPU_VREG_LANES,
     P: int = 2,
 ) -> SystolicPlan:
@@ -193,26 +273,47 @@ def stencil3d_plan(
     dzs = [o[0] for o in offsets]
     dys = [o[1] for o in offsets]
     dxs = [o[2] for o in offsets]
-    lo_dz = min(dzs)
+    lo_dz, hi_dz = min(dzs), max(dzs)
     lo_dy, hi_dy = min(dys), max(dys)
     lo_dx, hi_dx = min(dxs), max(dxs)
+    _check_origin_straddle(
+        "stencil3d", ((lo_dz, hi_dz), (lo_dy, hi_dy), (lo_dx, hi_dx)))
     M = hi_dx - lo_dx + 1
     N = hi_dy - lo_dy + 1
-    depth = max(dzs) - lo_dz + 1
+    depth = hi_dz - lo_dz + 1
     cols: dict[int, list[tuple[int, int, int]]] = {}
     for k, (dz, dy, dx) in enumerate(offsets):
         cols.setdefault(dx - lo_dx, []).append((dz - lo_dz, dy - lo_dy, k))
     steps = []
     for m in range(M):
         taps = tuple(
-            Tap(row, (z, k)) for z, row, k in sorted(cols.get(m, ()))
+            Tap(row, (k,), z_offset=z) for z, row, k in sorted(cols.get(m, ()))
         )
         steps.append(Step(shift=1 if m > 0 else 0, taps=taps))
-    plan = SystolicPlan(
-        "stencil3d", S=S, C=N + P - 1, P=P, M=M, N=N, steps=tuple(steps)
+    return SystolicPlan(
+        "stencil3d", S=S, C=N + P - 1, P=P, M=M, N=N, steps=tuple(steps),
+        depth=depth, ndim_spatial=3,
+        lead=(-lo_dz, -lo_dy, -lo_dx), trail=(hi_dz, hi_dy, hi_dx),
+        coeffs=None if coeffs is None else tuple(float(c) for c in coeffs),
+        coeff_mode="table",
     )
-    object.__setattr__(plan, "_depth", depth)  # ancillary, not part of 𝒥
-    return plan
+
+
+def depthwise_conv1d_plan(K: int, *, S: int = TPU_VREG_LANES) -> SystolicPlan:
+    """Depthwise causal 1-D conv in the *D-optimal* SSAM mapping (§5.4).
+
+    Channels ride the lane axis and time rides sublanes, so every tap is a
+    vertical (in-lane, cheap) register read and no lane shifts are needed
+    at all — M=1, N=K. Coefficients are per-lane rows of a runtime
+    ``(K, D)`` filter (``coeff_mode='perlane'``). The leading batch axis is
+    iterated by the grid (``batch_axes=1``); causality is the ``K−1`` lead
+    zeros on the time axis.
+    """
+    taps = tuple(Tap(k, (k,)) for k in range(K))
+    return SystolicPlan(
+        "conv1d", S=S, C=K, P=1, M=1, N=K, steps=(Step(shift=0, taps=taps),),
+        batch_axes=1, lead=(K - 1, 0), trail=(0, 0), coeff_mode="perlane",
+    )
 
 
 def scan_plan(n: int, *, S: int | None = None) -> SystolicPlan:

@@ -1,0 +1,260 @@
+"""Perf-model-guided autotuner for engine block configurations (§5).
+
+For a given plan + problem shape the tuner enumerates candidate block
+configs — ``(block_h, block_w[, block_z], variant)`` for windowed plans,
+``(block_r, block_t)`` for scans — prices each with an extension of the
+paper's §5 latency model (Eq. 4 compute terms + the §5.3 halo/redundancy
+accounting, applied to the *actual* block geometry instead of the warp),
+optionally measures the model's top-k candidates with the real kernel,
+and caches the winner per (plan, shape, time_steps, backend).
+
+Pricing per useful output element (see :func:`model_cost`):
+
+* **compute** — ``t · mads · (T_mad + T_reg)`` plus the shift term
+  ``t · shifts · T_shfl`` amortized over the P output rows a roll covers
+  (one lane-roll of the whole (P, S) psum block serves all P rows, the
+  TPU widening of Eq. 4's per-output (M−1)·T_shfl). ``shift_data``
+  halves the effective shift cost: its rolls leave the accumulator
+  dependency chain and overlap with FMAs (DESIGN.md §2).
+* **memory** — every loaded element costs ``T_gmem/LANES``; the loaded/
+  useful ratio is exactly the halo redundancy of §5.3 for the block,
+  ``Π(block+t·(ext−1)) / Π(block)``, which temporal blocking widens.
+
+The absolute cycle counts are estimates (the TPU latency row is marked
+as such in :mod:`repro.core.perfmodel`); the tuner only consumes the
+*ranking*, and the measured pass — which always includes the default
+config — guarantees the returned config never loses to the default on
+the measured metric.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, Sequence
+
+import jax
+
+from .perfmodel import TPU_V5E, HardwareLatencies
+from .plan import SystolicPlan
+
+# VMEM working-set budget per block (f32 elements): input block + psum +
+# output must fit comfortably in ~16 MB VMEM; stay conservative.
+VMEM_BUDGET_ELEMS = 1 << 20
+
+_WINDOW_BLOCK_H = (8, 16, 32, 64)
+_WINDOW_BLOCK_W = (128, 256, 512)
+_WINDOW_BLOCK_Z = (4, 8, 16)
+_SCAN_BLOCK_R = (8, 16, 32)
+_SCAN_BLOCK_T = (128, 256, 512, 1024)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    """One candidate schedule: output block per windowed axis + variant."""
+
+    block: tuple[int, ...]          # lane axis last
+    variant: str = "shift_psum"
+
+    def as_kwargs(self, plan: SystolicPlan) -> dict:
+        """Render into the kwargs the thin kernel wrappers accept."""
+        if plan.combine != "fma":
+            return {"block_r": self.block[0], "block_t": self.block[1]}
+        if plan.kind == "conv1d":
+            return {"block_t": self.block[0], "block_d": self.block[1]}
+        kw = {"block_h": self.block[-2], "block_w": self.block[-1]}
+        if plan.ndim_spatial == 3:
+            kw["block_z"] = self.block[0]
+        if plan.M > 1:
+            kw["variant"] = self.variant
+        return kw
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    config: KernelConfig
+    model_cost: float               # est. cycles per useful output
+    measured_us: float | None       # None when model-only
+    source: str                     # 'model' | 'measured' | 'cache'
+
+
+_CACHE: dict[tuple, TuneResult] = {}
+
+
+def clear_cache() -> None:
+    _CACHE.clear()
+
+
+def _cache_key(plan: SystolicPlan, shape: tuple[int, ...], time_steps: int,
+               context: tuple = ()):
+    return (plan, tuple(shape), time_steps, jax.default_backend(), context)
+
+
+# ---------------------------------------------------------------------------
+# Candidate enumeration
+# ---------------------------------------------------------------------------
+
+def candidate_configs(
+    plan: SystolicPlan,
+    shape: Sequence[int],
+    time_steps: int = 1,
+    *,
+    vmem_budget: int = VMEM_BUDGET_ELEMS,
+) -> list[KernelConfig]:
+    """Feasible block configs for ``plan`` on a problem of ``shape``.
+
+    Blocks are clamped to the output shape, deduplicated, and filtered by
+    the VMEM working-set budget (input block + halo, widened by temporal
+    blocking). Scan plans tune (block_r, block_t) with power-of-two lane
+    tiles; windowed plans tune the output tile and the schedule variant.
+    """
+    if plan.combine != "fma":                       # scan family
+        R, T = shape
+        out: list[KernelConfig] = []
+        for br in _SCAN_BLOCK_R:
+            for bt in _SCAN_BLOCK_T:
+                bt_eff = 1 << (min(bt, T).bit_length() - 1)
+                cfg = KernelConfig((min(br, R), bt_eff))
+                if cfg.block[0] * cfg.block[1] <= vmem_budget:
+                    out.append(cfg)
+        return sorted(set(out), key=lambda c: c.block)
+
+    spatial = tuple(shape)[plan.batch_axes:]
+    out_sp = plan.out_shape(spatial, time_steps)
+    axes: list[tuple[int, ...]] = []
+    if plan.ndim_spatial == 3:
+        axes.append(_WINDOW_BLOCK_Z)
+    axes.append(_WINDOW_BLOCK_H)
+    axes.append(_WINDOW_BLOCK_W)
+    variants = ("shift_psum", "shift_data") if plan.shift_count() else ("shift_psum",)
+
+    configs: set[KernelConfig] = set()
+    def rec(i: int, acc: tuple[int, ...]):
+        if i == len(axes):
+            if math.prod(plan.block_in_shape(acc, time_steps)) > vmem_budget:
+                return
+            for v in variants:
+                configs.add(KernelConfig(acc, v))
+            return
+        for b in axes[i]:
+            rec(i + 1, acc + (min(b, out_sp[i]),))
+    rec(0, ())
+    return sorted(configs, key=lambda c: (c.block, c.variant))
+
+
+# ---------------------------------------------------------------------------
+# §5-model pricing
+# ---------------------------------------------------------------------------
+
+def model_cost(
+    plan: SystolicPlan,
+    cfg: KernelConfig,
+    time_steps: int = 1,
+    hw: HardwareLatencies = TPU_V5E,
+) -> float:
+    """Estimated cycles per useful output element for one block config."""
+    t = time_steps
+    if plan.combine != "fma":                       # Kogge–Stone scan
+        br, bt = cfg.block
+        steps = math.log2(max(bt, 2))
+        ops_per_elem = 2.0 if plan.combine == "linrec" else 1.0
+        compute = steps * ops_per_elem * (hw.t_shfl + hw.t_mad + hw.t_reg)
+        carry = (hw.t_smem_read + hw.t_mad) / bt    # inter-block carry
+        memory = hw.t_gmem_read / plan.S
+        return compute + carry + memory
+
+    block = cfg.block
+    useful = math.prod(block)
+    loaded = math.prod(plan.block_in_shape(block, t))
+    mads = plan.mads_per_output_window()
+    shifts = plan.shift_count()
+    P = block[-2]                                   # rows one roll amortizes
+    shfl = hw.t_shfl * (0.5 if cfg.variant == "shift_data" else 1.0)
+    compute = t * mads * (hw.t_mad + hw.t_reg) + t * shifts * shfl / max(P, 1)
+    memory = (loaded / useful) * hw.t_gmem_read / plan.S
+    return compute + memory
+
+
+# ---------------------------------------------------------------------------
+# Measurement + the tuner
+# ---------------------------------------------------------------------------
+
+def measure_us(fn: Callable[[], jax.Array], reps: int = 3) -> float:
+    """Median wall-time (µs) of ``fn`` post-warmup."""
+    jax.block_until_ready(fn())
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def autotune(
+    plan: SystolicPlan,
+    shape: Sequence[int],
+    *,
+    time_steps: int = 1,
+    default: KernelConfig | None = None,
+    runner: Callable[[KernelConfig], float] | None = None,
+    hw: HardwareLatencies = TPU_V5E,
+    top_k: int = 3,
+    context: tuple = (),
+    fixed: dict | None = None,
+) -> TuneResult:
+    """Pick a block config for ``plan`` on ``shape``.
+
+    Ranks candidates by :func:`model_cost`; when ``runner`` is given
+    (a ``cfg → µs`` measurement closure) the model's top-k **plus the
+    default config** are measured and the measured winner is returned —
+    so the result can never regress the default on the measured metric.
+    Winners are cached per (plan, shape, time_steps, backend, context);
+    ``context`` must capture anything else that changes what the runner
+    actually measures (caller-forced kwargs, op mode, impl), otherwise a
+    winner measured under one context is replayed under another.
+
+    ``fixed`` names kwargs the caller pins (they override the candidate
+    at run time): candidates are restricted to those agreeing with the
+    pinned values — and deduplicated by their *effective* kwargs — so the
+    runner never measures the same kernel twice and the recorded winner
+    is the config that actually ran.
+    """
+    key = _cache_key(plan, tuple(shape), time_steps, context)
+    if key in _CACHE:
+        cached = _CACHE[key]
+        return dataclasses.replace(cached, source="cache")
+
+    cands = candidate_configs(plan, shape, time_steps)
+    if default is not None and default not in cands:
+        cands.append(default)
+    if fixed:
+        agreeing = [c for c in cands
+                    if all(c.as_kwargs(plan).get(k, v) == v
+                           for k, v in fixed.items())]
+        if agreeing:
+            cands = agreeing
+        else:      # pinned value outside the grid: dedupe by what runs
+            seen: dict[tuple, KernelConfig] = {}
+            for c in cands:
+                sig = tuple(sorted({**c.as_kwargs(plan), **fixed}.items()))
+                seen.setdefault(sig, c)
+            cands = list(seen.values())
+    if not cands:
+        raise ValueError(f"no feasible block configs for {plan.kind} {shape}")
+    ranked = sorted(cands, key=lambda c: model_cost(plan, c, time_steps, hw))
+
+    if runner is None:
+        best = ranked[0]
+        result = TuneResult(best, model_cost(plan, best, time_steps, hw),
+                            None, "model")
+    else:
+        to_measure = list(ranked[:top_k])
+        if default is not None and default not in to_measure:
+            to_measure.append(default)
+        timed = [(runner(c), c) for c in to_measure]
+        us, best = min(timed, key=lambda p: p[0])
+        result = TuneResult(best, model_cost(plan, best, time_steps, hw),
+                            us, "measured")
+    _CACHE[key] = result
+    return result

@@ -1,8 +1,9 @@
-"""SSAM Pallas TPU kernels (+ interpret-mode CPU validation + jnp oracles).
+"""SSAM kernels: thin plan builders over the generic Pallas engine.
 
 Modules: ``ssam_conv2d``, ``ssam_stencil2d``, ``ssam_stencil3d``,
-``ssam_conv1d``, ``ssam_scan`` (kernels); ``ops`` (public jit'd API with
-backend dispatch); ``ref`` (pure-jnp oracles); ``stencils`` (Table 3
-benchmark definitions).
+``ssam_conv1d``, ``ssam_scan`` (plan builders lowered by
+:mod:`repro.core.engine`); ``ops`` (public jit'd API with backend
+dispatch + the §5 autotune path); ``ref`` (pure-jnp oracles);
+``stencils`` (Table 3 benchmark definitions).
 """
 from . import ops, ref, stencils  # noqa: F401

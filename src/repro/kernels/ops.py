@@ -2,14 +2,22 @@
 
 Every op takes ``impl``:
 
-* ``"interpret"`` (default here, CPU container) — the Pallas kernel body
-  executed by the Pallas interpreter: validates the real kernel schedule.
+* ``"interpret"`` (default here, CPU container) — the engine-lowered
+  Pallas kernel executed by the Pallas interpreter: validates the real
+  kernel schedule.
 * ``"pallas"``    — compiled Mosaic kernel (real TPU only).
 * ``"xla"``       — the pure-jnp oracle from :mod:`repro.kernels.ref`;
   shardable under pjit, used by the full-scale models and the dry-run.
 
 ``default_impl()`` picks "pallas" on TPU backends and "xla" elsewhere, so
 model code can stay backend-agnostic.
+
+Every non-xla op also takes ``autotune``: when True, the block config
+(and schedule variant) is chosen by the §5 perf-model autotuner
+(:mod:`repro.core.tuning`) — the model ranks candidates, the top few are
+measured (the family default always included, so tuning never regresses
+it), and winners are cached per (plan, shape, backend). Explicit block
+kwargs win over tuned values.
 """
 from __future__ import annotations
 
@@ -18,14 +26,13 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import tuning
 from . import ref
-from .ssam_conv1d import conv1d_causal as _pl_conv1d
-from .ssam_conv2d import conv2d_same as _pl_conv2d_same
-from .ssam_conv2d import conv2d_valid as _pl_conv2d_valid
-from .ssam_scan import cumsum as _pl_cumsum
-from .ssam_scan import linear_recurrence as _pl_linrec
-from .ssam_stencil2d import stencil2d as _pl_stencil2d
-from .ssam_stencil3d import stencil3d as _pl_stencil3d
+from . import ssam_conv1d as _c1
+from . import ssam_conv2d as _c2
+from . import ssam_scan as _sc
+from . import ssam_stencil2d as _s2
+from . import ssam_stencil3d as _s3
 from .stencils import BENCHMARKS, StencilDef
 
 
@@ -39,37 +46,95 @@ def _interp(impl: str) -> bool:
     return impl == "interpret"
 
 
-def conv2d(x, w, *, mode: str = "same", impl: str | None = None, **kw):
+_DEFAULTS = {
+    "conv2d": tuning.KernelConfig((8, 128)),
+    "stencil2d": tuning.KernelConfig((8, 128)),
+    "stencil3d": tuning.KernelConfig((4, 8, 128)),
+    "conv1d": tuning.KernelConfig((128, 128)),
+    "scan": tuning.KernelConfig((8, 128)),
+    "recurrence": tuning.KernelConfig((8, 128)),
+}
+
+
+def _tuned_kwargs(plan, shape, call, user_kw, *, time_steps: int = 1,
+                  context: tuple = ()) -> dict:
+    """Autotune block kwargs for ``call``; explicit user kwargs win.
+
+    The cache context carries everything that changes what the runner
+    measures beyond (plan, shape): op mode/impl and any caller-forced
+    kwargs — without it a winner measured under one context would be
+    silently replayed under another.
+    """
+    runner = lambda cfg: tuning.measure_us(
+        lambda: call(**{**cfg.as_kwargs(plan), **user_kw}))
+    res = tuning.autotune(plan, shape, time_steps=time_steps,
+                          default=_DEFAULTS[plan.kind], runner=runner,
+                          context=context + tuple(sorted(user_kw.items())),
+                          fixed=user_kw)
+    return {**res.config.as_kwargs(plan), **user_kw}
+
+
+def conv2d(x, w, *, mode: str = "same", impl: str | None = None,
+           autotune: bool = False, **kw):
     impl = impl or default_impl()
     if impl == "xla":
         return ref.conv2d_same(x, w) if mode == "same" else ref.conv2d_valid(x, w)
-    fn = _pl_conv2d_same if mode == "same" else _pl_conv2d_valid
-    return fn(x, w, interpret=_interp(impl), **kw)
+    fn = _c2.conv2d_same if mode == "same" else _c2.conv2d_valid
+    interpret = _interp(impl)
+    if autotune:
+        kw = _tuned_kwargs(
+            _c2.plan_for(w.shape), x.shape,
+            lambda **k: fn(x, w, interpret=interpret, **k), kw,
+            context=("conv2d", mode, impl))
+    return fn(x, w, interpret=interpret, **kw)
 
 
-def conv1d_causal(x, w, *, impl: str | None = None, **kw):
+def conv1d_causal(x, w, *, impl: str | None = None, autotune: bool = False,
+                  **kw):
     impl = impl or default_impl()
     if impl == "xla":
         return ref.conv1d_causal(x, w)
-    return _pl_conv1d(x, w, interpret=_interp(impl), **kw)
+    interpret = _interp(impl)
+    if autotune:
+        kw = _tuned_kwargs(
+            _c1.plan_for(w.shape[0]), x.shape,
+            lambda **k: _c1.conv1d_causal(x, w, interpret=interpret, **k), kw,
+            context=("conv1d", impl))
+    return _c1.conv1d_causal(x, w, interpret=interpret, **kw)
 
 
 def stencil(x, sdef: StencilDef | str, *, time_steps: int = 1,
-            impl: str | None = None, **kw):
+            impl: str | None = None, autotune: bool = False, **kw):
     impl = impl or default_impl()
     if isinstance(sdef, str):
         sdef = BENCHMARKS[sdef]
     if impl == "xla":
         return ref.stencil_iterate(x, sdef, time_steps)
-    fn = _pl_stencil2d if sdef.ndim == 2 else _pl_stencil3d
-    return fn(x, sdef, time_steps=time_steps, interpret=_interp(impl), **kw)
+    mod = _s2 if sdef.ndim == 2 else _s3
+    fn = mod.stencil2d if sdef.ndim == 2 else mod.stencil3d
+    interpret = _interp(impl)
+    if autotune:
+        kw = _tuned_kwargs(
+            mod.plan_for(sdef), x.shape,
+            lambda **k: fn(x, sdef, time_steps=time_steps,
+                           interpret=interpret, **k),
+            kw, time_steps=time_steps, context=("stencil", impl))
+    return fn(x, sdef, time_steps=time_steps, interpret=interpret, **kw)
 
 
-def cumsum(x, *, impl: str | None = None, **kw):
+def cumsum(x, *, impl: str | None = None, autotune: bool = False, **kw):
     impl = impl or default_impl()
     if impl == "xla":
         return ref.cumsum(x)
-    return _pl_cumsum(x, interpret=_interp(impl), **kw)
+    interpret = _interp(impl)
+    if autotune:
+        from repro.core.plan import scan_plan
+        plan = scan_plan(128)          # schedule signature for the cache key
+        kw = _tuned_kwargs(
+            plan, x.shape,
+            lambda **k: _sc.cumsum(x, interpret=interpret, **k), kw,
+            context=("cumsum", impl))
+    return _sc.cumsum(x, interpret=interpret, **kw)
 
 
 def sat(x, *, impl: str | None = None, **kw):
@@ -79,12 +144,21 @@ def sat(x, *, impl: str | None = None, **kw):
     return cumsum(rows.T, impl=impl, **kw).T
 
 
-def linear_recurrence(a, b, *, impl: str | None = None, **kw):
+def linear_recurrence(a, b, *, impl: str | None = None,
+                      autotune: bool = False, **kw):
     """h_t = a_t·h_{t−1} + b_t along the last axis of (R, T)-shaped a, b."""
     impl = impl or default_impl()
     if impl == "xla":
         return ref.linear_recurrence(a, b)
-    return _pl_linrec(a, b, interpret=_interp(impl), **kw)
+    interpret = _interp(impl)
+    if autotune:
+        from repro.core.plan import linear_recurrence_plan
+        plan = linear_recurrence_plan(128)
+        kw = _tuned_kwargs(
+            plan, a.shape,
+            lambda **k: _sc.linear_recurrence(a, b, interpret=interpret, **k),
+            kw, context=("linrec", impl))
+    return _sc.linear_recurrence(a, b, interpret=interpret, **kw)
 
 
 # ---------------------------------------------------------------------------

@@ -1,38 +1,29 @@
-"""SSAM depthwise causal 1-D convolution Pallas kernel.
+"""SSAM depthwise causal 1-D convolution as a plan over the engine.
 
 The short depthwise convolution of Mamba-style blocks (Hymba's mamba
-branch; RWKV's token-shift is the K=2 special case). Layout maps
-*channels* to the VREG lane axis and *time* to sublanes, so the conv taps
-walk the **vertical** (in-register, cheap) direction of Fig. 1d — per the
-paper's §5.4 guidance to route dependencies through the cheap direction
-whenever the dependency graph D allows it. No lane rolls are needed at
-all: this is the ``D``-optimal SSAM mapping for depthwise conv, with the
-register cache of §4.2 (each lane caches ``C = K + BT − 1`` elements,
-sliding window of ``BT`` outputs).
-
-Overlapped blocking along time via ``pl.Element`` input specs (§4.5).
+branch; RWKV's token-shift is the K=2 special case). The plan
+(:func:`repro.core.plan.depthwise_conv1d_plan`) maps *channels* to the
+lane axis and *time* to sublanes, so the conv taps walk the **vertical**
+(in-register, cheap) direction of Fig. 1d — per the paper's §5.4
+guidance to route dependencies through the cheap direction whenever the
+dependency graph D allows it. No lane rolls at all: M=1. Causality, the
+overlapped time-blocking, and the batch grid axis all come from the
+plan's lead/batch fields via :func:`repro.core.engine.run_window_plan`.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
+
+from repro.core.engine import run_window_plan
+from repro.core.plan import depthwise_conv1d_plan
 
 
-def _conv1d_kernel(x_ref, w_ref, o_ref, *, K: int, BT: int, acc_dtype):
-    xb = x_ref[0].astype(acc_dtype)          # (BT + K − 1, BD)
-    wb = w_ref[:].astype(acc_dtype)          # (K, BD)
-    s = jnp.zeros((BT, xb.shape[1]), acc_dtype)
-    for k in range(K):                       # vertical taps only (cheap dir.)
-        s = s + xb[k : k + BT, :] * wb[k, :]
-    o_ref[0] = s.astype(o_ref.dtype)
+def plan_for(K: int):
+    """The D-optimal depthwise plan for a length-``K`` filter."""
+    return depthwise_conv1d_plan(K)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("block_t", "block_d", "interpret", "acc_dtype")
-)
 def conv1d_causal(
     x: jax.Array,
     w: jax.Array,
@@ -48,28 +39,9 @@ def conv1d_causal(
       x: ``(B, T, D)`` input.
       w: ``(K, D)`` per-channel filter taps (tap K−1 multiplies x[t]).
     """
-    B, T, D = x.shape
     K, Dw = w.shape
-    assert Dw == D, (w.shape, x.shape)
-    BT, BD = min(block_t, T), min(block_d, D)
-    gt, gd = pl.cdiv(T, BT), pl.cdiv(D, BD)
-    # causal: K−1 zeros in front; pad tail/channels up to whole tiles
-    xp = jnp.pad(x, ((0, 0), (K - 1, gt * BT - T), (0, gd * BD - D)))
-    wp = jnp.pad(w, ((0, 0), (0, gd * BD - D)))
-
-    kern = functools.partial(_conv1d_kernel, K=K, BT=BT, acc_dtype=acc_dtype)
-    out = pl.pallas_call(
-        kern,
-        grid=(B, gt, gd),
-        in_specs=[
-            pl.BlockSpec(
-                (pl.Element(1), pl.Element(BT + K - 1), pl.Element(BD)),
-                lambda b, i, j: (b, i * BT, j * BD),
-            ),
-            pl.BlockSpec((K, BD), lambda b, i, j: (0, j)),
-        ],
-        out_specs=pl.BlockSpec((1, BT, BD), lambda b, i, j: (b, i, j)),
-        out_shape=jax.ShapeDtypeStruct((B, gt * BT, gd * BD), x.dtype),
-        interpret=interpret,
-    )(xp, wp)
-    return out[:, :T, :D]
+    assert Dw == x.shape[-1], (w.shape, x.shape)
+    return run_window_plan(
+        x, w, plan=plan_for(K), block=(block_t, block_d),
+        interpret=interpret, acc_dtype=acc_dtype,
+    )

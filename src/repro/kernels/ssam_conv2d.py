@@ -1,69 +1,33 @@
-"""SSAM 2-D convolution Pallas TPU kernel — the paper's Listing 1 on TPU.
+"""SSAM 2-D convolution — the paper's Listing 1 as a plan over the engine.
 
-Schedule (DESIGN.md §2): the image x-axis maps to the 128-wide VREG lane
-axis (the "warp"), the sliding window of §4.2 is vectorized across
-sublanes (``BH`` output rows per grid step play the paper's ``P``), and
-the M filter columns are the systolic steps — partial sums are *rolled*
-one lane per step (the ``__shfl_up_sync`` of §4.4) and accumulated with
-an FMA against filter column m:
+Schedule (DESIGN.md §2): the image x-axis maps to the lane axis (the
+"warp"), the sliding window of §4.2 is vectorized across sublanes
+(``block_h`` output rows play the paper's ``P``), and the M filter
+columns are the systolic steps — partial sums roll one lane per step
+(the ``__shfl_up_sync`` of §4.4) and accumulate an FMA against filter
+column m (Eq. 1).
 
-    s ← roll(s, 1); s ← s ⊕ data[i+n, :] ⊗ w[n, m]        (Eq. 1)
-
-Overlapped blocking (§4.5) is expressed with ``pl.Element`` input
-BlockSpecs: output tiles are disjoint, input tiles overlap by the
-``(N−1, M−1)`` halo, so grid steps never communicate — the TPU analogue
-of the paper's branch-free warp blocks.
-
-Two schedule variants are provided (DESIGN.md §2, third deviation):
-
-* ``variant="shift_psum"`` — paper-faithful: the *partial sums* move.
-* ``variant="shift_data"`` — re-associated: the accumulator stays put and
-  the data vector is rolled instead; on TPU this breaks the
-  roll→FMA→roll dependency chain on the accumulator (the rolls of all M
-  steps become independent and can issue in parallel with FMAs). Output
-  is bit-identical for f32 because the same products are added in the
-  same order per lane.
+This module is a thin plan builder: :func:`repro.core.plan.conv2d_plan`
+describes the schedule, :func:`repro.core.engine.run_window_plan` lowers
+it — overlapped blocking, halo padding, valid-lane crop and both
+schedule variants (``shift_psum``/``shift_data``, DESIGN.md §2) all come
+from the engine.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
+
+from repro.core.engine import run_window_plan
+from repro.core.plan import conv2d_plan
 
 
-def _conv2d_kernel(x_ref, w_ref, o_ref, *, M: int, N: int, BH: int, BW: int,
-                   variant: str, acc_dtype):
-    """One overlapped block: x_ref (BH+N−1, BW+M−1) → o_ref (BH, BW)."""
-    xb = x_ref[:].astype(acc_dtype)
-    BWin = BW + M - 1
-    s = jnp.zeros((BH, BWin), acc_dtype)
-    if variant == "shift_psum":
-        # Paper Listing 1: shift the partial sums, lane j accumulates the
-        # column-m inner product of lane j while carrying lane j−1's sum.
-        for m in range(M):
-            if m > 0:
-                s = jnp.roll(s, 1, axis=1)
-            for n in range(N):
-                s = s + xb[n : n + BH, :] * w_ref[n, m]
-        out = s[:, M - 1 : M - 1 + BW]
-    else:
-        # Re-associated "stationary output": roll the *data* left by m so
-        # each lane j accumulates x[:, j+m]·w[:, m] directly. Same sums,
-        # no serial dependency through the accumulator's rolls.
-        for m in range(M):
-            xm = xb if m == 0 else jnp.roll(xb, -m, axis=1)
-            for n in range(N):
-                s = s + xm[n : n + BH, :] * w_ref[n, m]
-        out = s[:, :BW]
-    o_ref[:] = out.astype(o_ref.dtype)
+def plan_for(w_shape: tuple[int, int]):
+    """The systolic plan lowered for an ``(N, M)`` filter."""
+    N, M = w_shape
+    return conv2d_plan(M, N)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("block_h", "block_w", "variant", "interpret", "acc_dtype"),
-)
 def conv2d_valid(
     x: jax.Array,
     w: jax.Array,
@@ -74,42 +38,11 @@ def conv2d_valid(
     interpret: bool = True,
     acc_dtype=jnp.float32,
 ) -> jax.Array:
-    """Valid-mode 2-D cross-correlation ``(H, W) ⋆ (N, M) → (H−N+1, W−M+1)``.
-
-    The driver pads the image up to whole output tiles (zeros land in the
-    cropped region), builds the overlapped-block grid and invokes the
-    systolic kernel. ``interpret=True`` runs the kernel body on CPU; on a
-    real TPU pass ``interpret=False``.
-    """
-    H, W = x.shape
-    N, M = w.shape
-    out_h, out_w = H - N + 1, W - M + 1
-    BH, BW = block_h, block_w
-    gh, gw = pl.cdiv(out_h, BH), pl.cdiv(out_w, BW)
-    # Pad so every (incl. last) overlapped input block is in-bounds.
-    pad_h = gh * BH + N - 1 - H
-    pad_w = gw * BW + M - 1 - W
-    xp = jnp.pad(x, ((0, pad_h), (0, pad_w)))
-
-    kern = functools.partial(
-        _conv2d_kernel, M=M, N=N, BH=BH, BW=BW, variant=variant,
-        acc_dtype=acc_dtype,
+    """Valid-mode 2-D cross-correlation ``(H, W) ⋆ (N, M) → (H−N+1, W−M+1)``."""
+    return run_window_plan(
+        x, w, plan=plan_for(w.shape), block=(block_h, block_w),
+        variant=variant, interpret=interpret, acc_dtype=acc_dtype,
     )
-    out = pl.pallas_call(
-        kern,
-        grid=(gh, gw),
-        in_specs=[
-            pl.BlockSpec(
-                (pl.Element(BH + N - 1), pl.Element(BW + M - 1)),
-                lambda i, j: (i * BH, j * BW),
-            ),
-            pl.BlockSpec((N, M), lambda i, j: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((BH, BW), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((gh * BH, gw * BW), x.dtype),
-        interpret=interpret,
-    )(xp, w)
-    return out[:out_h, :out_w]
 
 
 def conv2d_same(x: jax.Array, w: jax.Array, **kw) -> jax.Array:

@@ -1,55 +1,37 @@
-"""SSAM scan kernels — Kogge–Stone over the VREG lane axis (paper §3.6).
+"""SSAM scan kernels — Kogge–Stone plans over the engine (paper §3.6).
 
 Two memory-bound primitives built from the same masked shift-accumulate
 schedule (Fig. 1e — the ``ctrl()`` of Eq. 1 gates each arrow):
 
-* :func:`cumsum` — inclusive prefix sum along time.
+* :func:`cumsum` — inclusive prefix sum along time
+  (:func:`repro.core.plan.scan_plan`, combine='add').
 * :func:`linear_recurrence` — ``h_t = a_t · h_{t−1} + b_t`` via
-  Kogge–Stone over the affine transfer pairs ``(a, b)``. This is the
-  execution engine for the RWKV6 WKV recurrence and the Hymba/Mamba
-  selective scan (DESIGN.md §3).
+  Kogge–Stone over the affine transfer pairs ``(a, b)``
+  (:func:`repro.core.plan.linear_recurrence_plan`, combine='linrec').
+  This is the execution engine for the RWKV6 WKV recurrence and the
+  Hymba/Mamba selective scan (DESIGN.md §3).
 
-Layout: time on the 128-lane axis (the systolic "warp"), independent
+Layout: time on the lane axis (the systolic "warp"), independent
 channels on sublanes. Inter-block carries ride in a VMEM scratch
 accumulator across sequential grid steps — the TPU analogue of the
 paper's inter-warp scratchpad accumulation (§4.9), used only *between*
-systolic blocks exactly as SSAM prescribes ("we do not limit the use of
-scratchpad for inter-warp communication", §1).
+systolic blocks exactly as SSAM prescribes (§1). The lowering is
+:func:`repro.core.engine.run_scan_plan`.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.engine import run_scan_plan
+from repro.core.plan import linear_recurrence_plan, scan_plan
 
 
-def _lane_index(shape, axis):
-    return jax.lax.broadcasted_iota(jnp.int32, shape, axis)
+def _lane_tile(block_t: int, T: int) -> int:
+    """Largest power-of-two lane tile ≤ min(block_t, T)."""
+    return 1 << (min(block_t, T).bit_length() - 1)
 
 
-def _cumsum_kernel(x_ref, o_ref, carry, *, BT: int, acc_dtype):
-    @pl.when(pl.program_id(1) == 0)
-    def _reset():
-        carry[:] = jnp.zeros_like(carry)
-
-    s = x_ref[:].astype(acc_dtype)           # (BR, BT)
-    lane = _lane_index(s.shape, 1)
-    d = 1
-    while d < BT:                             # Kogge–Stone: log2(BT) steps
-        shifted = jnp.roll(s, d, axis=1)
-        s = s + jnp.where(lane >= d, shifted, jnp.zeros_like(s))
-        d *= 2
-    s = s + carry[:]                          # inter-block carry (scratchpad)
-    carry[:] = s[:, -1:]
-    o_ref[:] = s.astype(o_ref.dtype)
-
-
-@functools.partial(
-    jax.jit, static_argnames=("block_r", "block_t", "interpret", "acc_dtype")
-)
 def cumsum(
     x: jax.Array,
     *,
@@ -59,50 +41,11 @@ def cumsum(
     acc_dtype=jnp.float32,
 ) -> jax.Array:
     """Inclusive prefix sum along the last axis of ``(R, T)``."""
-    R, T = x.shape
-    BR = min(block_r, R)
-    BT = 1 << (min(block_t, T).bit_length() - 1)   # largest pow2 ≤ min
-    gr, gt = pl.cdiv(R, BR), pl.cdiv(T, BT)
-    xp = jnp.pad(x, ((0, gr * BR - R), (0, gt * BT - T)))
-    kern = functools.partial(_cumsum_kernel, BT=BT, acc_dtype=acc_dtype)
-    out = pl.pallas_call(
-        kern,
-        grid=(gr, gt),                        # T sequential per row-tile
-        in_specs=[pl.BlockSpec((BR, BT), lambda i, j: (i, j))],
-        out_specs=pl.BlockSpec((BR, BT), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((gr * BR, gt * BT), x.dtype),
-        scratch_shapes=[pltpu.VMEM((BR, 1), acc_dtype)],
-        interpret=interpret,
-    )(xp)
-    return out[:R, :T]
+    plan = scan_plan(_lane_tile(block_t, x.shape[-1]))
+    return run_scan_plan(x, plan=plan, block_r=block_r, interpret=interpret,
+                         acc_dtype=acc_dtype)
 
 
-def _linrec_kernel(a_ref, b_ref, o_ref, hcarry, *, BT: int, acc_dtype):
-    @pl.when(pl.program_id(1) == 0)
-    def _reset():
-        hcarry[:] = jnp.zeros_like(hcarry)
-
-    A = a_ref[:].astype(acc_dtype)            # (BR, BT) transfer pairs
-    B = b_ref[:].astype(acc_dtype)
-    lane = _lane_index(A.shape, 1)
-    d = 1
-    while d < BT:                             # KS over (a,b) pairs
-        As = jnp.roll(A, d, axis=1)
-        Bs = jnp.roll(B, d, axis=1)
-        ctrl = lane >= d                      # ctrl() of Eq. 1
-        As = jnp.where(ctrl, As, jnp.ones_like(As))
-        Bs = jnp.where(ctrl, Bs, jnp.zeros_like(Bs))
-        A, B = A * As, A * Bs + B             # f_t ∘ f_{t−d}
-        d *= 2
-    # h_t = A_prefix_t · h_carry + B_local_t ; carry the block's last h.
-    h = A * hcarry[:] + B
-    hcarry[:] = h[:, -1:]
-    o_ref[:] = h.astype(o_ref.dtype)
-
-
-@functools.partial(
-    jax.jit, static_argnames=("block_r", "block_t", "interpret", "acc_dtype")
-)
 def linear_recurrence(
     a: jax.Array,
     b: jax.Array,
@@ -114,27 +57,10 @@ def linear_recurrence(
 ) -> jax.Array:
     """Solve ``h_t = a_t · h_{t−1} + b_t`` (h₋₁=0) along the last axis of (R, T).
 
-    Padding note: ``a`` is padded with ones and ``b`` with zeros so padded
-    tail steps are identity transfers.
+    Padding note (engine): ``a`` pads with ones and ``b`` with zeros so
+    padded tail steps are identity transfers.
     """
-    R, T = a.shape
     assert a.shape == b.shape
-    BR = min(block_r, R)
-    BT = 1 << (min(block_t, T).bit_length() - 1)   # largest pow2 ≤ min
-    gr, gt = pl.cdiv(R, BR), pl.cdiv(T, BT)
-    ap = jnp.pad(a, ((0, gr * BR - R), (0, gt * BT - T)), constant_values=1)
-    bp = jnp.pad(b, ((0, gr * BR - R), (0, gt * BT - T)))
-    kern = functools.partial(_linrec_kernel, BT=BT, acc_dtype=acc_dtype)
-    out = pl.pallas_call(
-        kern,
-        grid=(gr, gt),
-        in_specs=[
-            pl.BlockSpec((BR, BT), lambda i, j: (i, j)),
-            pl.BlockSpec((BR, BT), lambda i, j: (i, j)),
-        ],
-        out_specs=pl.BlockSpec((BR, BT), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((gr * BR, gt * BT), a.dtype),
-        scratch_shapes=[pltpu.VMEM((BR, 1), acc_dtype)],
-        interpret=interpret,
-    )(ap, bp)
-    return out[:R, :T]
+    plan = linear_recurrence_plan(_lane_tile(block_t, a.shape[-1]))
+    return run_scan_plan(a, b, plan=plan, block_r=block_r,
+                         interpret=interpret, acc_dtype=acc_dtype)

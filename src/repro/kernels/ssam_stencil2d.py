@@ -1,69 +1,34 @@
-"""SSAM 2-D stencil Pallas kernel — the paper's Listing 2 generalized.
+"""SSAM 2-D stencil — the paper's Listing 2 as a plan over the engine.
 
-Schedule: identical dataflow to :mod:`repro.kernels.ssam_conv2d`, but the
-taps are grouped by *column offset* exactly as Listing 2 groups the
+Taps are grouped by *column offset* exactly as Listing 2 groups the
 5-point stencil into {West}, {North, Current, South}, {East} — one
 lane-roll of the partial sums per column, sparse vertical taps within a
-column. Coefficients are compiled as immediates (the paper passes stencil
-coefficients as kernel arguments, §4.8).
+column. Coefficients are compiled as immediates on the plan (the paper
+passes stencil coefficients as kernel arguments, §4.8).
 
-Temporal blocking (paper §6.4 / Fig. 6 comparison): ``time_steps > 1``
-applies the stencil t times *inside* the block over a halo widened to
-``t`` footprints — partial iterates never leave VMEM/VREGs. The valid
-region of a block shrinks by one footprint per step (classic overlapped /
-trapezoidal temporal blocking [21, 62]). Semantics (shared with
-``ref.stencil2d_iterate``): the domain is zero-padded once by ``t``
-footprints, then ``t`` *valid* applications follow — for ``t=1`` this is
-the usual same-shape zero-boundary stencil step.
+Temporal blocking (paper §6.4 / Fig. 6): ``time_steps > 1`` applies the
+stencil t times *inside* the block over a halo widened to ``t``
+footprints — partial iterates never leave VMEM/VREGs. Semantics (shared
+with ``ref.stencil_iterate``): the domain is zero-padded once by ``t``
+footprints, then ``t`` *valid* applications follow. All of the geometry
+lives in the plan's lead/trail fields; the lowering is the generic
+:func:`repro.core.engine.run_window_plan`.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
+from repro.core.engine import run_window_plan
 from repro.core.plan import stencil2d_plan
 from .stencils import StencilDef
 
 
-def _footprint2d(sdef: StencilDef) -> tuple[int, int, int, int]:
-    """(lo_dy, hi_dy, lo_dx, hi_dx) of the tap footprint (lo ≤ 0 ≤ hi)."""
-    dys = [o[0] for o in sdef.offsets]
-    dxs = [o[1] for o in sdef.offsets]
-    lo_dy, hi_dy, lo_dx, hi_dx = min(dys), max(dys), min(dxs), max(dxs)
-    assert lo_dy <= 0 <= hi_dy and lo_dx <= 0 <= hi_dx, sdef.name
-    return lo_dy, hi_dy, lo_dx, hi_dx
+def plan_for(sdef: StencilDef):
+    """The systolic plan for a 2-D stencil definition (coeffs baked in)."""
+    return stencil2d_plan(sdef.offsets, coeffs=sdef.coeffs)
 
 
-def _stencil2d_kernel(x_ref, o_ref, *, sdef: StencilDef, BH: int, BW: int,
-                      time_steps: int, acc_dtype):
-    lo_dy, hi_dy, lo_dx, hi_dx = _footprint2d(sdef)
-    N = hi_dy - lo_dy + 1
-    M = hi_dx - lo_dx + 1
-    plan = stencil2d_plan(sdef.offsets, S=BW, P=BH)
-    xb = x_ref[:].astype(acc_dtype)
-    for _ in range(time_steps):
-        h = xb.shape[0] - (N - 1)        # valid rows of this iterate
-        w = xb.shape[1] - (M - 1)        # valid lanes of this iterate
-        s = jnp.zeros((h, xb.shape[1]), acc_dtype)
-        for step in plan.steps:          # one systolic step per column
-            if step.shift:
-                s = jnp.roll(s, step.shift, axis=1)
-            for tap in step.taps:
-                c = sdef.coeffs[tap.coeff_id[0]]
-                s = s + xb[tap.row_offset : tap.row_offset + h, :] * c
-        # valid lanes after M−1 rolls start at lane M−1 (§4.4)
-        xb = s[:, M - 1 : M - 1 + w]
-    o_ref[:] = xb[:BH, :BW].astype(o_ref.dtype)
-
-
-@functools.partial(
-    jax.jit,
-    static_argnames=("sdef", "block_h", "block_w", "time_steps", "interpret",
-                     "acc_dtype"),
-)
 def stencil2d(
     x: jax.Array,
     sdef: StencilDef,
@@ -71,40 +36,14 @@ def stencil2d(
     block_h: int = 8,
     block_w: int = 128,
     time_steps: int = 1,
+    variant: str = "shift_psum",
     interpret: bool = True,
     acc_dtype=jnp.float32,
 ) -> jax.Array:
     """Apply ``sdef`` to ``x`` ``time_steps`` times (zero boundary, same shape)."""
     assert sdef.ndim == 2
-    H, W = x.shape
-    lo_dy, hi_dy, lo_dx, hi_dx = _footprint2d(sdef)
-    N = hi_dy - lo_dy + 1
-    M = hi_dx - lo_dx + 1
-    t = time_steps
-    top, left = t * (-lo_dy), t * (-lo_dx)
-    BH, BW = block_h, block_w
-    gh, gw = pl.cdiv(H, BH), pl.cdiv(W, BW)
-    # Padded array: origin shifted by (top, left); total size covers the
-    # last overlapped block.
-    pad_bot = gh * BH + t * (N - 1) - top - H
-    pad_right = gw * BW + t * (M - 1) - left - W
-    xp = jnp.pad(x, ((top, pad_bot), (left, pad_right)))
-
-    kern = functools.partial(
-        _stencil2d_kernel, sdef=sdef, BH=BH, BW=BW, time_steps=t,
+    return run_window_plan(
+        x, plan=plan_for(sdef), block=(block_h, block_w),
+        time_steps=time_steps, variant=variant, interpret=interpret,
         acc_dtype=acc_dtype,
     )
-    out = pl.pallas_call(
-        kern,
-        grid=(gh, gw),
-        in_specs=[
-            pl.BlockSpec(
-                (pl.Element(BH + t * (N - 1)), pl.Element(BW + t * (M - 1))),
-                lambda i, j: (i * BH, j * BW),
-            ),
-        ],
-        out_specs=pl.BlockSpec((BH, BW), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((gh * BH, gw * BW), x.dtype),
-        interpret=interpret,
-    )(xp)
-    return out[:H, :W]

@@ -1,70 +1,30 @@
-"""SSAM 3-D stencil Pallas kernel (paper §4.9, TPU-adapted).
+"""SSAM 3-D stencil (paper §4.9, TPU-adapted) as a plan over the engine.
 
 On GPU the paper processes one X–Y slice per warp and accumulates the Z
 direction through *shared memory* (inter-warp). On TPU the whole 3-D
 sub-block lives in one kernel invocation, so Z taps are simply additional
 vertical taps into the VREG-resident block — partial sums never touch
 scratchpad (DESIGN.md §7.5). The lane-roll systolic schedule runs along X
-exactly as in 2-D; Y and Z are in-register (sublane / array-dim) reads.
-
-Supports the same trapezoidal temporal blocking as the 2-D kernel.
+exactly as in 2-D; Y and Z are in-register reads, carried in the plan as
+``Tap.row_offset``/``Tap.z_offset``. Supports the same trapezoidal
+temporal blocking as the 2-D kernel; lowering is the generic
+:func:`repro.core.engine.run_window_plan`.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
+from repro.core.engine import run_window_plan
 from repro.core.plan import stencil3d_plan
 from .stencils import StencilDef
 
 
-def _footprint3d(sdef: StencilDef):
-    los, his = [], []
-    for axis in range(3):
-        vals = [o[axis] for o in sdef.offsets]
-        lo, hi = min(vals), max(vals)
-        assert lo <= 0 <= hi, sdef.name
-        los.append(lo)
-        his.append(hi)
-    return tuple(los), tuple(his)
+def plan_for(sdef: StencilDef):
+    """The systolic plan for a 3-D stencil definition (coeffs baked in)."""
+    return stencil3d_plan(sdef.offsets, coeffs=sdef.coeffs)
 
 
-def _stencil3d_kernel(x_ref, o_ref, *, sdef: StencilDef, BZ: int, BH: int,
-                      BW: int, time_steps: int, acc_dtype):
-    los, his = _footprint3d(sdef)
-    D = his[0] - los[0] + 1
-    N = his[1] - los[1] + 1
-    M = his[2] - los[2] + 1
-    plan = stencil3d_plan(sdef.offsets, S=BW, P=BH)
-    xb = x_ref[:].astype(acc_dtype)
-    for _ in range(time_steps):
-        zd = xb.shape[0] - (D - 1)
-        h = xb.shape[1] - (N - 1)
-        w = xb.shape[2] - (M - 1)
-        s = jnp.zeros((zd, h, xb.shape[2]), acc_dtype)
-        for step in plan.steps:
-            if step.shift:
-                s = jnp.roll(s, step.shift, axis=2)
-            for tap in step.taps:
-                z_off, k = tap.coeff_id
-                c = sdef.coeffs[k]
-                s = s + xb[
-                    z_off : z_off + zd,
-                    tap.row_offset : tap.row_offset + h,
-                    :,
-                ] * c
-        xb = s[:, :, M - 1 : M - 1 + w]
-    o_ref[:] = xb[:BZ, :BH, :BW].astype(o_ref.dtype)
-
-
-@functools.partial(
-    jax.jit,
-    static_argnames=("sdef", "block_z", "block_h", "block_w", "time_steps",
-                     "interpret", "acc_dtype"),
-)
 def stencil3d(
     x: jax.Array,
     sdef: StencilDef,
@@ -73,44 +33,14 @@ def stencil3d(
     block_h: int = 8,
     block_w: int = 128,
     time_steps: int = 1,
+    variant: str = "shift_psum",
     interpret: bool = True,
     acc_dtype=jnp.float32,
 ) -> jax.Array:
     """Apply ``sdef`` to ``x`` (Z, Y, X) ``time_steps`` times (zero boundary)."""
     assert sdef.ndim == 3
-    Z, H, W = x.shape
-    los, his = _footprint3d(sdef)
-    D = his[0] - los[0] + 1
-    N = his[1] - los[1] + 1
-    M = his[2] - los[2] + 1
-    t = time_steps
-    front, top, left = t * (-los[0]), t * (-los[1]), t * (-los[2])
-    BZ, BH, BW = block_z, block_h, block_w
-    gz, gh, gw = pl.cdiv(Z, BZ), pl.cdiv(H, BH), pl.cdiv(W, BW)
-    pad_back = gz * BZ + t * (D - 1) - front - Z
-    pad_bot = gh * BH + t * (N - 1) - top - H
-    pad_right = gw * BW + t * (M - 1) - left - W
-    xp = jnp.pad(x, ((front, pad_back), (top, pad_bot), (left, pad_right)))
-
-    kern = functools.partial(
-        _stencil3d_kernel, sdef=sdef, BZ=BZ, BH=BH, BW=BW, time_steps=t,
+    return run_window_plan(
+        x, plan=plan_for(sdef), block=(block_z, block_h, block_w),
+        time_steps=time_steps, variant=variant, interpret=interpret,
         acc_dtype=acc_dtype,
     )
-    out = pl.pallas_call(
-        kern,
-        grid=(gz, gh, gw),
-        in_specs=[
-            pl.BlockSpec(
-                (
-                    pl.Element(BZ + t * (D - 1)),
-                    pl.Element(BH + t * (N - 1)),
-                    pl.Element(BW + t * (M - 1)),
-                ),
-                lambda i, j, k: (i * BZ, j * BH, k * BW),
-            ),
-        ],
-        out_specs=pl.BlockSpec((BZ, BH, BW), lambda i, j, k: (i, j, k)),
-        out_shape=jax.ShapeDtypeStruct((gz * BZ, gh * BH, gw * BW), x.dtype),
-        interpret=interpret,
-    )(xp)
-    return out[:Z, :H, :W]

@@ -75,6 +75,11 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    # cost_analysis() shape varies by jax version/backend: dict, [dict],
+    # or None; some CPU builds omit the "flops" key entirely.
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    cost = dict(cost or {})
     hlo = compiled.as_text()
     coll = collective_bytes_from_hlo(hlo)
     # Trip-count-aware roll-up (XLA's cost_analysis counts while bodies
@@ -87,8 +92,11 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str,
         model_flops=cell.model_flops,
         lower_s=round(t_lower, 2),
         compile_s=round(t_compile, 2),
-        cost={k: cost[k] for k in ("flops", "bytes accessed")
-              if k in cost},
+        cost={**{k: cost[k] for k in ("flops", "bytes accessed")
+                 if k in cost},
+              # backfill from the trip-count-aware HLO roll-up when the
+              # XLA backend doesn't report a flops estimate
+              **({} if "flops" in cost else {"flops": hc.flops})},
         memory={
             "argument_size_bytes": getattr(mem, "argument_size_in_bytes", None),
             "output_size_bytes": getattr(mem, "output_size_in_bytes", None),

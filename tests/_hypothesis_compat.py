@@ -1,0 +1,79 @@
+"""Deterministic stand-in for ``hypothesis`` on bare environments.
+
+When the real hypothesis package is unavailable, ``@given`` degrades to a
+fixed number of seeded pseudo-random examples per test (boundary values
+first), so the property tests still run — with less search power but the
+same assertions. Only the strategy surface this repo uses is provided
+(``integers``, ``sampled_from``, ``floats``).
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+
+_MAX_EXAMPLES = 8
+_SEED = 0x55A4
+
+
+class _Strategy:
+    def __init__(self, draw, boundaries=()):
+        self._draw = draw
+        self._boundaries = tuple(boundaries)
+
+    def example(self, rnd: random.Random, i: int):
+        if i < len(self._boundaries):
+            return self._boundaries[i]
+        return self._draw(rnd)
+
+
+def _integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda r: r.randint(min_value, max_value),
+                     boundaries=(min_value, max_value))
+
+
+def _sampled_from(seq) -> _Strategy:
+    seq = list(seq)
+    return _Strategy(lambda r: r.choice(seq), boundaries=seq[:2])
+
+
+def _floats(min_value: float, max_value: float, **_ignored) -> _Strategy:
+    return _Strategy(lambda r: r.uniform(min_value, max_value),
+                     boundaries=(min_value, max_value))
+
+
+strategies = types.SimpleNamespace(
+    integers=_integers, sampled_from=_sampled_from, floats=_floats,
+)
+
+
+def given(**strats):
+    """Run the test once per deterministic example of the strategies."""
+
+    def deco(fn):
+        sig = inspect.signature(fn)
+        remaining = [p for name, p in sig.parameters.items()
+                     if name not in strats]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rnd = random.Random(_SEED)
+            for i in range(_MAX_EXAMPLES):
+                drawn = {n: s.example(rnd, i) for n, s in strats.items()}
+                fn(*args, **drawn, **kwargs)
+
+        # pytest must see the signature *without* the strategy-provided
+        # params, or it would look for fixtures named like them.
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco
+
+
+def settings(*args, **_kwargs):
+    """No-op settings decorator (max_examples is fixed in this shim)."""
+    if args and callable(args[0]):
+        return args[0]
+    return lambda fn: fn

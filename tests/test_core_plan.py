@@ -8,7 +8,10 @@ arbitrary shapes/filters.
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare env: deterministic fallback examples
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (conv2d_plan, execute_conv_block, execute_conv_global,
                         execute_linear_recurrence, execute_scan,

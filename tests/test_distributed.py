@@ -12,7 +12,10 @@ import textwrap
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare env: deterministic fallback examples
+    from _hypothesis_compat import given, settings, strategies as st
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 

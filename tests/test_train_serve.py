@@ -52,12 +52,16 @@ class TestTrainLoop:
         out = run_train(common + ["--ckpt-dir", ck1])
         assert "resumed from step 5" in out
         # final checkpoints bit-identical (same data stream, deterministic)
-        from repro.checkpointing.checkpoint import load_checkpoint
-        import msgpack, zstandard
+        import msgpack
+        from repro.checkpointing import checkpoint as ckpt
         def final(d):
-            raw = zstandard.ZstdDecompressor().decompress(
-                open(os.path.join(d, "step_00000010", "tree.msgpack.zst"),
-                     "rb").read())
+            step_dir = os.path.join(d, "step_00000010")
+            zst = os.path.join(step_dir, ckpt._COMPRESSED)
+            if os.path.exists(zst):          # zstandard installed
+                raw = ckpt.zstandard.ZstdDecompressor().decompress(
+                    open(zst, "rb").read())
+            else:                            # bare env: raw msgpack fallback
+                raw = open(os.path.join(step_dir, ckpt._RAW), "rb").read()
             return msgpack.unpackb(raw, raw=False)
         a, b = final(ck1), final(ck2)
         assert a.keys() == b.keys()
