@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV rows per the repo convention.
 | bench_temporal_blocking   | Fig. 6         | fused t-step stencil vs t separate steps |
 | bench_perf_model          | Table 2/§5     | hardware latency tables, L_smem/L_reg/AvgDif, halo ratios |
 | bench_scan                | §3.6           | Kogge–Stone cumsum / linear recurrence vs lax reference |
+| bench_sharded (--mesh AxB)| (beyond paper) | sharded halo-exchange vs single device: per-device bandwidth + §5 scaling prediction |
 | bench_lm_roofline         | (assignment)   | summary of dry-run roofline artifacts |
 
 The container is CPU-only: wall-times are CPU XLA numbers that compare
@@ -239,6 +240,91 @@ def bench_autotune(size2d: int = 192, size3d: int = 32):
 
 
 # ---------------------------------------------------------------------------
+# Sharded halo-exchange: per-device bandwidth vs the §5 model (--mesh AxB)
+# ---------------------------------------------------------------------------
+
+def bench_sharded(mesh_shape: tuple[int, ...], size2d: int = 256,
+                  size3d: int = 32, time_steps: int = 1):
+    """Sharded vs single-device engine wall-time on an ``AxB`` host mesh.
+
+    Reports per-device *achieved* bandwidth (8 bytes per cell per step:
+    one f32 read + one write of useful traffic) next to the §5 model's
+    per-element cost for the shard-local halo-extended block — whose
+    ratio to the single-device cost is the model's predicted scaling
+    efficiency (the halo a shard re-loads is exactly the §5.3
+    redundancy term evaluated at the shard size).
+    """
+    import math as _math
+
+    from repro.core import tuning
+    from repro.kernels import ops
+    from repro.kernels import ssam_stencil2d, ssam_stencil3d
+    from repro.launch.mesh import make_domain_mesh
+    from repro.kernels.stencils import BENCHMARKS
+
+    ndev = _math.prod(mesh_shape)
+    if jax.device_count() < ndev:
+        print(f"# sharded: need {ndev} devices, have {jax.device_count()} — "
+              "set XLA_FLAGS=--xla_force_host_platform_device_count="
+              f"{ndev} (or run on a {ndev}-chip mesh)")
+        return
+    mesh = make_domain_mesh(mesh_shape)
+    rng = np.random.default_rng(0)
+    print(f"# Sharded halo exchange on {'x'.join(map(str, mesh_shape))} mesh "
+          f"(2D {size2d}^2, 3D {size3d}^3, t={time_steps}, interpret-mode "
+          "wall-time; CPU numbers compare schedules, not TPU perf)")
+    for name in ("2d5pt", "2d9pt", "2ds25pt", "2d121pt", "3d7pt", "poisson"):
+        sdef = BENCHMARKS[name]
+        from repro.distributed import halo_exchange as hx
+        if sdef.ndim == 2:
+            x = jnp.array(rng.standard_normal((size2d, size2d)), jnp.float32)
+            mod = ssam_stencil2d
+        else:
+            x = jnp.array(rng.standard_normal((size3d,) * 3), jnp.float32)
+            mod = ssam_stencil3d
+        plan = mod.plan_for(sdef)
+        # Resolve the layout exactly the way the timed call will (the
+        # rule-table default spec), so the reported geometry describes
+        # the run that is measured.
+        spec = hx.default_domain_spec(x.shape, mesh)
+        per_axis = hx._axis_assignments(spec, mesh, plan.ndim_spatial)
+        try:
+            shard_shape = tuning.shard_tuning_shape(
+                plan, x.shape, per_axis, time_steps)
+        except ValueError as e:
+            _row(f"sharded_{name}", 0.0, f"skipped={e}")
+            continue
+        t_single = _timeit(
+            lambda: ops.stencil(x, sdef, time_steps=time_steps,
+                                impl="interpret"))
+        t_shard = _timeit(
+            lambda: ops.stencil(x, sdef, time_steps=time_steps,
+                                impl="interpret", mesh=mesh))
+        from repro.core.halo import check_shard_geometry
+        local = check_shard_geometry(plan, x.shape, tuple(per_axis),
+                                     time_steps)
+        base = (8, 128) if sdef.ndim == 2 else (4, 8, 128)
+        # §5 prediction: the same default schedule, block clamped to the
+        # global vs the shard-local extent — the shard's smaller lane
+        # tile amortizes less halo (§5.3), which is the model's whole
+        # forecast of sharding overhead.
+        cyc_single = tuning.model_cost(plan, tuning.KernelConfig(
+            tuple(min(b, n) for b, n in zip(base, x.shape))), time_steps)
+        cyc_shard = tuning.model_cost(plan, tuning.KernelConfig(
+            tuple(min(b, n) for b, n in zip(base, local))), time_steps)
+        bytes_useful = x.size * 8 * time_steps
+        mbs_dev = bytes_useful / max(t_shard, 1e-9) / ndev   # bytes/µs = MB/s
+        mbs_single = bytes_useful / max(t_single, 1e-9)
+        _row(f"sharded_{name}_single", t_single,
+             f"mb_s={mbs_single:.2f};model_cyc={cyc_single:.1f}")
+        _row(f"sharded_{name}_{'x'.join(map(str, mesh_shape))}", t_shard,
+             f"mb_s_per_dev={mbs_dev:.2f};model_cyc={cyc_shard:.1f};"
+             f"pred_eff={cyc_single / cyc_shard:.2f};"
+             f"speedup={t_single / t_shard:.2f}x;"
+             f"shard={'x'.join(map(str, shard_shape))}")
+
+
+# ---------------------------------------------------------------------------
 # LM roofline summary (assignment §Roofline)
 # ---------------------------------------------------------------------------
 
@@ -261,7 +347,23 @@ def bench_lm_roofline():
              f"useful={rr.useful_flops_ratio:.2f}")
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    import argparse
+
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument(
+        "--mesh", default=None, metavar="AxB",
+        help="run the sharded halo-exchange bench on an AxB device mesh "
+             "(e.g. 2x4 or 8x1); needs A*B devices — on CPU set "
+             "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    p.add_argument(
+        "--time-steps", type=int, default=1,
+        help="fused temporal steps for the sharded bench (default 1)")
+    args = p.parse_args(argv)
+    if args.mesh:
+        shape = tuple(int(v) for v in args.mesh.lower().split("x"))
+        bench_sharded(shape, time_steps=args.time_steps)
+        return
     bench_perf_model()
     bench_conv2d_filter_sweep()
     bench_stencil_suite()

@@ -3,7 +3,10 @@
 - :mod:`repro.core.plan` — 𝒥 = (O, D, X, Y) plan formulation (§3.4).
 - :mod:`repro.core.executor` — pure-JAX lane-roll interpreter of plans.
 - :mod:`repro.core.engine` — generic plan→Pallas lowering (every kernel).
-- :mod:`repro.core.tuning` — §5 perf-model-guided block-config autotuner.
+- :mod:`repro.core.halo` — halo geometry shared by the engine, the
+  sharded halo-exchange layer and per-shard tuning.
+- :mod:`repro.core.tuning` — §5 perf-model-guided block-config autotuner
+  (with JSON-sidecar persistence + nearest-shape seeding).
 - :mod:`repro.core.perfmodel` — the paper's §5 analytical latency model.
 - :mod:`repro.core.rooflines` — TPU v5e 3-term roofline from XLA artifacts.
 """
@@ -15,11 +18,18 @@ from .plan import (
     Tap,
     conv1d_plan,
     conv2d_plan,
+    conv2d_same_plan,
     depthwise_conv1d_plan,
     linear_recurrence_plan,
     scan_plan,
     stencil2d_plan,
     stencil3d_plan,
+)
+from .halo import (
+    check_shard_geometry,
+    is_shape_preserving,
+    origin_pads,
+    shard_halo,
 )
 from .executor import (
     execute_conv_block,
@@ -35,9 +45,14 @@ __all__ = [
     "Step",
     "SystolicPlan",
     "Tap",
+    "check_shard_geometry",
     "conv1d_plan",
     "conv2d_plan",
+    "conv2d_same_plan",
     "depthwise_conv1d_plan",
+    "is_shape_preserving",
+    "origin_pads",
+    "shard_halo",
     "linear_recurrence_plan",
     "scan_plan",
     "stencil2d_plan",

@@ -40,6 +40,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .halo import origin_pads
 from .plan import SystolicPlan, Tap
 
 
@@ -152,22 +153,16 @@ def run_window_plan(
     assert x.ndim == nb + nd, (x.shape, nb, nd)
     assert len(block) == nd, (block, nd)
     t = time_steps
-    exts = plan.exts
-    lead, _ = plan.lead_trail()
     spatial_in = x.shape[nb:]
     out_sp = plan.out_shape(spatial_in, t)
     assert all(o >= 1 for o in out_sp), (spatial_in, out_sp)
 
     B = tuple(min(b, o) for b, o in zip(block, out_sp))
     g = tuple(pl.cdiv(o, b) for o, b in zip(out_sp, B))
-    halo = plan.halo(t)
-    # Pad: t·lead zeros ahead of the origin, then enough behind so every
-    # (including the last) overlapped input block is in-bounds.
-    lead_pad = tuple(t * l for l in lead)
-    pads = [(0, 0)] * nb + [
-        (lp, gi * bi + h - lp - s)
-        for lp, gi, bi, h, s in zip(lead_pad, g, B, halo, spatial_in)
-    ]
+    # Origin + round-up padding (core.halo): t·lead zeros ahead of the
+    # origin, then enough behind so every (including the last) overlapped
+    # input block is in-bounds.
+    pads = [(0, 0)] * nb + origin_pads(plan, spatial_in, g, B, t)
     xp = jnp.pad(x, pads)
 
     # Overlapped input blocks (§4.5): element-indexed specs — output tiles

@@ -219,6 +219,22 @@ def conv2d_plan(M: int, N: int, *, S: int = TPU_VREG_LANES, P: int = 4) -> Systo
     return SystolicPlan("conv2d", S=S, C=N + P - 1, P=P, M=M, N=N, steps=steps)
 
 
+def conv2d_same_plan(M: int, N: int, *, S: int = TPU_VREG_LANES, P: int = 4) -> SystolicPlan:
+    """'Same'-mode conv2d: Listing 1's schedule with the centre-anchor
+    boundary folded into the plan's lead/trail fields.
+
+    Same steps/taps as :func:`conv2d_plan`; the ``(N−1)//2`` /
+    ``(M−1)//2`` zero rows/cols a 'same' convolution needs around the
+    domain become plan geometry instead of a manual ``jnp.pad`` — which
+    makes the plan shape-preserving per axis (``lead+trail = ext−1``)
+    and therefore shardable by :mod:`repro.distributed.halo_exchange`.
+    """
+    base = conv2d_plan(M, N, S=S, P=P)
+    top, left = (N - 1) // 2, (M - 1) // 2
+    return dataclasses.replace(
+        base, lead=(top, left), trail=(N - 1 - top, M - 1 - left))
+
+
 def stencil2d_plan(
     offsets: Sequence[tuple[int, int]],
     *,

@@ -8,6 +8,20 @@ accounting, applied to the *actual* block geometry instead of the warp),
 optionally measures the model's top-k candidates with the real kernel,
 and caches the winner per (plan, shape, time_steps, backend).
 
+Winners persist: when ``REPRO_TUNING_CACHE`` names a JSON sidecar, every
+measured winner is written through to it (keyed by plan signature /
+shape / time_steps / backend / context) and the file is loaded on
+import, so a warm sidecar makes a cold process perform **zero** tuning
+measurements. Shapes never tuned before are *seeded* from the nearest
+cached shape of the same plan (log-space distance) instead of retuning —
+the engine clamps block configs to the output shape, so a neighbor
+shape's winner is always runnable.
+
+Sharding: :func:`shard_tuning_shape` maps a (global shape, mesh
+assignment) pair to the halo-extended shard-local shape the engine
+actually lowers per device — tune against *that* shape and the winner
+stays valid under sharding (the block never exceeds the shard).
+
 Pricing per useful output element (see :func:`model_cost`):
 
 * **compute** — ``t · mads · (T_mad + T_reg)`` plus the shift term
@@ -29,7 +43,10 @@ the measured metric.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
 import math
+import os
 import time
 from typing import Callable, Sequence
 
@@ -37,6 +54,8 @@ import jax
 
 from .perfmodel import TPU_V5E, HardwareLatencies
 from .plan import SystolicPlan
+
+SIDECAR_ENV = "REPRO_TUNING_CACHE"
 
 # VMEM working-set budget per block (f32 elements): input block + psum +
 # output must fit comfortably in ~16 MB VMEM; stay conservative.
@@ -88,6 +107,125 @@ def clear_cache() -> None:
 def _cache_key(plan: SystolicPlan, shape: tuple[int, ...], time_steps: int,
                context: tuple = ()):
     return (plan, tuple(shape), time_steps, jax.default_backend(), context)
+
+
+# ---------------------------------------------------------------------------
+# JSON sidecar persistence + nearest-shape seeding
+# ---------------------------------------------------------------------------
+
+def plan_signature(plan: SystolicPlan) -> str:
+    """Stable cross-process identity of a plan's schedule + geometry."""
+    digest = hashlib.sha1(repr(plan).encode()).hexdigest()[:16]
+    return f"{plan.kind}-{digest}"
+
+
+def _jsonable(obj):
+    if isinstance(obj, (tuple, list)):
+        return [_jsonable(o) for o in obj]
+    if isinstance(obj, (str, int, float, bool)) or obj is None:
+        return obj
+    return repr(obj)
+
+
+def _sidecar_key(sig: str, shape, time_steps: int, context: tuple) -> str:
+    return json.dumps([sig, list(shape), time_steps, jax.default_backend(),
+                       _jsonable(context)])
+
+
+# sidecar key → (KernelConfig, model_cost, measured_us)
+_SIDECAR: dict[str, tuple[KernelConfig, float, float | None]] = {}
+
+
+def sidecar_path() -> str | None:
+    return os.environ.get(SIDECAR_ENV) or None
+
+
+def load_sidecar(path: str) -> int:
+    """Merge a sidecar file into the persistent store; returns #entries."""
+    with open(path) as f:
+        doc = json.load(f)
+    n = 0
+    for key, val in doc.get("entries", {}).items():
+        cfg = KernelConfig(tuple(val["block"]), val.get("variant", "shift_psum"))
+        _SIDECAR[key] = (cfg, val.get("model_cost", 0.0), val.get("measured_us"))
+        n += 1
+    return n
+
+
+def save_sidecar(path: str | None = None) -> str | None:
+    """Atomically write the persistent store to ``path`` (or the env path).
+
+    Re-merges the file first so concurrent processes sharing one sidecar
+    keep each other's winners (this process's entries win conflicts).
+    """
+    path = path or sidecar_path()
+    if not path:
+        return None
+    if os.path.exists(path):
+        try:
+            load_file_only = json.load(open(path)).get("entries", {})
+            for key, val in load_file_only.items():
+                if key not in _SIDECAR:
+                    _SIDECAR[key] = (
+                        KernelConfig(tuple(val["block"]),
+                                     val.get("variant", "shift_psum")),
+                        val.get("model_cost", 0.0), val.get("measured_us"))
+        except Exception:
+            pass      # unreadable file: overwrite with our entries
+    entries = {
+        key: {"block": list(cfg.block), "variant": cfg.variant,
+              "model_cost": cost, "measured_us": us}
+        for key, (cfg, cost, us) in sorted(_SIDECAR.items())
+    }
+    tmp = f"{path}.tmp.{os.getpid()}"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "w") as f:
+        json.dump({"version": 1, "entries": entries}, f, indent=1)
+    os.replace(tmp, path)
+    return path
+
+
+def _sidecar_store(skey: str, result: TuneResult) -> None:
+    """Write-through of a measured winner — only when persistence is on
+    (env path set or a sidecar explicitly loaded), so that without a
+    sidecar the tuner's in-process behavior is unchanged."""
+    if not sidecar_path() and not _SIDECAR:
+        return
+    _SIDECAR[skey] = (result.config, result.model_cost, result.measured_us)
+    if sidecar_path():
+        save_sidecar()
+
+
+def _nearest_sidecar(sig: str, shape, time_steps: int,
+                     context: tuple) -> KernelConfig | None:
+    """The winner of the closest already-tuned shape of the same plan.
+
+    Same plan signature, time_steps, backend and context; closest by
+    summed |log| ratio of extents. Seeding replays that winner with no
+    measurement — the engine clamps blocks to the output shape, so the
+    neighbor's config is always runnable on the new shape.
+    """
+    want = [sig, time_steps, jax.default_backend(), _jsonable(context)]
+    best, best_d = None, None
+    for key, (cfg, _, _) in _SIDECAR.items():
+        ksig, kshape, kt, kbackend, kctx = json.loads(key)
+        if [ksig, kt, kbackend, kctx] != want or len(kshape) != len(shape):
+            continue
+        d = sum(abs(math.log(k / s)) for k, s in zip(kshape, shape))
+        if best_d is None or d < best_d:
+            best, best_d = cfg, d
+    return best
+
+
+def clear_sidecar() -> None:
+    _SIDECAR.clear()
+
+
+if sidecar_path() and os.path.exists(sidecar_path()):
+    try:
+        load_sidecar(sidecar_path())
+    except Exception:   # corrupt/foreign sidecar must never break import
+        _SIDECAR.clear()
 
 
 # ---------------------------------------------------------------------------
@@ -225,6 +363,24 @@ def autotune(
         cached = _CACHE[key]
         return dataclasses.replace(cached, source="cache")
 
+    def _agrees(cfg: KernelConfig) -> bool:
+        return not fixed or all(
+            cfg.as_kwargs(plan).get(k, v) == v for k, v in fixed.items())
+
+    sig = plan_signature(plan)
+    skey = _sidecar_key(sig, shape, time_steps, context)
+    hit = _SIDECAR.get(skey)
+    if hit is not None and _agrees(hit[0]):
+        result = TuneResult(hit[0], hit[1], hit[2], "sidecar")
+        _CACHE[key] = result
+        return result
+    seed = _nearest_sidecar(sig, shape, time_steps, context)
+    if seed is not None and _agrees(seed):
+        result = TuneResult(seed, model_cost(plan, seed, time_steps, hw),
+                            None, "seeded")
+        _CACHE[key] = result
+        return result
+
     cands = candidate_configs(plan, shape, time_steps)
     if default is not None and default not in cands:
         cands.append(default)
@@ -256,5 +412,42 @@ def autotune(
         us, best = min(timed, key=lambda p: p[0])
         result = TuneResult(best, model_cost(plan, best, time_steps, hw),
                             us, "measured")
+        _sidecar_store(skey, result)
     _CACHE[key] = result
     return result
+
+
+# ---------------------------------------------------------------------------
+# Shard-local tuning
+# ---------------------------------------------------------------------------
+
+def shard_tuning_shape(
+    plan: SystolicPlan,
+    global_spatial: Sequence[int],
+    mesh_per_axis: Sequence[tuple[str, int] | None],
+    time_steps: int = 1,
+    boundary: str = "zero",
+) -> tuple[int, ...]:
+    """The halo-extended shard-local shape a sharded run lowers per device.
+
+    This — not the global shape — is what per-shard block configs must
+    be tuned against: the engine inside ``shard_map`` sees
+    ``local + halo_lo + halo_hi`` rows per sharded axis (under
+    'wrap'/'replicate' boundaries, per *every* axis — unsharded axes
+    halo-extend locally too). A winner measured on this shape is the
+    monolithic (``overlap=False``) per-device lowering; the overlapped
+    schedule decomposes the same data volume into an interior call on
+    the un-extended block plus thin frame strips, so the measured
+    ranking carries over while absolute times differ by the frame
+    recompute. Raises the same :class:`ValueError`\\ s as the sharded
+    path itself (indivisible mesh axis, shard smaller than the halo).
+    """
+    from .halo import check_shard_geometry, shard_halo
+    local = check_shard_geometry(
+        plan, tuple(global_spatial), tuple(mesh_per_axis), time_steps)
+    halos = shard_halo(plan, time_steps)
+    return tuple(
+        n + (lo + hi
+             if boundary != "zero" or (assign is not None and assign[1] > 1)
+             else 0)
+        for n, assign, (lo, hi) in zip(local, mesh_per_axis, halos))

@@ -1,1 +1,3 @@
-"""Distribution substrate: logical-axis sharding rules, collectives, compression."""
+"""Distribution substrate: logical-axis sharding rules, collectives,
+compression, and the sharded systolic halo-exchange layer
+(:mod:`repro.distributed.halo_exchange`)."""

@@ -1,0 +1,351 @@
+"""Sharded systolic execution: any windowed plan on a device mesh.
+
+This is the paper's execution model lifted one level up the memory
+hierarchy. Within a device, partial sums shift through VREG lanes while
+block halos ride in from neighboring grid blocks (engine, §4.5); across
+devices, the *same plan geometry* (:mod:`repro.core.halo`) decides how
+many rows each shard must import from its mesh neighbors, and
+``lax.ppermute`` plays the role the overlapped BlockSpecs play on-chip.
+
+Schedule per call (DESIGN.md §8):
+
+1. **Exchange** — for every sharded domain axis, each shard pushes its
+   trailing ``t·lead`` rows to its high-side neighbor and its leading
+   ``t·trail`` rows to its low-side neighbor (two ``ppermute``\\ s per
+   axis). Exchanging the ``time_steps``-fold widened halo once per call
+   — exactly one engine-halo per temporal step, batched into a single
+   push — keeps the ``t`` fused plan applications communication-free
+   and reproduces the single-device pad-once semantics (bit-for-bit
+   under the monolithic schedule; the overlapped schedule's frame
+   recompute can differ by ≤ 1 ulp of XLA FMA contraction).
+2. **Interior compute, overlapped** — the shard's interior output block
+   (everything ≥ halo-width away from a sharded edge) is lowered from
+   the *resident* block alone, so it has no data dependence on the
+   in-flight ``ppermute``\\ s and XLA's latency-hiding scheduler can run
+   exchange and interior concurrently (the double-buffer: the interior
+   output fills while the halo buffers land).
+3. **Frame compute** — once the halos land, the boundary frame is
+   recomputed from halo-extended slabs and spliced over the interior
+   result. Domain edges fall out of the collective's semantics: a
+   non-circular ``ppermute`` fills unsourced shards with zeros — which
+   IS the engine's own origin padding (``boundary='zero'``); circular
+   links give wraparound; ``'replicate'`` clamps the edge row.
+
+Only *shape-preserving* plan axes (``lead+trail = ext−1``: stencils,
+'same'-mode convs) can be sharded — each shard then owns equal slices
+of input and output and the ``shard_map`` out-spec mirrors the in-spec.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import shard_map as shm
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.engine import run_window_plan
+from repro.core.halo import (check_shard_geometry, extended_crop,
+                             is_shape_preserving, shard_halo)
+from repro.core.plan import SystolicPlan
+from .sharding import mesh_axis_sizes, pspec_for_axes
+
+BOUNDARIES = ("zero", "replicate", "wrap")
+
+# Logical names of windowed-domain axes (lane axis last), resolved
+# against the sharding rule tables when the caller passes no in_specs.
+DOMAIN_AXES_2D = ("rows", "cols")
+DOMAIN_AXES_3D = ("depth", "rows", "cols")
+
+
+def default_domain_spec(shape, mesh: Mesh, rules=None) -> P:
+    """Default PartitionSpec for a 2-D/3-D domain via the rule tables.
+
+    Reuses :func:`repro.distributed.sharding.pspec_for_axes`, so the
+    usual divisibility fallback applies: a mesh axis that does not
+    divide the domain axis is skipped (replicated) rather than raising —
+    explicit ``in_specs`` get the strict :class:`ValueError` treatment.
+    """
+    names = DOMAIN_AXES_3D if len(shape) == 3 else DOMAIN_AXES_2D
+    return pspec_for_axes(names, shape, mesh, rules)
+
+
+def _axis_assignments(
+    spec, mesh: Mesh, ndim: int
+) -> tuple[tuple[str, int] | None, ...]:
+    """Resolve a PartitionSpec into per-domain-axis (mesh_axis, size)."""
+    sizes = mesh_axis_sizes(mesh)
+    entries = list(spec) + [None] * (ndim - len(tuple(spec)))
+    if len(entries) > ndim:
+        raise ValueError(
+            f"in_specs {tuple(spec)} has more entries than the domain has "
+            f"axes ({ndim})")
+    out: list[tuple[str, int] | None] = []
+    for a, e in enumerate(entries):
+        if e is None:
+            out.append(None)
+            continue
+        if isinstance(e, (tuple, list)):
+            if len(e) != 1:
+                raise ValueError(
+                    f"domain axis {a} requests mesh axes {e}: halo exchange "
+                    "shards each domain axis over at most one mesh axis")
+            e = e[0]
+        if e not in sizes:
+            raise ValueError(
+                f"in_specs names mesh axis {e!r} but the mesh has axes "
+                f"{tuple(sizes)}")
+        out.append((e, sizes[e]))
+    return tuple(out)
+
+
+def _edge_slab(x, axis: int, width: int, *, front: bool):
+    """``width`` copies of the domain-edge row — the clamp boundary."""
+    n = x.shape[axis]
+    sl = lax.slice_in_dim(x, 0, 1, axis=axis) if front else \
+        lax.slice_in_dim(x, n - 1, n, axis=axis)
+    return jnp.concatenate([sl] * width, axis=axis)
+
+
+def _halo_slab(x, axis: int, width: int, assign, boundary: str, *,
+               front: bool):
+    """One side's halo slab for one axis, or None when nothing to add.
+
+    ``front=True`` is the low-side halo: each shard *pushes* its
+    trailing ``width`` rows to its high-side neighbor (and receives
+    symmetrically), so the slab this shard prepends is what its low
+    neighbor pushed. On a domain edge a non-circular ``ppermute``
+    delivers zeros — the engine's own origin padding — unless the
+    boundary wraps (circular link) or clamps (edge-row replication).
+    Unsharded axes synthesize the same slab locally; for ``'zero'``
+    that is a no-op because the engine already zero-pads.
+    """
+    if width == 0:
+        return None
+    name, size = assign if assign is not None else (None, 1)
+    n = x.shape[axis]
+    if front:
+        src = lax.slice_in_dim(x, n - width, n, axis=axis)
+    else:
+        src = lax.slice_in_dim(x, 0, width, axis=axis)
+    if size > 1:
+        if front:
+            pairs = [(i, i + 1) for i in range(size - 1)]
+        else:
+            pairs = [(i + 1, i) for i in range(size - 1)]
+        if boundary == "wrap":
+            pairs.append((size - 1, 0) if front else (0, size - 1))
+        slab = lax.ppermute(src, name, pairs)
+        if boundary == "replicate":
+            edge = 0 if front else size - 1
+            slab = jnp.where(lax.axis_index(name) == edge,
+                             _edge_slab(x, axis, width, front=front), slab)
+        return slab
+    if boundary == "wrap":
+        return src
+    if boundary == "replicate":
+        return _edge_slab(x, axis, width, front=front)
+    return None      # zero boundary, unsharded: engine origin pad covers it
+
+
+def _extend_axis(x, axis: int, lo: int, hi: int, assign, boundary: str):
+    """Halo-extend ``x`` along one axis (no-op when nothing to add)."""
+    front = _halo_slab(x, axis, lo, assign, boundary, front=True)
+    back = _halo_slab(x, axis, hi, assign, boundary, front=False)
+    parts = [p for p in (front, x, back) if p is not None]
+    return x if len(parts) == 1 else jnp.concatenate(parts, axis=axis)
+
+
+# ---------------------------------------------------------------------------
+# The sharded lowering
+# ---------------------------------------------------------------------------
+
+def _frame_regions(
+    local_out: tuple[int, ...],
+    halos: tuple[tuple[int, int], ...],
+    exchanged: tuple[int, ...],
+) -> list[tuple[tuple[int, int], ...]]:
+    """Decompose the boundary frame into slabs, one list entry per slab.
+
+    Axis-``a`` slabs span the full extent of later axes and are
+    restricted to the interior of earlier exchanged axes, so every
+    frame cell (corners included) is covered exactly by the first
+    exchanged axis that owns it.
+    """
+    regions = []
+    for k, a in enumerate(exchanged):
+        lo, hi = halos[a]
+        base = []
+        for ax, n in enumerate(local_out):
+            if ax in exchanged[:k]:
+                l2, h2 = halos[ax]
+                base.append((l2, n - h2))
+            else:
+                base.append((0, n))
+        if any(b[0] >= b[1] for b in base):
+            continue        # earlier axes' full-width slabs already cover it
+        if lo:
+            regions.append(tuple(
+                (0, lo) if ax == a else b for ax, b in enumerate(base)))
+        if hi:
+            regions.append(tuple(
+                (local_out[a] - hi, local_out[a]) if ax == a else b
+                for ax, b in enumerate(base)))
+    return [r for r in regions if all(b[0] < b[1] for b in r)]
+
+
+def _local_lowering(
+    xl, wl, *, plan, block, time_steps, variant, boundary, interpret,
+    acc_dtype, assigns, halos, overlap,
+):
+    """The per-shard program: exchange → interior compute → frame splice."""
+    nd = plan.ndim_spatial
+    local = xl.shape
+    ext = xl
+    for a in range(nd):
+        lo, hi = halos[a]
+        ext = _extend_axis(ext, a, lo, hi, assigns[a], boundary)
+    exchanged = tuple(a for a in range(nd) if ext.shape[a] != local[a])
+
+    engine = functools.partial(
+        run_window_plan, plan=plan, block=block, time_steps=time_steps,
+        variant=variant, interpret=interpret, acc_dtype=acc_dtype)
+
+    def cropped(e):
+        """Engine output on a (partially) extended slab, mapped back to
+        the rows the slab's un-extended origin owns."""
+        out = engine(e, wl) if wl is not None else engine(e)
+        sl = tuple(
+            extended_crop(plan, time_steps, a, local[a])
+            if a in exchanged else slice(0, local[a])
+            for a in range(nd))
+        return out[sl]
+
+    if not exchanged:
+        return cropped(ext)
+    if not overlap:
+        return cropped(ext)
+
+    # Overlapped schedule: the interior lowers from the *resident* block
+    # (no data dependence on the in-flight ppermutes), the frame lowers
+    # from halo-extended slabs once they land.
+    interior = engine(xl, wl) if wl is not None else engine(xl)
+    out = interior
+    for region in _frame_regions(local, halos, exchanged):
+        slab_sl, out_sl, strip_crop = [], [], []
+        for a, (lo_r, hi_r) in enumerate(region):
+            out_sl.append(slice(lo_r, hi_r))
+            if a in exchanged:
+                # Output row i reads extended rows [i, i + lo + hi], so
+                # the slab for out rows [lo_r, hi_r) is that union and
+                # the strip sits ``lo`` rows into the slab's output.
+                lo_h, hi_h = halos[a]
+                slab_sl.append(slice(lo_r, hi_r + lo_h + hi_h))
+                strip_crop.append(slice(lo_h, lo_h + (hi_r - lo_r)))
+            else:
+                slab_sl.append(slice(None))
+                strip_crop.append(slice(lo_r, hi_r))
+        strip = ext[tuple(slab_sl)]
+        s_out = engine(strip, wl) if wl is not None else engine(strip)
+        out = out.at[tuple(out_sl)].set(s_out[tuple(strip_crop)])
+    return out
+
+
+def sharded_window_plan(
+    x: jax.Array,
+    w: jax.Array | None = None,
+    *,
+    plan: SystolicPlan,
+    mesh: Mesh,
+    in_spec: P | None = None,
+    block: tuple[int, ...],
+    time_steps: int = 1,
+    variant: str = "shift_psum",
+    boundary: str = "zero",
+    overlap: bool = True,
+    interpret: bool = True,
+    acc_dtype=jnp.float32,
+    rules=None,
+) -> jax.Array:
+    """Run a windowed plan on a domain sharded over a device mesh.
+
+    Args:
+      x: the global domain (2-D/3-D, lane axis last). May be host-global;
+        ``shard_map`` scatters it per ``in_spec``.
+      w: runtime coefficients (replicated to every shard), or None.
+      plan: any windowed :class:`SystolicPlan` whose sharded axes are
+        shape-preserving.
+      mesh: a 1-D/2-D device mesh (e.g. ``launch.mesh.make_domain_mesh``).
+      in_spec: PartitionSpec mapping domain axes to mesh axes; at most
+        one mesh axis per domain axis. Defaults to the rule-table
+        resolution of :func:`default_domain_spec`.
+      block / time_steps / variant / interpret / acc_dtype: forwarded to
+        the engine, per shard.
+      boundary: 'zero' (the engine's semantics — domain-edge shards
+        receive the origin padding from the collective itself), 'wrap'
+        (torus), or 'replicate' (edge clamp; ``time_steps == 1`` only,
+        a static clamped halo does not commute with temporal fusion).
+      overlap: lower the interior from the resident block concurrently
+        with the exchange, then splice the frame (DESIGN.md §8); with
+        False, one monolithic engine call on the extended block. The two
+        schedules run the same per-output math and agree to ≤ 1 ulp
+        (XLA may contract FMAs differently in the recomputed frame).
+
+    Returns:
+      The plan's output, sharded exactly like the input.
+    """
+    if plan.batch_axes:
+        raise ValueError("sharded execution supports spatial plans only "
+                         f"(plan {plan.kind!r} has batch axes)")
+    if boundary not in BOUNDARIES:
+        raise ValueError(f"boundary must be one of {BOUNDARIES}, "
+                         f"got {boundary!r}")
+    if boundary == "replicate" and time_steps != 1:
+        raise ValueError(
+            "boundary='replicate' supports time_steps=1 only: a clamped "
+            "halo is static while the true clamped boundary evolves under "
+            "temporal fusion")
+    nd = plan.ndim_spatial
+    if x.ndim != nd:
+        raise ValueError(f"{plan.kind!r} plan wants a {nd}-D domain, "
+                         f"got shape {x.shape}")
+    for a in range(nd):
+        if not is_shape_preserving(plan, a):
+            raise ValueError(
+                f"sharded execution needs a shape-preserving plan "
+                f"(lead+trail = ext−1 on every axis) so shards own equal "
+                f"input and output slices; {plan.kind!r} violates this on "
+                f"axis {a}. For conv2d use mode='same' "
+                "(core.plan.conv2d_same_plan).")
+    if in_spec is None:
+        in_spec = default_domain_spec(x.shape, mesh, rules)
+    assigns = _axis_assignments(in_spec, mesh, nd)
+    local = check_shard_geometry(plan, x.shape, assigns, time_steps)
+    halos = shard_halo(plan, time_steps)
+    if boundary != "zero":
+        # wrap/replicate also extend unsharded axes, locally — the
+        # resident block must cover the halo it lends itself.
+        for a, ((lo, hi), n) in enumerate(zip(halos, local)):
+            if max(lo, hi) > n:
+                raise ValueError(
+                    f"boundary={boundary!r} needs the local block to cover "
+                    f"its own axis-{a} halo: {n} rows per shard < "
+                    f"({lo}, {hi}) halo")
+
+    spec_full = P(*(a[0] if a else None for a in assigns))
+    w_args, w_specs = ((w,), (P(),)) if w is not None else ((), ())
+
+    fn = functools.partial(
+        _local_lowering, plan=plan, block=block, time_steps=time_steps,
+        variant=variant, boundary=boundary, interpret=interpret,
+        acc_dtype=acc_dtype, assigns=assigns, halos=halos, overlap=overlap)
+
+    sharded = shm.shard_map(
+        lambda xs, *ws: fn(xs, ws[0] if ws else None),
+        mesh=mesh,
+        in_specs=(spec_full,) + w_specs,
+        out_specs=spec_full,
+        check_rep=False,
+    )
+    return sharded(x, *w_args)

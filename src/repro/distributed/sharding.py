@@ -34,6 +34,12 @@ DEFAULT_RULES: dict[str, tuple[str, ...]] = {
     "state": (),
     "lora": (),
     "conv": (),
+    # Windowed-kernel domain axes (halo_exchange): stencil/conv grids
+    # shard rows over the fast "data" axis and lanes over "model";
+    # the Z extent of 3-D domains stays resident per shard.
+    "depth": (),
+    "rows": ("data",),
+    "cols": ("model",),
 }
 
 

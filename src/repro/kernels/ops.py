@@ -18,6 +18,20 @@ Every non-xla op also takes ``autotune``: when True, the block config
 measured (the family default always included, so tuning never regresses
 it), and winners are cached per (plan, shape, backend). Explicit block
 kwargs win over tuned values.
+
+``ops.stencil`` / ``ops.conv2d`` additionally take ``mesh=`` /
+``in_specs=`` / ``boundary=``: with a mesh, the domain is sharded per
+the PartitionSpec (default: the rule tables via
+``halo_exchange.default_domain_spec``) and the plan runs through the
+:mod:`repro.distributed.halo_exchange` layer — ppermute halo pushes
+once per call, interior compute overlapped with the exchange. Sharding
+problems in the resolved layout (an explicitly requested mesh axis that
+does not divide the domain, a shard smaller than the plan's halo) raise
+``ValueError`` here, before any ``pallas_call``; a *default* spec
+follows the rule tables' divisibility fallback and leaves a
+non-dividing axis replicated instead. Autotuning under a mesh targets
+the *shard-local* halo-extended shape, so the winner is exactly the
+per-device kernel.
 """
 from __future__ import annotations
 
@@ -56,6 +70,44 @@ _DEFAULTS = {
 }
 
 
+def _engine_block(plan, kw: dict) -> tuple[tuple[int, ...], str, dict]:
+    """Split family kwargs into (engine block tuple, variant, rest)."""
+    kw = dict(kw)
+    d = _DEFAULTS[plan.kind].block
+    if plan.ndim_spatial == 3:
+        block = (kw.pop("block_z", d[0]), kw.pop("block_h", d[1]),
+                 kw.pop("block_w", d[2]))
+    else:
+        block = (kw.pop("block_h", d[0]), kw.pop("block_w", d[1]))
+    return block, kw.pop("variant", "shift_psum"), kw
+
+
+def _sharded(plan, x, w, *, mesh, in_specs, time_steps, boundary, impl, kw):
+    """Dispatch a windowed op through the halo-exchange layer."""
+    from repro.distributed import halo_exchange as hx
+    spec = in_specs if in_specs is not None else \
+        hx.default_domain_spec(x.shape, mesh)
+    block, variant, rest = _engine_block(plan, kw)
+    return hx.sharded_window_plan(
+        x, w, plan=plan, mesh=mesh, in_spec=spec, block=block,
+        time_steps=time_steps, variant=variant, boundary=boundary,
+        interpret=_interp(impl), **rest)
+
+
+def _shard_tuning_call(plan, x, mesh, in_specs, time_steps, boundary):
+    """(shape, context) the sharded autotune must target: the per-device
+    halo-extended block, keyed so winners never leak across meshes or
+    boundary modes."""
+    from repro.distributed import halo_exchange as hx
+    spec = in_specs if in_specs is not None else \
+        hx.default_domain_spec(x.shape, mesh)
+    assigns = hx._axis_assignments(spec, mesh, plan.ndim_spatial)
+    shape = tuning.shard_tuning_shape(plan, x.shape, assigns, time_steps,
+                                      boundary)
+    return shape, ("sharded", boundary) + tuple(
+        f"{a[0]}:{a[1]}" if a else "-" for a in assigns)
+
+
 def _tuned_kwargs(plan, shape, call, user_kw, *, time_steps: int = 1,
                   context: tuple = ()) -> dict:
     """Autotune block kwargs for ``call``; explicit user kwargs win.
@@ -75,15 +127,37 @@ def _tuned_kwargs(plan, shape, call, user_kw, *, time_steps: int = 1,
 
 
 def conv2d(x, w, *, mode: str = "same", impl: str | None = None,
-           autotune: bool = False, **kw):
+           autotune: bool = False, mesh=None, in_specs=None,
+           boundary: str = "zero", **kw):
     impl = impl or default_impl()
     if impl == "xla":
+        if mesh is not None:
+            raise ValueError("mesh= needs the engine path; the 'xla' oracle "
+                             "is already shardable under pjit")
         return ref.conv2d_same(x, w) if mode == "same" else ref.conv2d_valid(x, w)
-    fn = _c2.conv2d_same if mode == "same" else _c2.conv2d_valid
     interpret = _interp(impl)
+    if mesh is not None:
+        if mode != "same":
+            raise ValueError(
+                "sharded conv2d supports mode='same' only: 'valid' shrinks "
+                "the domain, so shards would not own equal output slices")
+        plan = _c2.plan_for(w.shape, "same")
+        if autotune:
+            shape, sctx = _shard_tuning_call(plan, x, mesh, in_specs, 1,
+                                             boundary)
+            zeros = jnp.zeros(shape, x.dtype)
+            sharded_kw = {k: kw.pop(k) for k in ("overlap",) if k in kw}
+            kw = _tuned_kwargs(
+                plan, shape,
+                lambda **k: _c2.conv2d_same(zeros, w, interpret=interpret, **k),
+                kw, context=("conv2d", mode, impl) + sctx)
+            kw.update(sharded_kw)
+        return _sharded(plan, x, w, mesh=mesh, in_specs=in_specs,
+                        time_steps=1, boundary=boundary, impl=impl, kw=kw)
+    fn = _c2.conv2d_same if mode == "same" else _c2.conv2d_valid
     if autotune:
         kw = _tuned_kwargs(
-            _c2.plan_for(w.shape), x.shape,
+            _c2.plan_for(w.shape, mode), x.shape,
             lambda **k: fn(x, w, interpret=interpret, **k), kw,
             context=("conv2d", mode, impl))
     return fn(x, w, interpret=interpret, **kw)
@@ -104,15 +178,38 @@ def conv1d_causal(x, w, *, impl: str | None = None, autotune: bool = False,
 
 
 def stencil(x, sdef: StencilDef | str, *, time_steps: int = 1,
-            impl: str | None = None, autotune: bool = False, **kw):
+            impl: str | None = None, autotune: bool = False, mesh=None,
+            in_specs=None, boundary: str = "zero", **kw):
     impl = impl or default_impl()
     if isinstance(sdef, str):
         sdef = BENCHMARKS[sdef]
     if impl == "xla":
+        if mesh is not None:
+            raise ValueError("mesh= needs the engine path; the 'xla' oracle "
+                             "is already shardable under pjit")
         return ref.stencil_iterate(x, sdef, time_steps)
     mod = _s2 if sdef.ndim == 2 else _s3
     fn = mod.stencil2d if sdef.ndim == 2 else mod.stencil3d
     interpret = _interp(impl)
+    if mesh is not None:
+        plan = mod.plan_for(sdef)
+        if autotune:
+            shape, sctx = _shard_tuning_call(plan, x, mesh, in_specs,
+                                             time_steps, boundary)
+            zeros = jnp.zeros(shape, x.dtype)
+            # tune with the single-device engine on a shard-shaped block;
+            # sharded-layer-only kwargs stay out of the measured closure
+            sharded_kw = {k: kw.pop(k) for k in ("overlap",) if k in kw}
+            kw = _tuned_kwargs(
+                plan, shape,
+                lambda **k: fn(zeros, sdef, time_steps=time_steps,
+                               interpret=interpret, **k),
+                kw, time_steps=time_steps,
+                context=("stencil", impl) + sctx)
+            kw.update(sharded_kw)
+        return _sharded(plan, x, None, mesh=mesh, in_specs=in_specs,
+                        time_steps=time_steps, boundary=boundary, impl=impl,
+                        kw=kw)
     if autotune:
         kw = _tuned_kwargs(
             mod.plan_for(sdef), x.shape,

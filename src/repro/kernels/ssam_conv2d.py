@@ -19,13 +19,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.engine import run_window_plan
-from repro.core.plan import conv2d_plan
+from repro.core.plan import conv2d_plan, conv2d_same_plan
 
 
-def plan_for(w_shape: tuple[int, int]):
-    """The systolic plan lowered for an ``(N, M)`` filter."""
+def plan_for(w_shape: tuple[int, int], mode: str = "valid"):
+    """The systolic plan lowered for an ``(N, M)`` filter.
+
+    'same' mode folds the centre-anchor boundary into the plan's
+    lead/trail fields, which makes it shape-preserving — the form the
+    sharded halo-exchange path requires.
+    """
     N, M = w_shape
-    return conv2d_plan(M, N)
+    return conv2d_same_plan(M, N) if mode == "same" else conv2d_plan(M, N)
 
 
 def conv2d_valid(
@@ -45,9 +50,23 @@ def conv2d_valid(
     )
 
 
-def conv2d_same(x: jax.Array, w: jax.Array, **kw) -> jax.Array:
-    """'Same'-mode convolution (zero boundary), anchor at the filter centre."""
-    N, M = w.shape
-    top, left = (N - 1) // 2, (M - 1) // 2
-    xp = jnp.pad(x, ((top, N - 1 - top), (left, M - 1 - left)))
-    return conv2d_valid(xp, w, **kw)
+def conv2d_same(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block_h: int = 8,
+    block_w: int = 128,
+    variant: str = "shift_psum",
+    interpret: bool = True,
+    acc_dtype=jnp.float32,
+) -> jax.Array:
+    """'Same'-mode convolution (zero boundary), anchor at the filter centre.
+
+    The boundary is plan geometry (``conv2d_same_plan``'s lead/trail),
+    not a manual pad — single-device and sharded execution lower the
+    identical plan.
+    """
+    return run_window_plan(
+        x, w, plan=plan_for(w.shape, "same"), block=(block_h, block_w),
+        variant=variant, interpret=interpret, acc_dtype=acc_dtype,
+    )

@@ -23,3 +23,17 @@ def make_host_mesh(model_axis: int = 1):
     n = jax.device_count()
     data = n // model_axis
     return jax.make_mesh((data, model_axis), ("data", "model"))
+
+
+def make_domain_mesh(shape: tuple[int, ...]):
+    """1-D/2-D mesh for sharded windowed-domain execution.
+
+    Axis names follow the sharding rule tables ("rows" → ``data``,
+    "cols" → ``model``), so ``halo_exchange.default_domain_spec``
+    resolves without explicit in_specs. ``shape=(A,)`` shards rows only;
+    ``shape=(A, B)`` shards rows over A devices and lanes over B.
+    """
+    if not 1 <= len(shape) <= 2:
+        raise ValueError(f"domain meshes are 1-D or 2-D, got {shape}")
+    names = ("data", "model")[: len(shape)]
+    return jax.make_mesh(tuple(shape), names)

@@ -1,0 +1,107 @@
+"""Unit tests for the factored halo geometry (core.halo) — the single
+module the engine, the sharded halo-exchange layer and per-shard tuning
+all derive their padding/exchange arithmetic from."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (conv2d_plan, conv2d_same_plan, stencil2d_plan,
+                        stencil3d_plan)
+from repro.core import tuning
+from repro.core.halo import (check_shard_geometry, extended_crop,
+                             is_shape_preserving, origin_pads, shard_halo)
+from repro.kernels import ref
+from repro.kernels.ssam_conv2d import conv2d_same
+from repro.kernels.stencils import BENCHMARKS
+
+
+def _plan(name):
+    d = BENCHMARKS[name]
+    mk = stencil2d_plan if d.ndim == 2 else stencil3d_plan
+    return mk(d.offsets, coeffs=d.coeffs)
+
+
+class TestGeometry:
+    @pytest.mark.parametrize("name", ["2d5pt", "2ds25pt", "3d27pt"])
+    @pytest.mark.parametrize("t", [1, 2, 3])
+    def test_shard_halo_sums_to_engine_halo(self, name, t):
+        """Per axis, low + high shard halo == the engine's block halo —
+        two views of the same t·(ext−1) overlap."""
+        plan = _plan(name)
+        for (lo, hi), total in zip(shard_halo(plan, t), plan.halo(t)):
+            assert lo + hi == total
+
+    @pytest.mark.parametrize("name", list(BENCHMARKS))
+    def test_table3_plans_are_shape_preserving(self, name):
+        plan = _plan(name)
+        for a in range(plan.ndim_spatial):
+            assert is_shape_preserving(plan, a)
+
+    def test_valid_conv_is_not_shape_preserving(self):
+        plan = conv2d_plan(5, 3)
+        assert not is_shape_preserving(plan, 0)
+        assert not is_shape_preserving(plan, 1)
+        same = conv2d_same_plan(5, 3)
+        assert is_shape_preserving(same, 0) and is_shape_preserving(same, 1)
+
+    def test_origin_pads_cover_last_block(self):
+        plan = _plan("2d9pt")
+        pads = origin_pads(plan, (40, 100), grid=(5, 4), block=(8, 32), time_steps=2)
+        for (lo, hi), g, b, h, s in zip(pads, (5, 4), (8, 32), plan.halo(2),
+                                        (40, 100)):
+            assert lo + s + hi == g * b + h     # every input block in-bounds
+            assert lo == 2 * 1 * plan.lead_trail()[0][0] or lo >= 0
+
+    def test_extended_crop(self):
+        plan = _plan("2d5pt")
+        assert extended_crop(plan, 3, 0, 16) == slice(3, 19)
+
+
+class TestShardGeometryErrors:
+    def test_indivisible_axis_raises(self):
+        with pytest.raises(ValueError, match="does not divide"):
+            check_shard_geometry(_plan("2d5pt"), (30, 64),
+                                 (("data", 4), None))
+
+    def test_shard_smaller_than_halo_raises(self):
+        with pytest.raises(ValueError, match="smaller than the plan's halo"):
+            check_shard_geometry(_plan("2d9pt"), (16, 64),
+                                 (("data", 8), None), time_steps=3)
+
+    def test_non_shape_preserving_axis_raises(self):
+        with pytest.raises(ValueError, match="shape-preserving"):
+            check_shard_geometry(conv2d_plan(3, 3), (32, 64),
+                                 (("data", 4), None))
+
+    def test_ok_returns_local_shape(self):
+        local = check_shard_geometry(_plan("2d5pt"), (32, 64),
+                                     (("data", 4), ("model", 2)))
+        assert local == (8, 32)
+
+
+class TestShardTuningShape:
+    def test_extends_sharded_axes_only(self):
+        plan = _plan("2d9pt")           # radius 2 → (2, 2) halo per axis
+        shape = tuning.shard_tuning_shape(plan, (64, 256),
+                                          (("data", 8), None))
+        assert shape == (64 // 8 + 4, 256)
+
+    def test_single_device_axis_not_extended(self):
+        plan = _plan("2d5pt")
+        shape = tuning.shard_tuning_shape(plan, (64, 256),
+                                          (("data", 1), ("model", 4)))
+        assert shape == (64, 256 // 4 + 2)
+
+
+class TestConv2dSamePlan:
+    """The 'same' conv now lowers through plan lead/trail geometry —
+    single-device output must still match the pad-then-valid oracle."""
+
+    @pytest.mark.parametrize("fs", [(3, 3), (2, 4), (5, 3), (1, 5)])
+    def test_matches_oracle(self, rng, fs):
+        x = jnp.array(rng.standard_normal((24, 56)), jnp.float32)
+        w = jnp.array(rng.standard_normal(fs), jnp.float32)
+        out = conv2d_same(x, w, block_h=8, block_w=32)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(ref.conv2d_same(x, w)),
+                                   rtol=3e-5, atol=3e-5)

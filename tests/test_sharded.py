@@ -1,0 +1,268 @@
+"""Sharded-vs-single-device equivalence for the halo-exchange layer.
+
+Every case runs in a subprocess with a forced 8-device CPU host
+(``--xla_force_host_platform_device_count=8``, same pattern as
+``test_distributed.py``) and asserts that ``ops.stencil`` /
+``ops.conv2d`` under a mesh reproduce the single-device engine output —
+the full Table-3 suite, ``time_steps ∈ {1, 2, 3}``, both schedule
+variants — plus the boundary modes, the pre-``pallas_call``
+``ValueError`` paths, and the autotuner's JSON-sidecar persistence
+(a warm sidecar must make a cold process measure **nothing**).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_with_devices(code: str, n: int = 8, extra_env: dict | None = None) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={n}",
+               PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    env.pop("REPRO_TUNING_CACHE", None)
+    env.update(extra_env or {})
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=500)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+PRELUDE = textwrap.dedent("""
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.kernels import ops, ref
+    from repro.kernels.stencils import BENCHMARKS
+    from repro.launch.mesh import make_domain_mesh
+
+    rng = np.random.default_rng(0)
+    assert jax.device_count() == 8, jax.device_count()
+    mesh2d = make_domain_mesh((2, 4))   # rows over 'data', lanes over 'model'
+
+    def check(name, got, want, tol=1e-5):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=tol, atol=tol, err_msg=name)
+        print("ok", name)
+""")
+
+# Shard sizes must cover the widest Table-3 halo (2ds25pt: radius 6,
+# t=3 → 18 rows per side), hence 64×288 on the 2×4 mesh.
+X2D = "x = jnp.array(rng.standard_normal((64, 288)), jnp.float32)"
+X3D = "x = jnp.array(rng.standard_normal((8, 24, 128)), jnp.float32)"
+
+
+def _suite_code(ndim: int, steps: tuple[int, ...]) -> str:
+    return PRELUDE + textwrap.dedent(f"""
+        {X2D if ndim == 2 else X3D}
+        names = [n for n, d in BENCHMARKS.items() if d.ndim == {ndim}]
+        for name in names:
+            for t in {steps!r}:
+                want = ops.stencil(x, name, time_steps=t, impl="interpret")
+                for variant in ("shift_psum", "shift_data"):
+                    got = ops.stencil(x, name, time_steps=t, impl="interpret",
+                                      variant=variant, mesh=mesh2d)
+                    check(f"{{name}} t{{t}} {{variant}}", got, want)
+        print("DONE")
+    """)
+
+
+@pytest.mark.parametrize("ndim,steps", [(2, (1,)), (2, (2,)), (2, (3,)),
+                                        (3, (1, 2, 3))])
+def test_table3_sharded_matches_single_device(ndim, steps):
+    """Full Table-3 suite: sharded == single-device engine, both variants."""
+    out = run_with_devices(_suite_code(ndim, steps))
+    assert "DONE" in out
+
+
+def test_conv2d_and_meshes():
+    """conv2d 'same' + 1-D mesh + explicit in_specs + overlap=False paths."""
+    code = PRELUDE + textwrap.dedent("""
+        x = jnp.array(rng.standard_normal((64, 288)), jnp.float32)
+        mesh1d = make_domain_mesh((8,))
+        for fs in ((3, 3), (3, 5), (5, 5)):
+            w = jnp.array(rng.standard_normal(fs), jnp.float32)
+            want = ops.conv2d(x, w, impl="interpret")
+            check(f"conv2d {fs} rows-mesh",
+                  ops.conv2d(x, w, impl="interpret", mesh=mesh1d), want)
+            check(f"conv2d {fs} 2d-mesh",
+                  ops.conv2d(x, w, impl="interpret", mesh=mesh2d), want)
+        w = jnp.array(rng.standard_normal((5, 5)), jnp.float32)
+        want = ops.conv2d(x, w, impl="interpret")
+        got = ops.conv2d(x, w, impl="interpret", mesh=mesh2d,
+                         in_specs=P(None, "model"))   # lane-axis only
+        check("conv2d lane-axis spec", got, want)
+        got = ops.stencil(x, "2d9pt", time_steps=2, impl="interpret",
+                          mesh=mesh2d, overlap=False)
+        check("monolithic (overlap=False)",
+              got, ops.stencil(x, "2d9pt", time_steps=2, impl="interpret"))
+        print("DONE")
+    """)
+    assert "DONE" in run_with_devices(code)
+
+
+def test_boundaries():
+    """wrap == periodic reference (any t); replicate == edge-clamp (t=1)."""
+    code = PRELUDE + textwrap.dedent("""
+        x = jnp.array(rng.standard_normal((64, 288)), jnp.float32)
+        sdef = BENCHMARKS["2d5pt"]
+
+        def periodic_ref(x, sdef, t):
+            x = x.astype(jnp.float32)
+            for _ in range(t):
+                out = jnp.zeros_like(x)
+                for off, c in zip(sdef.offsets, sdef.coeffs):
+                    out = out + c * jnp.roll(x, [-o for o in off],
+                                             axis=tuple(range(x.ndim)))
+                x = out
+            return x
+
+        for t in (1, 2, 3):
+            got = ops.stencil(x, "2d5pt", time_steps=t, impl="interpret",
+                              mesh=mesh2d, boundary="wrap")
+            check(f"wrap t{t}", got, periodic_ref(x, sdef, t))
+
+        r = sdef.radius
+        xe = jnp.pad(x, ((r, r), (r, r)), mode="edge")
+        want = jnp.zeros_like(x)
+        for off, c in zip(sdef.offsets, sdef.coeffs):
+            want = want + c * xe[r + off[0]:r + off[0] + x.shape[0],
+                                 r + off[1]:r + off[1] + x.shape[1]]
+        got = ops.stencil(x, "2d5pt", impl="interpret", mesh=mesh2d,
+                          boundary="replicate")
+        check("replicate t1", got, want)
+        print("DONE")
+    """)
+    assert "DONE" in run_with_devices(code)
+
+
+def test_sharding_value_errors():
+    """Bad layouts fail with a clear ValueError before any pallas_call."""
+    code = PRELUDE + textwrap.dedent("""
+        mesh1d = make_domain_mesh((8,))
+        w = jnp.ones((3, 3), jnp.float32)
+
+        def expect(frag, fn):
+            try:
+                fn()
+            except ValueError as e:
+                assert frag in str(e), (frag, str(e))
+                print("ok", frag)
+            else:
+                raise AssertionError(f"no ValueError containing {frag!r}")
+
+        xq = jnp.zeros((30, 256), jnp.float32)
+        expect("does not divide", lambda: ops.stencil(
+            xq, "2d5pt", impl="interpret", mesh=mesh1d,
+            in_specs=P("data", None)))
+        xs = jnp.zeros((16, 256), jnp.float32)
+        expect("smaller than the plan's halo", lambda: ops.stencil(
+            xs, "2d9pt", time_steps=3, impl="interpret", mesh=mesh1d,
+            in_specs=P("data", None)))
+        x = jnp.zeros((64, 256), jnp.float32)
+        expect("mode='same'", lambda: ops.conv2d(
+            x, w, mode="valid", impl="interpret", mesh=mesh1d))
+        expect("time_steps=1 only", lambda: ops.stencil(
+            x, "2d5pt", time_steps=2, impl="interpret", mesh=mesh1d,
+            boundary="replicate"))
+        expect("pjit", lambda: ops.stencil(
+            x, "2d5pt", impl="xla", mesh=mesh1d))
+        expect("at most one mesh axis", lambda: ops.stencil(
+            x, "2d5pt", impl="interpret", mesh=mesh2d,
+            in_specs=P(("data", "model"), None)))
+        print("DONE")
+    """)
+    assert "DONE" in run_with_devices(code)
+
+
+def test_sharded_autotune_targets_shard_shape():
+    """Under a mesh the tuner keys on the halo-extended shard-local shape."""
+    code = PRELUDE + textwrap.dedent("""
+        from repro.core import tuning
+        x = jnp.array(rng.standard_normal((64, 256)), jnp.float32)
+        mesh1d = make_domain_mesh((8,))
+        got = ops.stencil(x, "2d5pt", impl="interpret", mesh=mesh1d,
+                          autotune=True)
+        check("autotuned sharded", got, ops.stencil(x, "2d5pt",
+                                                    impl="interpret"))
+        (key,) = tuning._CACHE
+        _, shape, _, _, ctx = key
+        assert shape == (64 // 8 + 2, 256), shape   # local rows + (1,1) halo
+        assert any("sharded" in str(c) for c in ctx), ctx
+        print("DONE")
+    """)
+    assert "DONE" in run_with_devices(code)
+
+
+class TestSidecarPersistence:
+    """JSON sidecar: write-through, warm reload with zero measurements,
+    nearest-shape seeding. Single device is enough — no mesh involved."""
+
+    def _tune_code(self, assert_zero_measure: bool) -> str:
+        poison = (
+            'def _no_measure(fn, reps=3):\n'
+            '    raise AssertionError("tuning measured despite warm sidecar")\n'
+            'tuning.measure_us = _no_measure\n'
+        ) if assert_zero_measure else ""
+        return textwrap.dedent("""
+            import json, numpy as np, jax.numpy as jnp
+            from repro.core import tuning
+            from repro.kernels import ops, ref
+            from repro.kernels.stencils import BENCHMARKS
+            # POISON
+            x = jnp.array(np.random.default_rng(0)
+                          .standard_normal((64, 128)), jnp.float32)
+            out = ops.stencil(x, "2d5pt", impl="interpret", autotune=True)
+            np.testing.assert_allclose(
+                np.asarray(out),
+                np.asarray(ref.stencil_iterate(x, BENCHMARKS["2d5pt"], 1)),
+                rtol=1e-4, atol=1e-4)
+            y = jnp.array(np.random.default_rng(1)
+                          .standard_normal((96, 160)), jnp.float32)
+            out = ops.stencil(y, "2d5pt", impl="interpret", autotune=True)
+            print(json.dumps(sorted(r.source for r in
+                                    tuning._CACHE.values())))
+        """).replace("# POISON\n", poison)
+
+    def test_cold_start_with_warm_sidecar_measures_nothing(self, tmp_path):
+        sidecar = str(tmp_path / "tuning.json")
+        env = {"REPRO_TUNING_CACHE": sidecar}
+        # first shape measures; the second is already seeded from it
+        out = run_with_devices(self._tune_code(False), n=1, extra_env=env)
+        assert json.loads(out.strip().splitlines()[-1]) == [
+            "measured", "seeded"]
+        doc = json.load(open(sidecar))
+        assert len(doc["entries"]) == 1
+        # cold process, warm sidecar: measure_us poisoned, still succeeds —
+        # exact-shape hit + nearest-shape seed, zero tuning measurements.
+        out = run_with_devices(self._tune_code(True), n=1, extra_env=env)
+        assert json.loads(out.strip().splitlines()[-1]) == [
+            "seeded", "sidecar"]
+
+    def test_unseen_shape_seeds_from_nearest(self, tmp_path):
+        sidecar = str(tmp_path / "tuning.json")
+        env = {"REPRO_TUNING_CACHE": sidecar}
+        run_with_devices(self._tune_code(False), n=1, extra_env=env)
+        code = textwrap.dedent("""
+            import json, numpy as np, jax.numpy as jnp
+            from repro.core import tuning
+            from repro.kernels import ops, ref
+            from repro.kernels.stencils import BENCHMARKS
+            def _no_measure(fn, reps=3):
+                raise AssertionError("seeding must not measure")
+            tuning.measure_us = _no_measure
+            x = jnp.array(np.random.default_rng(2)
+                          .standard_normal((80, 144)), jnp.float32)   # unseen
+            out = ops.stencil(x, "2d5pt", impl="interpret", autotune=True)
+            np.testing.assert_allclose(
+                np.asarray(out),
+                np.asarray(ref.stencil_iterate(x, BENCHMARKS["2d5pt"], 1)),
+                rtol=1e-4, atol=1e-4)
+            (res,) = tuning._CACHE.values()
+            assert res.source == "seeded", res
+            print("DONE")
+        """)
+        assert "DONE" in run_with_devices(code, n=1, extra_env=env)
