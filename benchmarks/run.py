@@ -76,6 +76,49 @@ def bench_conv2d_filter_sweep(img: int = 256):
 
 
 # ---------------------------------------------------------------------------
+# Batched NCHW convolution through the reduce-axes engine (--batch/--channels)
+# ---------------------------------------------------------------------------
+
+def bench_conv2d_batched(batch: int = 4, channels: tuple[int, int] = (3, 8),
+                         img: int = 64, filters: tuple[int, ...] = (3, 5)):
+    """NCHW minibatch conv: engine reduce-axes plan vs XLA direct conv.
+
+    Reports per-image achieved bandwidth (useful traffic: one f32 read
+    of the C_in planes + one write of the C_out planes per image) next
+    to the §5 model's predicted cycles per output element — the
+    per-channel-iterate ``model_cost`` times ``C_in``, since the
+    channel reduction runs the tap group once per input channel.
+    Interpret-mode wall-times compare schedules, not TPU performance.
+    """
+    from repro.core import conv2d_nchw_plan, tuning
+    from repro.kernels import ops, ref
+
+    C_in, C_out = channels
+    rng = np.random.default_rng(0)
+    x = jnp.array(rng.standard_normal((batch, C_in, img, img)), jnp.float32)
+    print(f"# NCHW conv2d: batch={batch} channels={C_in}->{C_out} "
+          f"image {img}x{img} (interpret-mode wall-time)")
+    for fs in filters:
+        w = jnp.array(rng.standard_normal((C_out, C_in, fs, fs)), jnp.float32)
+        t_xla = _timeit(jax.jit(lambda a, b: ref.conv2d_nchw(a, b, "same")),
+                        x, w)
+        t_eng = _timeit(lambda: ops.conv2d(x, w, impl="interpret"))
+        plan = conv2d_nchw_plan(batch, C_in, C_out, fs, fs, mode="same")
+        base = tuning.KernelConfig(tuple(min(b, img) for b in (8, 128)))
+        # §5 prediction: per-output cycles = C_in channel iterates of the
+        # per-iterate block cost (the tap-group cost of one reduce step).
+        cyc = tuning.model_cost(plan, base) * C_in
+        # useful traffic per image (bytes/µs = MB/s; batch cancels out of
+        # the per-image rate, so it never enters the expression)
+        bytes_per_img = (C_in + C_out) * img * img * 4
+        _row(f"conv2d_nchw_xla_{fs}x{fs}", t_xla,
+             f"mb_s_per_img={bytes_per_img / max(t_xla, 1e-9):.2f}")
+        _row(f"conv2d_nchw_engine_{fs}x{fs}", t_eng,
+             f"mb_s_per_img={bytes_per_img / max(t_eng, 1e-9):.2f};"
+             f"model_cyc={cyc:.1f};xla_ratio={t_eng / t_xla:.2f}x")
+
+
+# ---------------------------------------------------------------------------
 # Table 3 / Fig. 5 — stencil suite
 # ---------------------------------------------------------------------------
 
@@ -359,10 +402,22 @@ def main(argv=None) -> None:
     p.add_argument(
         "--time-steps", type=int, default=1,
         help="fused temporal steps for the sharded bench (default 1)")
+    p.add_argument(
+        "--batch", type=int, default=None, metavar="B",
+        help="run the NCHW conv bench with a B-image minibatch through "
+             "the reduce-axes engine plan")
+    p.add_argument(
+        "--channels", default=None, metavar="Cin,Cout",
+        help="input,output channel counts for the NCHW conv bench "
+             "(default 3,8; implies --batch 4 when only --channels given)")
     args = p.parse_args(argv)
     if args.mesh:
         shape = tuple(int(v) for v in args.mesh.lower().split("x"))
         bench_sharded(shape, time_steps=args.time_steps)
+        return
+    if args.batch is not None or args.channels is not None:
+        ch = tuple(int(v) for v in (args.channels or "3,8").split(","))
+        bench_conv2d_batched(args.batch if args.batch is not None else 4, ch)
         return
     bench_perf_model()
     bench_conv2d_filter_sweep()

@@ -19,3 +19,7 @@ SMOKE = dataclasses.replace(
     CONFIG, n_layers=2, d_model=64, n_heads=4, kv_heads=4, head_dim=16,
     d_ff=160, vocab=512, encoder_layers=2, n_frames=16,
 )
+
+# Smoke config with the real mel conv stem through the SSAM engine's
+# reduce-axes plan (whisper-base uses n_mels=80; scaled with the rest).
+SMOKE_CONV = dataclasses.replace(SMOKE, conv_frontend=True, n_mels=8)

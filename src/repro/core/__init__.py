@@ -17,6 +17,8 @@ from .plan import (
     SystolicPlan,
     Tap,
     conv1d_plan,
+    conv2d_batched_plan,
+    conv2d_nchw_plan,
     conv2d_plan,
     conv2d_same_plan,
     depthwise_conv1d_plan,
@@ -47,6 +49,8 @@ __all__ = [
     "Tap",
     "check_shard_geometry",
     "conv1d_plan",
+    "conv2d_batched_plan",
+    "conv2d_nchw_plan",
     "conv2d_plan",
     "conv2d_same_plan",
     "depthwise_conv1d_plan",

@@ -49,11 +49,19 @@ from .plan import SystolicPlan, Tap
 # ---------------------------------------------------------------------------
 
 def _coeff(plan: SystolicPlan, w_ref, tap: Tap, acc_dtype):
-    """Resolve a tap's coefficient per the plan's coeff_mode."""
+    """Resolve a tap's coefficient per the plan's coeff_mode.
+
+    For reduce plans the coefficient block carries ``out_axes +
+    reduce_axes`` leading block-1 axes (the grid already selected the
+    (c_out, c_in) slice via the BlockSpec index map), so the tap's
+    ``coeff_id`` is prefixed with zeros — the *channel-reduction tap
+    group*: same taps, one coefficient slice per reduce iterate.
+    """
     if plan.coeff_mode == "table":          # compile-time immediate (§4.8)
         return plan.coeffs[tap.coeff_id[-1]]
     if plan.coeff_mode == "dense":          # runtime filter, scalar element
-        return w_ref[tap.coeff_id].astype(acc_dtype)
+        pre = (0,) * (plan.out_axes + plan.reduce_axes)
+        return w_ref[pre + tap.coeff_id].astype(acc_dtype)
     if plan.coeff_mode == "perlane":        # runtime per-lane coefficient row
         return w_ref[tap.coeff_id[-1], :].astype(acc_dtype)
     raise ValueError(plan.coeff_mode)
@@ -74,14 +82,22 @@ def _window_kernel(*refs, plan: SystolicPlan, block: tuple[int, ...],
                    time_steps: int, variant: str, acc_dtype):
     """One overlapped block of any windowed plan.
 
-    ``refs`` is ``(x_ref, [w_ref,] o_ref)``. The block runs ``time_steps``
-    fused plan applications (§6.4); each iterate consumes one footprint of
-    halo per axis and the valid lanes shrink by M−1 (§4.4).
+    ``refs`` is ``(x_ref, [w_ref,] o_ref[, acc_ref])``. The block runs
+    ``time_steps`` fused plan applications (§6.4); each iterate consumes
+    one footprint of halo per axis and the valid lanes shrink by M−1
+    (§4.4). Reduce plans carry the block's partial sum in an fp32 VMEM
+    scratch accumulator across the (innermost, sequential) reduce grid
+    iterates and write the output on the last one — §2's shift-psum
+    dataflow applied across channels instead of lanes.
     """
+    nb, nr, no = plan.batch_axes, plan.reduce_axes, plan.out_axes
     x_ref = refs[0]
     w_ref = refs[1] if plan.coeff_mode != "table" else None
-    o_ref = refs[-1]
-    xb = (x_ref[0] if plan.batch_axes else x_ref[...]).astype(acc_dtype)
+    if nr:
+        o_ref, acc_ref = refs[-2], refs[-1]
+    else:
+        o_ref = refs[-1]
+    xb = (x_ref[(0,) * (nb + nr)] if nb + nr else x_ref[...]).astype(acc_dtype)
     exts = plan.exts
     M = plan.M
     for _ in range(time_steps):
@@ -111,11 +127,30 @@ def _window_kernel(*refs, plan: SystolicPlan, block: tuple[int, ...],
             xb = s[..., : valid[-1]]
         else:
             raise ValueError(variant)
-    out = xb[tuple(slice(0, b) for b in block)].astype(o_ref.dtype)
-    if plan.batch_axes:
-        o_ref[0] = out
+    res = xb[tuple(slice(0, b) for b in block)]
+    o_idx = (0,) * (nb + no) if nb + no else ...
+    if nr:
+        # Reduce grid dims are innermost: per output block the sweep is
+        # sequential, so the scratch accumulator is exact fp32 ⊕ (§2).
+        rdims = range(nb + no + plan.ndim_spatial,
+                      nb + no + plan.ndim_spatial + nr)
+        first = functools.reduce(
+            jnp.logical_and, [pl.program_id(d) == 0 for d in rdims])
+        last = functools.reduce(
+            jnp.logical_and,
+            [pl.program_id(d) == pl.num_programs(d) - 1 for d in rdims])
+
+        @pl.when(first)
+        def _reset():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        acc_ref[...] += res.astype(acc_ref.dtype)
+
+        @pl.when(last)
+        def _flush():
+            o_ref[o_idx] = acc_ref[...].astype(o_ref.dtype)
     else:
-        o_ref[...] = out
+        o_ref[o_idx] = res.astype(o_ref.dtype)
 
 
 @functools.partial(
@@ -137,23 +172,34 @@ def run_window_plan(
     """Lower a windowed plan to a Pallas call and run it.
 
     Args:
-      x: ``batch_axes + ndim_spatial``-dim input, lane axis last.
-      w: runtime coefficients for ``coeff_mode`` 'dense' (full filter) or
-        'perlane' (``(K, lanes)`` rows); None for 'table' plans.
+      x: ``batch_axes + reduce_axes + ndim_spatial``-dim input, lane axis
+        last.
+      w: runtime coefficients for ``coeff_mode`` 'dense' (full filter,
+        prefixed by ``out_axes + reduce_axes`` channel axes for reduce
+        plans) or 'perlane' (``(K, lanes)`` rows); None for 'table' plans.
       plan: the systolic schedule + geometry (lead/trail, footprint).
       block: output block size per windowed axis, lane axis last.
       time_steps: fused plan applications per block (§6.4).
 
     Returns:
-      The plan's output: per windowed axis,
-      ``out = in + t·(lead+trail) − t·(ext−1)``.
+      The plan's output, ``batch + out_axes + spatial``-shaped: per
+      windowed axis, ``out = in + t·(lead+trail) − t·(ext−1)``; reduce
+      axes are contracted away (fp32 grid accumulator).
     """
-    nb, nd = plan.batch_axes, plan.ndim_spatial
-    assert nb in (0, 1), f"engine supports at most one batch axis, got {nb}"
-    assert x.ndim == nb + nd, (x.shape, nb, nd)
+    nb, nr, no, nd = (plan.batch_axes, plan.reduce_axes, plan.out_axes,
+                      plan.ndim_spatial)
+    assert x.ndim == nb + nr + nd, (x.shape, nb, nr, nd)
     assert len(block) == nd, (block, nd)
+    if nr or no:
+        assert plan.coeff_mode == "dense" and w is not None, (
+            "reduce/out axes need a dense runtime coefficient array")
+        assert w.ndim == no + nr + 2, (w.shape, no, nr)
+        assert time_steps == 1, (
+            "temporal blocking does not commute with a channel reduction: "
+            "iterate t must see the *summed* output of iterate t-1, which "
+            "only exists after the full reduce sweep")
     t = time_steps
-    spatial_in = x.shape[nb:]
+    spatial_in = x.shape[nb + nr:]
     out_sp = plan.out_shape(spatial_in, t)
     assert all(o >= 1 for o in out_sp), (spatial_in, out_sp)
 
@@ -162,29 +208,44 @@ def run_window_plan(
     # Origin + round-up padding (core.halo): t·lead zeros ahead of the
     # origin, then enough behind so every (including the last) overlapped
     # input block is in-bounds.
-    pads = [(0, 0)] * nb + origin_pads(plan, spatial_in, g, B, t)
+    pads = [(0, 0)] * (nb + nr) + origin_pads(plan, spatial_in, g, B, t)
     xp = jnp.pad(x, pads)
+
+    # Grid layout: batch × out × spatial × reduce — reduce innermost so
+    # the sweep over it is sequential per output block and the scratch
+    # accumulator carries (the matmul-k pattern of the TPU grid).
+    batch_dims = x.shape[:nb]
+    out_dims = w.shape[:no] if no else ()
+    red_dims = x.shape[nb:nb + nr]
+    grid = batch_dims + out_dims + g + red_dims
+    sp0 = nb + no                      # first spatial grid dim
+    rd0 = sp0 + nd                     # first reduce grid dim
 
     # Overlapped input blocks (§4.5): element-indexed specs — output tiles
     # are disjoint, input tiles overlap by the halo, so grid steps never
     # communicate (the TPU analogue of the paper's branch-free warp blocks).
     in_block = plan.block_in_shape(B, t)
     x_spec = pl.BlockSpec(
-        (1,) * nb + in_block,
-        lambda *ids: ids[:nb] + tuple(
-            i * b for i, b in zip(ids[nb:], B)),
+        (1,) * (nb + nr) + in_block,
+        lambda *ids: ids[:nb] + ids[rd0:rd0 + nr] + tuple(
+            i * b for i, b in zip(ids[sp0:sp0 + nd], B)),
         indexing_mode=pl.Unblocked(),
     )
     in_specs = [x_spec]
     operands = [xp]
     if plan.coeff_mode == "dense":
-        in_specs.append(pl.BlockSpec(w.shape, lambda *ids: (0,) * w.ndim))
+        fil = w.shape[no + nr:]
+        in_specs.append(pl.BlockSpec(
+            (1,) * (no + nr) + fil,
+            lambda *ids: ids[nb:nb + no] + ids[rd0:rd0 + nr]
+            + (0,) * len(fil)))
         operands.append(w)
     elif plan.coeff_mode == "perlane":
         assert w.shape[-1] == spatial_in[-1], (w.shape, spatial_in)
         wp = jnp.pad(w, ((0, 0), (0, g[-1] * B[-1] - w.shape[-1])))
         in_specs.append(
-            pl.BlockSpec((w.shape[0], B[-1]), lambda *ids: (0, ids[-1])))
+            pl.BlockSpec((w.shape[0], B[-1]),
+                         lambda *ids: (0, ids[sp0 + nd - 1])))
         operands.append(wp)
 
     kern = functools.partial(
@@ -193,14 +254,18 @@ def run_window_plan(
     )
     out = pl.pallas_call(
         kern,
-        grid=x.shape[:nb] + g,
+        grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1,) * nb + B, lambda *ids: ids),
+        out_specs=pl.BlockSpec((1,) * (nb + no) + B,
+                               lambda *ids: ids[:rd0]),
         out_shape=jax.ShapeDtypeStruct(
-            x.shape[:nb] + tuple(gi * bi for gi, bi in zip(g, B)), x.dtype),
+            batch_dims + out_dims + tuple(gi * bi for gi, bi in zip(g, B)),
+            x.dtype),
+        scratch_shapes=[pltpu.VMEM(B, acc_dtype)] if nr else [],
         interpret=interpret,
     )(*operands)
-    return out[(slice(None),) * nb + tuple(slice(0, o) for o in out_sp)]
+    return out[(slice(None),) * (nb + no)
+               + tuple(slice(0, o) for o in out_sp)]
 
 
 # ---------------------------------------------------------------------------

@@ -82,7 +82,22 @@ class SystolicPlan:
     * ``depth``/``ndim_spatial`` — footprint extent along Z and the number
       of windowed (blocked, overlapped) axes; the lane axis is always last.
     * ``batch_axes`` — leading axes iterated by the grid with block size 1
-      (the depthwise-conv batch dimension).
+      (the depthwise-conv batch dimension). Batch axes appear on both the
+      input and the output.
+    * ``reduce_axes`` — leading input axes (after the batch axes)
+      iterated by the grid with block size 1 whose partial results are
+      **accumulated** rather than written separately: the engine carries
+      an fp32 accumulator across the reduce iterates and writes the
+      output on the last one. This is the §2 shift-psum dataflow applied
+      across channels instead of lanes — each reduce iterate runs the
+      plan's full tap schedule (the *channel-reduction tap group*) and
+      ⊕-combines into the running block sum. The NCHW ``C_in`` axis.
+    * ``out_axes`` — leading axes of the *output and the coefficient
+      array* that the input lacks (the NCHW ``C_out``): iterated by the
+      grid with block size 1, selecting which coefficient slice the tap
+      group reads. Operand shapes for a reduce plan are therefore
+      ``x: batch + reduce + spatial``, ``w: out + reduce + filter``,
+      ``out: batch + out + spatial``.
     * ``lead``/``trail`` — semantic zero-padding per windowed axis applied
       ahead of / behind the data origin *per temporal iterate*: a stencil
       plan pads by its footprint (same-shape output), a causal conv pads
@@ -103,7 +118,9 @@ class SystolicPlan:
     combine: str = "fma"  # O of Eq. 1: 'fma' (r⊗x ⊕ s) or 'add' (scan) or 'linrec'
     depth: int = 1        # Z extent of the footprint (3-D plans)
     ndim_spatial: int = 2  # windowed axes (lane axis last): 2 or 3
-    batch_axes: int = 0   # leading grid axes with block size 1
+    batch_axes: int = 0   # leading grid axes with block size 1 (x and out)
+    reduce_axes: int = 0  # contracted leading x axes (fp32 grid accumulator)
+    out_axes: int = 0     # leading out/coeff axes the input lacks (C_out)
     lead: tuple[int, ...] | None = None   # zero-pad ahead of origin per axis
     trail: tuple[int, ...] | None = None  # zero-pad behind the data per axis
     coeffs: tuple[float, ...] | None = None  # immediates for 'table' mode
@@ -233,6 +250,55 @@ def conv2d_same_plan(M: int, N: int, *, S: int = TPU_VREG_LANES, P: int = 4) -> 
     top, left = (N - 1) // 2, (M - 1) // 2
     return dataclasses.replace(
         base, lead=(top, left), trail=(N - 1 - top, M - 1 - left))
+
+
+def conv2d_batched_plan(
+    M: int, N: int, *, S: int = TPU_VREG_LANES, P: int = 4,
+    mode: str = "valid",
+) -> SystolicPlan:
+    """A minibatch of single-channel images through Listing 1's schedule.
+
+    Identical steps/taps to :func:`conv2d_plan`; the leading image axis
+    becomes a block-1 grid axis (``batch_axes=1``), so a ``(B, H, W)``
+    stack convolves against one ``(N, M)`` filter in a single engine
+    call — no Python loop over images.
+    """
+    base = conv2d_same_plan(M, N, S=S, P=P) if mode == "same" \
+        else conv2d_plan(M, N, S=S, P=P)
+    return dataclasses.replace(base, batch_axes=1)
+
+
+def conv2d_nchw_plan(
+    B: int, C_in: int, C_out: int, M: int, N: int,
+    *, S: int = TPU_VREG_LANES, P: int = 4, mode: str = "valid",
+) -> SystolicPlan:
+    """Batched multi-channel NCHW convolution — the paper's headline
+    convolution workload (2.5× over NPP for general 2-D filters),
+    expressed as reduction axes over Listing 1's schedule.
+
+    The plan is :func:`conv2d_plan`'s M-step/N-tap schedule with three
+    grid axes layered on top: the minibatch ``B`` (``batch_axes=1``),
+    the output channel ``C_out`` (``out_axes=1`` — selects the
+    ``w[c_out]`` coefficient slice per iterate) and the input channel
+    ``C_in`` (``reduce_axes=1`` — the engine ⊕-accumulates the tap
+    group's partial sums across iterates in an fp32 scratch block and
+    writes the output on the last one). Operands:
+    ``x (B, C_in, H, W)``, ``w (C_out, C_in, N, M)``,
+    ``out (B, C_out, H', W')``.
+
+    ``B``/``C_in``/``C_out`` are validated here but *not* baked into the
+    frozen plan: the engine reads the grid extents off the operand
+    shapes, so one plan signature covers every batch/channel count and
+    the tuning sidecar's nearest-shape seeding keeps working across
+    them (shapes carry B/C; the schedule does not need to).
+    """
+    for nm, v in (("B", B), ("C_in", C_in), ("C_out", C_out)):
+        if v < 1:
+            raise ValueError(f"conv2d_nchw_plan: {nm} must be >= 1, got {v}")
+    base = conv2d_same_plan(M, N, S=S, P=P) if mode == "same" \
+        else conv2d_plan(M, N, S=S, P=P)
+    return dataclasses.replace(
+        base, kind="conv2d_nchw", batch_axes=1, reduce_axes=1, out_axes=1)
 
 
 def stencil2d_plan(

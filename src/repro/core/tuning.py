@@ -57,6 +57,17 @@ from .plan import SystolicPlan
 
 SIDECAR_ENV = "REPRO_TUNING_CACHE"
 
+# Engine schema version stamped on every sidecar entry. Bump whenever the
+# engine's lowering changes what a measured winner *means* (block
+# semantics, grid layout, accumulator placement) — stale entries are
+# ignored on load and dropped on the next write-through, so a sidecar
+# shipped with a checkpoint ages out instead of silently replaying
+# configs measured against a different kernel.
+#   v1 — PR 1/2 lowering (spatial grids only).
+#   v2 — reduction axes: grid gained out/reduce dims + scratch
+#        accumulator; NCHW/batched shapes join the key space.
+ENGINE_SCHEMA_VERSION = 2
+
 # VMEM working-set budget per block (f32 elements): input block + psum +
 # output must fit comfortably in ~16 MB VMEM; stay conservative.
 VMEM_BUDGET_ELEMS = 1 << 20
@@ -141,11 +152,19 @@ def sidecar_path() -> str | None:
 
 
 def load_sidecar(path: str) -> int:
-    """Merge a sidecar file into the persistent store; returns #entries."""
+    """Merge a sidecar file into the persistent store; returns #entries.
+
+    Entries whose ``schema`` does not match :data:`ENGINE_SCHEMA_VERSION`
+    are *stale* — measured against a different engine lowering — and are
+    skipped (the next :func:`save_sidecar` rewrites the file without
+    them, so staleness ages out rather than accumulating).
+    """
     with open(path) as f:
         doc = json.load(f)
     n = 0
     for key, val in doc.get("entries", {}).items():
+        if val.get("schema", 1) != ENGINE_SCHEMA_VERSION:
+            continue
         cfg = KernelConfig(tuple(val["block"]), val.get("variant", "shift_psum"))
         _SIDECAR[key] = (cfg, val.get("model_cost", 0.0), val.get("measured_us"))
         n += 1
@@ -165,6 +184,10 @@ def save_sidecar(path: str | None = None) -> str | None:
         try:
             load_file_only = json.load(open(path)).get("entries", {})
             for key, val in load_file_only.items():
+                # Stale-schema entries are dropped here: ignored on load,
+                # not re-merged on save — the rewrite ages them out.
+                if val.get("schema", 1) != ENGINE_SCHEMA_VERSION:
+                    continue
                 if key not in _SIDECAR:
                     _SIDECAR[key] = (
                         KernelConfig(tuple(val["block"]),
@@ -174,7 +197,8 @@ def save_sidecar(path: str | None = None) -> str | None:
             pass      # unreadable file: overwrite with our entries
     entries = {
         key: {"block": list(cfg.block), "variant": cfg.variant,
-              "model_cost": cost, "measured_us": us}
+              "model_cost": cost, "measured_us": us,
+              "schema": ENGINE_SCHEMA_VERSION}
         for key, (cfg, cost, us) in sorted(_SIDECAR.items())
     }
     tmp = f"{path}.tmp.{os.getpid()}"
@@ -257,7 +281,7 @@ def candidate_configs(
                     out.append(cfg)
         return sorted(set(out), key=lambda c: c.block)
 
-    spatial = tuple(shape)[plan.batch_axes:]
+    spatial = tuple(shape)[plan.batch_axes + plan.reduce_axes:]
     out_sp = plan.out_shape(spatial, time_steps)
     axes: list[tuple[int, ...]] = []
     if plan.ndim_spatial == 3:
@@ -290,7 +314,14 @@ def model_cost(
     time_steps: int = 1,
     hw: HardwareLatencies = TPU_V5E,
 ) -> float:
-    """Estimated cycles per useful output element for one block config."""
+    """Estimated cycles per useful output element for one block config.
+
+    For reduce plans (NCHW conv) this is the cost of *one channel
+    iterate* per output element; the full per-output cost scales by
+    ``C_in``, which multiplies every candidate identically and so drops
+    out of the ranking (the bench applies the C_in factor when quoting
+    absolute predictions).
+    """
     t = time_steps
     if plan.combine != "fma":                       # Kogge–Stone scan
         br, bt = cfg.block

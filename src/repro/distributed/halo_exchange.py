@@ -71,6 +71,23 @@ def default_domain_spec(shape, mesh: Mesh, rules=None) -> P:
     return pspec_for_axes(names, shape, mesh, rules)
 
 
+def default_plan_spec(plan: SystolicPlan, shape, mesh: Mesh, rules=None) -> P:
+    """Default PartitionSpec for a plan's full input layout.
+
+    Batch axes resolve through the rule tables' ``"batch"`` entry
+    (→ the fast ``data`` axis), reduce axes stay replicated (sharding a
+    contraction would need a cross-device psum), and the windowed axes
+    get the usual ``rows``/``cols``/``depth`` resolution. Because
+    ``pspec_for_axes`` never reuses a mesh axis, a sharded batch axis
+    automatically leaves ``rows`` unsharded — batch parallelism first,
+    halo exchange only where axes remain.
+    """
+    nb, nr = plan.batch_axes, plan.reduce_axes
+    spatial = DOMAIN_AXES_3D if plan.ndim_spatial == 3 else DOMAIN_AXES_2D
+    names = ("batch",) * nb + (None,) * nr + spatial
+    return pspec_for_axes(names, shape, mesh, rules)
+
+
 def _axis_assignments(
     spec, mesh: Mesh, ndim: int
 ) -> tuple[tuple[str, int] | None, ...]:
@@ -199,14 +216,27 @@ def _local_lowering(
     xl, wl, *, plan, block, time_steps, variant, boundary, interpret,
     acc_dtype, assigns, halos, overlap,
 ):
-    """The per-shard program: exchange → interior compute → frame splice."""
+    """The per-shard program: exchange → interior compute → frame splice.
+
+    Batched plans pass through transparently: batch/reduce axes sit
+    ahead of the windowed axes on the input (``in_off``) and batch/out
+    axes ahead of them on the output (``out_off``); halo extension,
+    cropping and the frame splice all index relative to those offsets,
+    while the batch entries themselves were already scattered by
+    ``shard_map`` (no exchange — batch items are independent).
+    """
     nd = plan.ndim_spatial
-    local = xl.shape
+    in_off = plan.batch_axes + plan.reduce_axes
+    out_off = plan.batch_axes + plan.out_axes
+    pre_in = (slice(None),) * in_off
+    pre_out = (slice(None),) * out_off
+    local = xl.shape[in_off:]
     ext = xl
     for a in range(nd):
         lo, hi = halos[a]
-        ext = _extend_axis(ext, a, lo, hi, assigns[a], boundary)
-    exchanged = tuple(a for a in range(nd) if ext.shape[a] != local[a])
+        ext = _extend_axis(ext, in_off + a, lo, hi, assigns[a], boundary)
+    exchanged = tuple(
+        a for a in range(nd) if ext.shape[in_off + a] != local[a])
 
     engine = functools.partial(
         run_window_plan, plan=plan, block=block, time_steps=time_steps,
@@ -220,7 +250,7 @@ def _local_lowering(
             extended_crop(plan, time_steps, a, local[a])
             if a in exchanged else slice(0, local[a])
             for a in range(nd))
-        return out[sl]
+        return out[pre_out + sl]
 
     if not exchanged:
         return cropped(ext)
@@ -246,9 +276,10 @@ def _local_lowering(
             else:
                 slab_sl.append(slice(None))
                 strip_crop.append(slice(lo_r, hi_r))
-        strip = ext[tuple(slab_sl)]
+        strip = ext[pre_in + tuple(slab_sl)]
         s_out = engine(strip, wl) if wl is not None else engine(strip)
-        out = out.at[tuple(out_sl)].set(s_out[tuple(strip_crop)])
+        out = out.at[pre_out + tuple(out_sl)].set(
+            s_out[pre_out + tuple(strip_crop)])
     return out
 
 
@@ -271,15 +302,18 @@ def sharded_window_plan(
     """Run a windowed plan on a domain sharded over a device mesh.
 
     Args:
-      x: the global domain (2-D/3-D, lane axis last). May be host-global;
-        ``shard_map`` scatters it per ``in_spec``.
+      x: the global domain, lane axis last, with the plan's batch and
+        reduce axes (if any) leading. May be host-global; ``shard_map``
+        scatters it per ``in_spec``.
       w: runtime coefficients (replicated to every shard), or None.
-      plan: any windowed :class:`SystolicPlan` whose sharded axes are
-        shape-preserving.
+      plan: any windowed :class:`SystolicPlan` whose sharded *spatial*
+        axes are shape-preserving. Batch axes shard without any halo
+        exchange (items are independent); reduce axes must stay
+        replicated (a sharded contraction would need a psum).
       mesh: a 1-D/2-D device mesh (e.g. ``launch.mesh.make_domain_mesh``).
-      in_spec: PartitionSpec mapping domain axes to mesh axes; at most
-        one mesh axis per domain axis. Defaults to the rule-table
-        resolution of :func:`default_domain_spec`.
+      in_spec: PartitionSpec mapping input axes (batch + reduce +
+        domain) to mesh axes; at most one mesh axis per axis. Defaults
+        to the rule-table resolution of :func:`default_plan_spec`.
       block / time_steps / variant / interpret / acc_dtype: forwarded to
         the engine, per shard.
       boundary: 'zero' (the engine's semantics — domain-edge shards
@@ -293,11 +327,9 @@ def sharded_window_plan(
         (XLA may contract FMAs differently in the recomputed frame).
 
     Returns:
-      The plan's output, sharded exactly like the input.
+      The plan's output (batch + out + spatial axes), batch and spatial
+      axes sharded exactly like the input.
     """
-    if plan.batch_axes:
-        raise ValueError("sharded execution supports spatial plans only "
-                         f"(plan {plan.kind!r} has batch axes)")
     if boundary not in BOUNDARIES:
         raise ValueError(f"boundary must be one of {BOUNDARIES}, "
                          f"got {boundary!r}")
@@ -306,10 +338,11 @@ def sharded_window_plan(
             "boundary='replicate' supports time_steps=1 only: a clamped "
             "halo is static while the true clamped boundary evolves under "
             "temporal fusion")
-    nd = plan.ndim_spatial
-    if x.ndim != nd:
-        raise ValueError(f"{plan.kind!r} plan wants a {nd}-D domain, "
-                         f"got shape {x.shape}")
+    nb, nr, no, nd = (plan.batch_axes, plan.reduce_axes, plan.out_axes,
+                      plan.ndim_spatial)
+    if x.ndim != nb + nr + nd:
+        raise ValueError(f"{plan.kind!r} plan wants a "
+                         f"{nb + nr + nd}-D input, got shape {x.shape}")
     for a in range(nd):
         if not is_shape_preserving(plan, a):
             raise ValueError(
@@ -319,9 +352,24 @@ def sharded_window_plan(
                 f"axis {a}. For conv2d use mode='same' "
                 "(core.plan.conv2d_same_plan).")
     if in_spec is None:
-        in_spec = default_domain_spec(x.shape, mesh, rules)
-    assigns = _axis_assignments(in_spec, mesh, nd)
-    local = check_shard_geometry(plan, x.shape, assigns, time_steps)
+        in_spec = default_plan_spec(plan, x.shape, mesh, rules)
+    all_assigns = _axis_assignments(in_spec, mesh, nb + nr + nd)
+    batch_assigns = all_assigns[:nb]
+    for a, assign in enumerate(all_assigns[nb:nb + nr]):
+        if assign is not None:
+            raise ValueError(
+                f"reduce axis {a} of a {plan.kind!r} plan cannot be "
+                f"sharded (mesh axis {assign[0]!r}): the channel "
+                "reduction is carried in the engine's accumulator, not a "
+                "cross-device psum; shard the batch or spatial axes")
+    for a, (n, assign) in enumerate(zip(x.shape[:nb], batch_assigns)):
+        if assign is not None and n % assign[1] != 0:
+            raise ValueError(
+                f"mesh axis {assign[0]!r} (size {assign[1]}) does not "
+                f"divide batch axis {a} (size {n}) for {plan.kind!r}")
+    assigns = all_assigns[nb + nr:]
+    local = check_shard_geometry(plan, x.shape[nb + nr:], assigns,
+                                 time_steps)
     halos = shard_halo(plan, time_steps)
     if boundary != "zero":
         # wrap/replicate also extend unsharded axes, locally — the
@@ -333,7 +381,10 @@ def sharded_window_plan(
                     f"its own axis-{a} halo: {n} rows per shard < "
                     f"({lo}, {hi}) halo")
 
-    spec_full = P(*(a[0] if a else None for a in assigns))
+    b_names = tuple(a[0] if a else None for a in batch_assigns)
+    s_names = tuple(a[0] if a else None for a in assigns)
+    spec_in = P(*b_names, *((None,) * nr), *s_names)
+    spec_out = P(*b_names, *((None,) * no), *s_names)
     w_args, w_specs = ((w,), (P(),)) if w is not None else ((), ())
 
     fn = functools.partial(
@@ -344,8 +395,8 @@ def sharded_window_plan(
     sharded = shm.shard_map(
         lambda xs, *ws: fn(xs, ws[0] if ws else None),
         mesh=mesh,
-        in_specs=(spec_full,) + w_specs,
-        out_specs=spec_full,
+        in_specs=(spec_in,) + w_specs,
+        out_specs=spec_out,
         check_rep=False,
     )
     return sharded(x, *w_args)

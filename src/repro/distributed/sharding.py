@@ -34,6 +34,8 @@ DEFAULT_RULES: dict[str, tuple[str, ...]] = {
     "state": (),
     "lora": (),
     "conv": (),
+    "conv_in": (),              # conv2d filter channels: replicated —
+    "conv_out": (),             # the engine shards activations instead
     # Windowed-kernel domain axes (halo_exchange): stencil/conv grids
     # shard rows over the fast "data" axis and lanes over "model";
     # the Z extent of 3-D domains stays resident per shard.

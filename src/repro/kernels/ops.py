@@ -62,12 +62,19 @@ def _interp(impl: str) -> bool:
 
 _DEFAULTS = {
     "conv2d": tuning.KernelConfig((8, 128)),
+    "conv2d_nchw": tuning.KernelConfig((8, 128)),
     "stencil2d": tuning.KernelConfig((8, 128)),
     "stencil3d": tuning.KernelConfig((4, 8, 128)),
     "conv1d": tuning.KernelConfig((128, 128)),
     "scan": tuning.KernelConfig((8, 128)),
     "recurrence": tuning.KernelConfig((8, 128)),
 }
+
+
+def engine_interpret() -> bool:
+    """Whether engine-lowered paths should run the Pallas interpreter
+    (non-TPU backends) or compiled Mosaic (real TPU)."""
+    return jax.default_backend() != "tpu"
 
 
 def _engine_block(plan, kw: dict) -> tuple[tuple[int, ...], str, dict]:
@@ -86,7 +93,7 @@ def _sharded(plan, x, w, *, mesh, in_specs, time_steps, boundary, impl, kw):
     """Dispatch a windowed op through the halo-exchange layer."""
     from repro.distributed import halo_exchange as hx
     spec = in_specs if in_specs is not None else \
-        hx.default_domain_spec(x.shape, mesh)
+        hx.default_plan_spec(plan, x.shape, mesh)
     block, variant, rest = _engine_block(plan, kw)
     return hx.sharded_window_plan(
         x, w, plan=plan, mesh=mesh, in_spec=spec, block=block,
@@ -97,13 +104,19 @@ def _sharded(plan, x, w, *, mesh, in_specs, time_steps, boundary, impl, kw):
 def _shard_tuning_call(plan, x, mesh, in_specs, time_steps, boundary):
     """(shape, context) the sharded autotune must target: the per-device
     halo-extended block, keyed so winners never leak across meshes or
-    boundary modes."""
+    boundary modes. For batched plans the leading batch axes shrink to
+    their per-shard extent (reduce axes are never sharded)."""
     from repro.distributed import halo_exchange as hx
     spec = in_specs if in_specs is not None else \
-        hx.default_domain_spec(x.shape, mesh)
-    assigns = hx._axis_assignments(spec, mesh, plan.ndim_spatial)
-    shape = tuning.shard_tuning_shape(plan, x.shape, assigns, time_steps,
-                                      boundary)
+        hx.default_plan_spec(plan, x.shape, mesh)
+    nb, nr = plan.batch_axes, plan.reduce_axes
+    assigns = hx._axis_assignments(spec, mesh, nb + nr + plan.ndim_spatial)
+    spatial = tuning.shard_tuning_shape(
+        plan, x.shape[nb + nr:], assigns[nb + nr:], time_steps, boundary)
+    shape = tuple(
+        n // (a[1] if a else 1)
+        for n, a in zip(x.shape[:nb], assigns[:nb])
+    ) + x.shape[nb:nb + nr] + spatial
     return shape, ("sharded", boundary) + tuple(
         f"{a[0]}:{a[1]}" if a else "-" for a in assigns)
 
@@ -129,19 +142,73 @@ def _tuned_kwargs(plan, shape, call, user_kw, *, time_steps: int = 1,
 def conv2d(x, w, *, mode: str = "same", impl: str | None = None,
            autotune: bool = False, mesh=None, in_specs=None,
            boundary: str = "zero", **kw):
+    """2-D convolution, dispatched on input rank:
+
+    * ``(H, W)``            — single image, single channel (the paper's
+      Listing 1 plan).
+    * ``(B, H, W)``         — minibatch of single-channel images against
+      one ``(N, M)`` filter (block-1 batch grid axis).
+    * ``(B, C_in, H, W)``   — NCHW minibatch against an OIHW
+      ``(C_out, C_in, N, M)`` filter through the reduce-axes plan: the
+      engine grid iterates batch × C_out × spatial × C_in with an fp32
+      accumulator across the channel reduction — no Python loop over
+      batch or channels.
+
+    Tuner contexts carry the rank tag and the full operand shape, so
+    batched/NCHW winners never collide with single-image winners in the
+    cache or the JSON sidecar.
+    """
     impl = impl or default_impl()
+    if x.ndim == 4:
+        if w.ndim != 4:
+            raise ValueError(
+                f"conv2d on a 4-D NCHW input needs an OIHW "
+                f"(C_out, C_in, N, M) filter, got w shape {tuple(w.shape)}")
+        tag = "conv2d_nchw"
+        ref_fn = lambda xx, m: ref.conv2d_nchw(xx, w, m)
+        plan_fn = lambda: _c2.plan_for_nchw(x.shape, w.shape, mode)
+        kernel = lambda xs, **k: _c2.conv2d_nchw(xs, w, mode=mode, **k)
+    elif x.ndim == 3:
+        if w.ndim != 2:
+            raise ValueError(
+                f"conv2d on a 3-D (B, H, W) stack needs a 2-D (N, M) "
+                f"filter, got w shape {tuple(w.shape)}; for a multi-channel "
+                "minibatch pass a 4-D NCHW input with an OIHW filter")
+        tag = "conv2d_batched"
+        ref_fn = lambda xx, m: ref.conv2d_batched(xx, w, m)
+        plan_fn = lambda: _c2.plan_for_batched(w.shape, mode)
+        kernel = lambda xs, **k: _c2.conv2d_batched(xs, w, mode=mode, **k)
+    else:
+        tag = "conv2d"
+        ref_fn = lambda xx, m: (ref.conv2d_same(xx, w) if m == "same"
+                                else ref.conv2d_valid(xx, w))
+        plan_fn = lambda: _c2.plan_for(w.shape, mode)
+        kernel = lambda xs, **k: (
+            _c2.conv2d_same(xs, w, **k) if mode == "same"
+            else _c2.conv2d_valid(xs, w, **k))
     if impl == "xla":
         if mesh is not None:
             raise ValueError("mesh= needs the engine path; the 'xla' oracle "
                              "is already shardable under pjit")
-        return ref.conv2d_same(x, w) if mode == "same" else ref.conv2d_valid(x, w)
+        return ref_fn(x, mode)
+    return _conv2d_engine(x, w, plan=plan_fn(), kernel=kernel, tag=tag,
+                          mode=mode, impl=impl, autotune=autotune, mesh=mesh,
+                          in_specs=in_specs, boundary=boundary, kw=kw)
+
+
+def _conv2d_engine(x, w, *, plan, kernel, tag, mode, impl, autotune, mesh,
+                   in_specs, boundary, kw):
+    """Shared mesh/autotune scaffolding for every conv2d rank.
+
+    ``kernel(xs, interpret=..., **block_kwargs)`` lowers the engine call
+    on ``xs``; ``plan`` is its schedule; ``tag`` keys the tuner context.
+    """
     interpret = _interp(impl)
     if mesh is not None:
         if mode != "same":
             raise ValueError(
                 "sharded conv2d supports mode='same' only: 'valid' shrinks "
                 "the domain, so shards would not own equal output slices")
-        plan = _c2.plan_for(w.shape, "same")
         if autotune:
             shape, sctx = _shard_tuning_call(plan, x, mesh, in_specs, 1,
                                              boundary)
@@ -149,18 +216,17 @@ def conv2d(x, w, *, mode: str = "same", impl: str | None = None,
             sharded_kw = {k: kw.pop(k) for k in ("overlap",) if k in kw}
             kw = _tuned_kwargs(
                 plan, shape,
-                lambda **k: _c2.conv2d_same(zeros, w, interpret=interpret, **k),
-                kw, context=("conv2d", mode, impl) + sctx)
+                lambda **k: kernel(zeros, interpret=interpret, **k),
+                kw, context=(tag, mode, impl) + sctx)
             kw.update(sharded_kw)
         return _sharded(plan, x, w, mesh=mesh, in_specs=in_specs,
                         time_steps=1, boundary=boundary, impl=impl, kw=kw)
-    fn = _c2.conv2d_same if mode == "same" else _c2.conv2d_valid
     if autotune:
         kw = _tuned_kwargs(
-            _c2.plan_for(w.shape, mode), x.shape,
-            lambda **k: fn(x, w, interpret=interpret, **k), kw,
-            context=("conv2d", mode, impl))
-    return fn(x, w, interpret=interpret, **kw)
+            plan, x.shape,
+            lambda **k: kernel(x, interpret=interpret, **k), kw,
+            context=(tag, mode, impl))
+    return kernel(x, interpret=interpret, **kw)
 
 
 def conv1d_causal(x, w, *, impl: str | None = None, autotune: bool = False,
@@ -266,11 +332,26 @@ def linear_recurrence(a, b, *, impl: str | None = None,
 # an associative (Kogge–Stone, same algebra as the SSAM plan) scan within
 # chunks under lax.scan state-passing across chunks — O(T·log L) work,
 # O(B·L·C) live memory, shardable over batch/channel axes under pjit.
+#
+# ``impl="engine"`` routes the same math through ``run_scan_plan``
+# blocks instead: leading axes flatten to the engine's row axis, T tiles
+# into Kogge–Stone lane blocks of width ``chunk`` with the inter-block
+# carry in VMEM scratch — the production LM path exercising the exact
+# kernel the benchmarks measure.
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("chunk",))
-def chunked_linear_recurrence(a: jax.Array, b: jax.Array, *, chunk: int = 128):
+@functools.partial(jax.jit, static_argnames=("chunk", "impl"))
+def chunked_linear_recurrence(a: jax.Array, b: jax.Array, *,
+                              chunk: int = 128, impl: str = "chunked"):
     """Same math as :func:`linear_recurrence`; a, b shaped (..., T)."""
+    if impl == "engine":
+        T = a.shape[-1]
+        out = _sc.linear_recurrence(
+            a.reshape((-1, T)), b.reshape((-1, T)), block_t=chunk,
+            interpret=engine_interpret())
+        return out.reshape(a.shape)
+    if impl != "chunked":
+        raise ValueError(impl)
     T = a.shape[-1]
     pad = (-T) % chunk
     if pad:

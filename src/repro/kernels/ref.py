@@ -35,6 +35,30 @@ def conv2d_same(x: jax.Array, w: jax.Array) -> jax.Array:
     return conv2d_valid(xp, w)
 
 
+def conv2d_batched(x: jax.Array, w: jax.Array, mode: str = "valid") -> jax.Array:
+    """Minibatch of single-channel images against one filter: (B, H, W)."""
+    fn = conv2d_same if mode == "same" else conv2d_valid
+    return jax.vmap(lambda xi: fn(xi, w))(x)
+
+
+def conv2d_nchw(x: jax.Array, w: jax.Array, mode: str = "valid") -> jax.Array:
+    """Batched multi-channel cross-correlation.
+
+    x: (B, C_in, H, W); w: (C_out, C_in, N, M) → (B, C_out, H', W').
+    'same' mode anchors at the filter centre (top = (N−1)//2), matching
+    :func:`conv2d_same` per channel.
+    """
+    N, M = w.shape[2:]
+    if mode == "same":
+        top, left = (N - 1) // 2, (M - 1) // 2
+        padding = [(top, N - 1 - top), (left, M - 1 - left)]
+    else:
+        padding = "VALID"
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32), (1, 1), padding,
+        dimension_numbers=("NCHW", "OIHW", "NCHW")).astype(x.dtype)
+
+
 def conv1d_causal(x: jax.Array, w: jax.Array) -> jax.Array:
     """Depthwise causal conv: y[b,t,d] = Σ_k x[b, t−K+1+k, d]·w[k,d]."""
     B, T, D = x.shape

@@ -19,7 +19,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.engine import run_window_plan
-from repro.core.plan import conv2d_plan, conv2d_same_plan
+from repro.core.plan import (conv2d_batched_plan, conv2d_nchw_plan,
+                             conv2d_plan, conv2d_same_plan)
 
 
 def plan_for(w_shape: tuple[int, int], mode: str = "valid"):
@@ -31,6 +32,23 @@ def plan_for(w_shape: tuple[int, int], mode: str = "valid"):
     """
     N, M = w_shape
     return conv2d_same_plan(M, N) if mode == "same" else conv2d_plan(M, N)
+
+
+def plan_for_batched(w_shape: tuple[int, int], mode: str = "valid"):
+    """Batched single-channel plan for a ``(B, H, W)`` image stack."""
+    N, M = w_shape
+    return conv2d_batched_plan(M, N, mode=mode)
+
+
+def plan_for_nchw(x_shape, w_shape, mode: str = "valid"):
+    """Reduce-axes plan for an NCHW minibatch against an OIHW filter."""
+    B, C_in = x_shape[:2]
+    C_out, C_in_w, N, M = w_shape
+    if C_in_w != C_in:
+        raise ValueError(
+            f"conv2d: filter expects C_in={C_in_w} but input has C_in={C_in} "
+            f"(x {tuple(x_shape)}, w {tuple(w_shape)})")
+    return conv2d_nchw_plan(B, C_in, C_out, M, N, mode=mode)
 
 
 def conv2d_valid(
@@ -69,4 +87,50 @@ def conv2d_same(
     return run_window_plan(
         x, w, plan=plan_for(w.shape, "same"), block=(block_h, block_w),
         variant=variant, interpret=interpret, acc_dtype=acc_dtype,
+    )
+
+
+def conv2d_batched(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    mode: str = "valid",
+    block_h: int = 8,
+    block_w: int = 128,
+    time_steps: int = 1,
+    variant: str = "shift_psum",
+    interpret: bool = True,
+    acc_dtype=jnp.float32,
+) -> jax.Array:
+    """A ``(B, H, W)`` image stack against one ``(N, M)`` filter — the
+    minibatch rides the grid's block-1 batch axis, no Python loop."""
+    return run_window_plan(
+        x, w, plan=plan_for_batched(w.shape, mode), block=(block_h, block_w),
+        time_steps=time_steps, variant=variant, interpret=interpret,
+        acc_dtype=acc_dtype,
+    )
+
+
+def conv2d_nchw(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    mode: str = "valid",
+    block_h: int = 8,
+    block_w: int = 128,
+    variant: str = "shift_psum",
+    interpret: bool = True,
+    acc_dtype=jnp.float32,
+) -> jax.Array:
+    """Batched multi-channel NCHW convolution through the reduce-axes
+    engine: ``(B, C_in, H, W) ⋆ (C_out, C_in, N, M) → (B, C_out, H', W')``.
+
+    The engine's grid iterates batch × C_out × spatial × C_in with the
+    channel reduction carried in an fp32 scratch accumulator — one
+    ``pallas_call``, no Python loop over batch or channels.
+    """
+    return run_window_plan(
+        x, w, plan=plan_for_nchw(x.shape, w.shape, mode),
+        block=(block_h, block_w), variant=variant, interpret=interpret,
+        acc_dtype=acc_dtype,
     )

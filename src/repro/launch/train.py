@@ -36,6 +36,10 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--conv-frontend", action="store_true",
+                    help="audio archs: train the real mel conv stem "
+                         "through the SSAM engine instead of the stub "
+                         "frame embeddings (whisper)")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
@@ -62,6 +66,11 @@ def main(argv=None):
     from repro.optim import adamw_state_specs
 
     cfg = get_config(args.arch, smoke=args.smoke)
+    if args.conv_frontend:
+        if cfg.family != "audio":
+            ap.error(f"--conv-frontend is for audio archs, not {cfg.family}")
+        n_mels = cfg.n_mels or (8 if args.smoke else 80)
+        cfg = dataclasses.replace(cfg, conv_frontend=True, n_mels=n_mels)
     mesh = make_host_mesh(args.model_axis)
     shape = ShapeConfig("custom_train", "train", args.seq, args.batch)
     cell = build_cell(cfg, shape, mesh, dtype=args.dtype, lr=args.lr,
@@ -108,9 +117,16 @@ def main(argv=None):
             batch = {k: jnp.asarray(v) for k, v in
                      ds.batch(step, args.batch).items()}
             if cfg.family == "audio":
-                batch["frames"] = jax.random.normal(
-                    jax.random.PRNGKey(step), (args.batch, cfg.n_frames,
-                                               cfg.d_model), cfg.param_dtype)
+                if cfg.conv_frontend:
+                    batch["mel"] = jax.random.normal(
+                        jax.random.PRNGKey(step),
+                        (args.batch, cfg.n_mels, 2 * cfg.n_frames),
+                        cfg.param_dtype)
+                else:
+                    batch["frames"] = jax.random.normal(
+                        jax.random.PRNGKey(step), (args.batch, cfg.n_frames,
+                                                   cfg.d_model),
+                        cfg.param_dtype)
             if cfg.family == "vlm":
                 batch["prefix_embeds"] = jax.random.normal(
                     jax.random.PRNGKey(step), (args.batch, cfg.n_prefix,

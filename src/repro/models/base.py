@@ -72,6 +72,8 @@ class ArchConfig:
     n_prefix: int = 0            # VLM patches / enc-dec handled separately
     encoder_layers: int = 0      # whisper
     n_frames: int = 0            # whisper encoder frames (stub embeds)
+    conv_frontend: bool = False  # whisper: real mel conv stem through the
+    n_mels: int = 0              #   SSAM engine (2×conv k=3, stride 1/2)
     pos_emb: str = "rope"        # rope | learned
     # numerics / runtime
     tie_embeddings: bool = True

@@ -1,8 +1,17 @@
-"""Whisper-style encoder-decoder backbone (audio arch, conv frontend stubbed).
+"""Whisper-style encoder-decoder backbone (audio arch).
 
-Per the assignment, the modality frontend is a STUB: ``train_inputs``
-provides precomputed frame embeddings (B, n_frames, d) — the two conv
-layers + GELU of real Whisper live outside the measured backbone.
+The modality frontend has two modes:
+
+* **stub** (default, ``conv_frontend=False``): ``train_inputs`` provides
+  precomputed frame embeddings (B, n_frames, d) — the conv layers live
+  outside the measured backbone.
+* **conv** (``conv_frontend=True``, ``n_mels`` set): the real Whisper
+  mel stem — two k=3 convs + GELU, the second at stride 2 — executed
+  through the SSAM engine's reduce-axes plan
+  (:func:`repro.nn.layers.conv2d_apply`): the mel spectrogram is an
+  NCHW batch ``(B, n_mels, 1, 2·n_frames)``, the mel→d_model channel
+  mix is the plan's C_in reduction, and time rides the lane axis.
+
 Encoder: bidirectional self-attention. Decoder: causal self-attention +
 cross-attention to the encoder output. LayerNorm + biases + GELU MLP +
 learned positions, per the original architecture.
@@ -48,9 +57,16 @@ class Whisper:
         s["xattn"] = self._xattn_specs()
         return s
 
-    def specs(self) -> dict:
+    def frontend_specs(self) -> dict:
         c = self.cfg
         return {
+            "conv1": nnl.conv2d_specs(c.n_mels, c.d_model, (1, 3)),
+            "conv2": nnl.conv2d_specs(c.d_model, c.d_model, (1, 3)),
+        }
+
+    def specs(self) -> dict:
+        c = self.cfg
+        s = {
             "enc_pos": {"table": ParamSpec((c.n_frames, c.d_model),
                                            (None, "embed"), init="small")},
             "enc_layers": stack_specs(self.enc_layer_specs(), c.encoder_layers),
@@ -61,9 +77,22 @@ class Whisper:
             "dec_layers": stack_specs(self.dec_layer_specs(), c.n_layers),
             "dec_norm": nnl.layernorm_specs(c.d_model),
         }
+        if c.conv_frontend:
+            s["frontend"] = self.frontend_specs()
+        return s
 
     def train_inputs(self, batch: int, seq: int):
         c = self.cfg
+        if c.conv_frontend:
+            inp = {
+                "mel": jax.ShapeDtypeStruct((batch, c.n_mels, 2 * c.n_frames),
+                                            c.param_dtype),
+                "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+            }
+            axes = {"mel": ("batch", None, "seq"),
+                    "tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+            return inp, axes
         inp = {
             "frames": jax.ShapeDtypeStruct((batch, c.n_frames, c.d_model),
                                            c.param_dtype),
@@ -73,6 +102,23 @@ class Whisper:
         axes = {"frames": ("batch", "seq", "embed"),
                 "tokens": ("batch", "seq"), "labels": ("batch", "seq")}
         return inp, axes
+
+    # ---- conv frontend (SSAM engine) ----------------------------------------
+    def frontend(self, p, mel, *, impl: str | None = None):
+        """Real Whisper mel stem through the engine's reduce-axes plan.
+
+        ``mel (B, n_mels, T)`` → frames ``(B, T//2, d_model)``: two k=3
+        'same' convs with GELU, the second at stride 2 — each an NCHW
+        minibatch ``(B, C, 1, T)`` through one engine ``pallas_call``
+        (channel mix = the plan's C_in reduction, time on the lane axis).
+        """
+        c = self.cfg
+        x = mel[:, :, None, :]                       # (B, n_mels, 1, T)
+        x = jax.nn.gelu(nnl.conv2d_apply(p["conv1"], x, impl=impl),
+                        approximate=True)
+        x = jax.nn.gelu(nnl.conv2d_apply(p["conv2"], x, stride=(1, 2),
+                                         impl=impl), approximate=True)
+        return x[:, :, 0, :].transpose(0, 2, 1).astype(c.param_dtype)
 
     # ---- attention helpers --------------------------------------------------
     def _self_attn(self, p, x, positions, *, causal, cache=None, cache_index=None):
@@ -157,15 +203,21 @@ class Whisper:
         x, _ = jax.lax.scan(remat(body, c.remat), x, params["dec_layers"])
         return nnl.layernorm_apply(params["dec_norm"], x)
 
+    def _frames(self, params, batch):
+        """Encoder input: conv-frontend mel stem or the stub embeddings."""
+        if self.cfg.conv_frontend:
+            return self.frontend(params["frontend"], batch["mel"])
+        return batch["frames"]
+
     def loss(self, params, batch):
-        enc = self.encode(params, batch["frames"])
+        enc = self.encode(params, self._frames(params, batch))
         enc = constrain(enc, ("batch", "seq", "embed"))
         x = self.decode_train(params, enc, batch["tokens"])
         return chunked_cross_entropy(x, params["embed"]["table"],
                                      batch["labels"], chunk=self.cfg.loss_chunk)
 
     def prefill_logits(self, params, batch):
-        enc = self.encode(params, batch["frames"])
+        enc = self.encode(params, self._frames(params, batch))
         x = self.decode_train(params, enc, batch["tokens"])
         return (x[:, -1] @ params["embed"]["table"].T.astype(x.dtype)).astype(jnp.float32)
 

@@ -68,6 +68,45 @@ def dense_apply(p, x):
     return y
 
 
+def conv2d_specs(c_in: int, c_out: int, k: int | tuple[int, int], *,
+                 bias: bool = True) -> dict:
+    """NCHW 2-D convolution layer: OIHW filter + per-channel bias.
+
+    The ``conv_out``/``conv_in`` logical axes are replicated by the
+    default rule tables (filters are small; the engine shards the
+    *activation* batch/spatial axes instead, see halo_exchange).
+    """
+    kh, kw = (k, k) if isinstance(k, int) else k
+    s = {"w": ParamSpec((c_out, c_in, kh, kw),
+                        ("conv_out", "conv_in", None, None))}
+    if bias:
+        s["b"] = ParamSpec((c_out,), ("conv_out",), init="zeros")
+    return s
+
+
+def conv2d_apply(p, x, *, mode: str = "same", stride: int | tuple[int, int] = 1,
+                 impl: str | None = None, **kw):
+    """NCHW convolution lowered through the SSAM engine.
+
+    ``x (B, C_in, H, W) → (B, C_out, H', W')`` via
+    :func:`repro.kernels.ops.conv2d`'s reduce-axes plan — one
+    ``pallas_call`` whose grid iterates batch × C_out × spatial × C_in
+    with an fp32 channel accumulator; no Python loop over batch or
+    channels. ``impl=None`` picks the backend default (engine on TPU,
+    the pjit-shardable XLA oracle elsewhere). Strides subsample the full
+    convolution's output (a stride-s conv is the dense conv at every
+    s-th tap), keeping the engine plan stride-free.
+    """
+    from repro.kernels import ops as kops
+    y = kops.conv2d(x, p["w"], mode=mode, impl=impl, **kw)
+    sh, sw = (stride, stride) if isinstance(stride, int) else stride
+    if (sh, sw) != (1, 1):
+        y = y[..., ::sh, ::sw]
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)[:, None, None]
+    return y
+
+
 def embedding_specs(vocab: int, d: int) -> dict:
     return {"table": ParamSpec((vocab, d), ("vocab", "embed"), init="embed")}
 

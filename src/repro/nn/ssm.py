@@ -41,14 +41,57 @@ def mamba_specs(d: int, *, d_inner: int, ssm_state: int, conv_k: int = 4,
     }
 
 
+def _engine_scan_rows(a, b):
+    """Run ``h_t = a_t·h_{t−1} + b_t`` through the SSAM engine.
+
+    a, b: (..., T) fp32 transfer pairs, time last. Delegates to
+    :func:`repro.kernels.ops.chunked_linear_recurrence`'s engine path —
+    one flatten-to-rows wrapper for both the ops surface and the
+    model-side validation paths.
+    """
+    from repro.kernels import ops as kops
+    return kops.chunked_linear_recurrence(a, b, impl="engine")
+
+
+def _selective_scan_engine(delta, A_log, Bmat, Cmat, x):
+    """Engine-lowered selective scan: the per-(channel, state) scalar
+    recurrence of Eq. h[t] = exp(Δ_t·A)⊙h[t−1] + (Δ_t·x_t)·B_t run as
+    ``B·Di·N`` independent rows through ``run_scan_plan``.
+
+    Materializes the (B, T, Di, N) transfer pairs and state history —
+    the paper-faithful validation path, not the O(chunk)-memory
+    production schedule (use ``impl='chunked'`` for that).
+    """
+    Bsz, T, Di = x.shape
+    N = A_log.shape[1]
+    A = -jnp.exp(A_log.astype(jnp.float32))                       # (Di, N)
+    d32 = delta.astype(jnp.float32)
+    a = jnp.exp(d32[..., None] * A)                               # (B,T,Di,N)
+    b = (d32 * x.astype(jnp.float32))[..., None] \
+        * Bmat.astype(jnp.float32)[:, :, None, :]
+    hs = _engine_scan_rows(jnp.moveaxis(a, 1, -1), jnp.moveaxis(b, 1, -1))
+    hs = jnp.moveaxis(hs, -1, 1)                                  # (B,T,Di,N)
+    y = jnp.einsum("btin,btn->bti", hs, Cmat.astype(jnp.float32))
+    return y.astype(x.dtype), hs[:, -1]
+
+
 def selective_scan(delta, A_log, Bmat, Cmat, x, *, chunk: int = 128,
-                   work_dtype=jnp.float32):
+                   work_dtype=jnp.float32, impl: str = "chunked"):
     """Chunked selective scan.
 
     delta, x: (B, T, Di); Bmat, Cmat: (B, T, N); A_log: (Di, N).
     h[t] = exp(Δ_t·A)⊙h[t−1] + (Δ_t·x_t)·B_t ;  y[t] = C_t·h[t] + D-term (caller).
     Only one chunk of the (B, L, Di, N) tensor is ever live.
+
+    ``impl``: 'chunked' (default, MXU-friendly production schedule) or
+    'engine' (the same recurrence through ``run_scan_plan`` blocks —
+    the SSAM kernel the benchmarks measure; outputs agree to fp32
+    tolerance).
     """
+    if impl == "engine":
+        return _selective_scan_engine(delta, A_log, Bmat, Cmat, x)
+    if impl != "chunked":
+        raise ValueError(impl)
     Bsz, T, Di = x.shape
     N = A_log.shape[1]
     L = min(chunk, T)
@@ -88,9 +131,17 @@ def selective_scan(delta, A_log, Bmat, Cmat, x, *, chunk: int = 128,
 
 
 def mamba_apply(p, x, *, ssm_state: int, conv_k: int = 4, chunk: int = 128,
-                state=None, work_dtype=jnp.float32):
+                state=None, work_dtype=jnp.float32, conv_impl: str | None = None,
+                scan_impl: str = "chunked"):
     """Mamba block. Train/prefill: state=None. Decode: state dict with
-    {"h": (B, Di, N), "conv": (B, K−1, Di)} — O(1) per-token step."""
+    {"h": (B, Di, N), "conv": (B, K−1, Di)} — O(1) per-token step.
+
+    ``conv_impl`` routes the depthwise causal conv: None picks the
+    backend default (the engine-lowered D-optimal SSAM plan on TPU, the
+    pjit-shardable XLA oracle elsewhere); 'interpret'/'pallas'/'xla'
+    force a path. ``scan_impl`` ('chunked' | 'engine') selects the
+    selective-scan execution, see :func:`selective_scan`.
+    """
     from repro.kernels import ops as kops
 
     B, T, _ = x.shape
@@ -100,7 +151,9 @@ def mamba_apply(p, x, *, ssm_state: int, conv_k: int = 4, chunk: int = 128,
     xs, z = xz[..., :Di], xz[..., Di:]
 
     if state is None:
-        xs = kops.conv1d_causal(xs, p["conv_w"], impl="xla") + p["conv_b"].astype(x.dtype)
+        xs = kops.conv1d_causal(
+            xs, p["conv_w"], impl=conv_impl or kops.default_impl()
+        ) + p["conv_b"].astype(x.dtype)
         xs = jax.nn.silu(xs)
         dbc = xs @ p["x_proj"].astype(x.dtype)
         dt = jax.nn.softplus(dbc[..., :dt_rank] @ p["dt_w"].astype(x.dtype)
@@ -108,7 +161,7 @@ def mamba_apply(p, x, *, ssm_state: int, conv_k: int = 4, chunk: int = 128,
         Bmat = dbc[..., dt_rank : dt_rank + ssm_state]
         Cmat = dbc[..., dt_rank + ssm_state :]
         y, h_last = selective_scan(dt, p["A_log"], Bmat, Cmat, xs, chunk=chunk,
-                                   work_dtype=work_dtype)
+                                   work_dtype=work_dtype, impl=scan_impl)
         y = y + xs * p["D"].astype(x.dtype)
         new_state = {"h": h_last, "conv": xs[:, -(conv_k - 1):, :] if T >= conv_k - 1 else None}
     else:
@@ -157,8 +210,36 @@ def rwkv6_timemix_specs(d: int, *, n_heads: int, head_k: int, head_v: int,
     }
 
 
+def _wkv6_engine(r, k, v, logw, u):
+    """Engine-lowered WKV6: the state recurrence is diagonal per
+    ``(head, k, v)`` pair — ``S[k,v]_t = exp(logw_t[k])·S[k,v]_{t−1} +
+    k_t[k]·v_t[v]`` — so it runs as ``B·H·K·V`` scalar rows through
+    ``run_scan_plan``, then ``y_t = r_t·S_{t−1} + (r⊙u⊙k)·v`` reads the
+    shifted inclusive scan.
+
+    Materializes the (B, T, H, K, V) state history — the validation
+    path proving the production WKV runs on the same engine as the
+    benchmarks; use ``impl='chunked'`` for the O(chunk)-memory matmul
+    schedule.
+    """
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    k32 = k.astype(jnp.float32)
+    a = jnp.broadcast_to(
+        jnp.exp(logw.astype(jnp.float32))[..., None], (B, T, H, K, V))
+    b = k32[..., None] * v.astype(jnp.float32)[..., None, :]      # (B,T,H,K,V)
+    S = _engine_scan_rows(jnp.moveaxis(a, 1, -1), jnp.moveaxis(b, 1, -1))
+    S = jnp.moveaxis(S, -1, 1)                                    # (B,T,H,K,V)
+    S_prev = jnp.concatenate([jnp.zeros_like(S[:, :1]), S[:, :-1]], axis=1)
+    r32 = r.astype(jnp.float32)
+    diag = (r32 * u[None, None].astype(jnp.float32) * k32).sum(-1)
+    y = jnp.einsum("bthk,bthkv->bthv", r32, S_prev) \
+        + diag[..., None] * v.astype(jnp.float32)
+    return y.astype(r.dtype), S[:, -1]
+
+
 def wkv6_chunked(r, k, v, logw, u, *, chunk: int = 64,
-                 work_dtype=jnp.float32):
+                 work_dtype=jnp.float32, impl: str = "chunked"):
     """Chunked WKV6: y_t = r_t·S_{t−1} + (r_t⊙u⊙k_t)·v_t,
     S_t = diag(exp(logw_t))·S_{t−1} + k_tᵀv_t.
 
@@ -167,7 +248,14 @@ def wkv6_chunked(r, k, v, logw, u, *, chunk: int = 64,
     cumulative decays) — the GLA-style chunk algebra, same associative
     operator as the SSAM linear-recurrence plan.
     Returns (y, S_last) with S_last (B, H, K, V).
+
+    ``impl``: 'chunked' (default) or 'engine' — the identical recurrence
+    through ``run_scan_plan`` Kogge–Stone blocks (fp32-tolerance equal).
     """
+    if impl == "engine":
+        return _wkv6_engine(r, k, v, logw, u)
+    if impl != "chunked":
+        raise ValueError(impl)
     B, T, H, K = r.shape
     V = v.shape[-1]
     L = min(chunk, T)
@@ -243,8 +331,12 @@ def _token_shift(x, shifted=None):
 
 def rwkv6_timemix_apply(p, x, *, n_heads: int, head_k: int, head_v: int,
                         chunk: int = 64, state=None,
-                        work_dtype=jnp.float32):
-    """RWKV6 time-mix. state (decode): {"S": (B,H,K,V), "prev": (B,1,d)}."""
+                        work_dtype=jnp.float32, wkv_impl: str = "chunked"):
+    """RWKV6 time-mix. state (decode): {"S": (B,H,K,V), "prev": (B,1,d)}.
+
+    ``wkv_impl`` selects the WKV execution ('chunked' | 'engine'), see
+    :func:`wkv6_chunked`.
+    """
     B, T, d = x.shape
     H, K, V = n_heads, head_k, head_v
     prev = _token_shift(x) if state is None else jnp.concatenate(
@@ -274,7 +366,8 @@ def rwkv6_timemix_apply(p, x, *, n_heads: int, head_k: int, head_v: int,
 
     if state is None:
         y, S_last = wkv6_chunked(r, kk, vv, logw.astype(r.dtype), p["u"],
-                                 chunk=chunk, work_dtype=work_dtype)
+                                 chunk=chunk, work_dtype=work_dtype,
+                                 impl=wkv_impl)
         new_state = {"S": S_last, "prev": x[:, -1:]}
     else:
         S = state["S"]

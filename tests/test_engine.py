@@ -8,11 +8,13 @@ plan→Pallas lowering, validated three ways —
 across the full ``BENCHMARKS`` stencil table, conv filter shapes
 2×2…9×9, ``time_steps ∈ {1, 2, 3}``, plus the perf-model autotuner.
 """
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (conv2d_plan, depthwise_conv1d_plan,
+from repro.core import (conv2d_batched_plan, conv2d_nchw_plan, conv2d_plan,
+                        conv2d_same_plan, depthwise_conv1d_plan,
                         execute_conv_global, linear_recurrence_plan,
                         run_scan_plan, run_window_plan, scan_plan,
                         stencil2d_plan, stencil3d_plan)
@@ -68,6 +70,98 @@ class TestConvThroughEngine:
         outs = [np.asarray(run_window_plan(x, w, plan=plan, block=(8, 32),
                                            variant=v)) for v in VARIANTS]
         np.testing.assert_allclose(outs[0], outs[1], rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Reduction axes: batched / NCHW conv2d through the engine
+# ---------------------------------------------------------------------------
+
+class TestBatchedConvThroughEngine:
+    """The reduce-axes IR: grid over batch × C_out × spatial × C_in with
+    an fp32 accumulator across the channel reduction — validated against
+    ``jax.lax.conv_general_dilated`` (no Python loop anywhere)."""
+
+    @pytest.mark.parametrize("variant", VARIANTS)
+    @pytest.mark.parametrize("mode", ["valid", "same"])
+    @pytest.mark.parametrize("bcc", [(1, 1, 1), (2, 3, 4), (3, 4, 2)])
+    def test_nchw_vs_lax(self, rng, bcc, mode, variant):
+        B, C_in, C_out = bcc
+        x = jnp.array(rng.standard_normal((B, C_in, 12, 40)), jnp.float32)
+        w = jnp.array(rng.standard_normal((C_out, C_in, 3, 5)), jnp.float32)
+        plan = conv2d_nchw_plan(B, C_in, C_out, 5, 3, mode=mode)
+        out = run_window_plan(x, w, plan=plan, block=(8, 32), variant=variant)
+        assert_close(out, ref.conv2d_nchw(x, w, mode), 1e-4)
+
+    @pytest.mark.parametrize("fshape", [(2, 2), (5, 3), (1, 7), (4, 1)])
+    def test_nchw_filter_sweep(self, rng, fshape):
+        N, M = fshape
+        x = jnp.array(rng.standard_normal((2, 3, 14, 36)), jnp.float32)
+        w = jnp.array(rng.standard_normal((2, 3, N, M)), jnp.float32)
+        plan = conv2d_nchw_plan(2, 3, 2, M, N)
+        out = run_window_plan(x, w, plan=plan, block=(4, 16))
+        assert_close(out, ref.conv2d_nchw(x, w, "valid"), 1e-4)
+
+    @pytest.mark.parametrize("variant", VARIANTS)
+    @pytest.mark.parametrize("t", [1, 2])
+    def test_batched_single_channel(self, rng, t, variant):
+        """(B, H, W) stacks: the batch grid axis must reproduce a Python
+        loop of per-image engine calls exactly, including under temporal
+        blocking (reduce-free batched plans keep full t support)."""
+        x = jnp.array(rng.standard_normal((3, 18, 40)), jnp.float32)
+        w = jnp.array(rng.standard_normal((3, 5)), jnp.float32)
+        bplan = conv2d_batched_plan(5, 3, mode="same")
+        out = run_window_plan(x, w, plan=bplan, block=(8, 16), time_steps=t,
+                              variant=variant)
+        splan = conv2d_same_plan(5, 3)
+        per_image = jnp.stack([
+            run_window_plan(x[i], w, plan=splan, block=(8, 16), time_steps=t,
+                            variant=variant)
+            for i in range(x.shape[0])])
+        assert_close(out, per_image, 1e-5)
+        if t == 1:
+            assert_close(out, ref.conv2d_batched(x, w, "same"), 1e-4)
+
+    def test_ops_nchw_acceptance(self, rng):
+        """Acceptance: ``ops.conv2d`` on an NCHW minibatch matches
+        ``jax.lax.conv_general_dilated`` to fp32 tolerance."""
+        from repro.kernels import ops
+        x = jnp.array(rng.standard_normal((2, 3, 16, 48)), jnp.float32)
+        w = jnp.array(rng.standard_normal((4, 3, 3, 3)), jnp.float32)
+        for mode in ("same", "valid"):
+            want = jax.lax.conv_general_dilated(
+                x, w, (1, 1),
+                [(1, 1), (1, 1)] if mode == "same" else "VALID",
+                dimension_numbers=("NCHW", "OIHW", "NCHW"))
+            assert_close(ops.conv2d(x, w, mode=mode, impl="interpret"),
+                         want, 1e-4)
+            assert_close(ops.conv2d(x, w, mode=mode, impl="xla"), want, 1e-4)
+
+    def test_nchw_rejects_temporal_blocking(self, rng):
+        x = jnp.zeros((1, 2, 8, 16), jnp.float32)
+        w = jnp.zeros((2, 2, 3, 3), jnp.float32)
+        plan = conv2d_nchw_plan(1, 2, 2, 3, 3, mode="same")
+        with pytest.raises(AssertionError, match="temporal blocking"):
+            run_window_plan(x, w, plan=plan, block=(8, 16), time_steps=2)
+
+    def test_nchw_channel_mismatch(self):
+        from repro.kernels import ops
+        x = jnp.zeros((1, 3, 8, 16), jnp.float32)
+        w = jnp.zeros((2, 4, 3, 3), jnp.float32)
+        with pytest.raises(ValueError, match="C_in"):
+            ops.conv2d(x, w, impl="interpret")
+
+    def test_nchw_autotune(self, rng):
+        """Tuned NCHW keys on the 4-D shape + nchw context — no
+        collision with single-image winners."""
+        from repro.kernels import ops
+        tuning.clear_cache()
+        x = jnp.array(rng.standard_normal((2, 2, 16, 64)), jnp.float32)
+        w = jnp.array(rng.standard_normal((2, 2, 3, 3)), jnp.float32)
+        out = ops.conv2d(x, w, impl="interpret", autotune=True)
+        assert_close(out, ref.conv2d_nchw(x, w, "same"), 1e-4)
+        keys = list(tuning._CACHE)
+        assert any(k[1] == (2, 2, 16, 64) and "conv2d_nchw" in k[4]
+                   for k in keys), keys
 
 
 # ---------------------------------------------------------------------------
@@ -216,3 +310,97 @@ class TestAutotuner:
         cands = tuning.candidate_configs(plan, (64, 8192))
         assert cands
         assert all((c.block[1] & (c.block[1] - 1)) == 0 for c in cands)
+
+    def test_nchw_candidates_use_spatial_shape(self):
+        """Reduce/batch axes are block-1 grid axes — candidates tile the
+        spatial extents only and stay within the VMEM budget."""
+        plan = conv2d_nchw_plan(4, 3, 8, 5, 5)
+        cands = tuning.candidate_configs(plan, (4, 3, 64, 96))
+        assert cands
+        for c in cands:
+            assert len(c.block) == 2
+            assert c.block[0] <= 60 and c.block[1] <= 92  # valid-mode out
+
+    def test_sidecar_schema_staleness(self, tmp_path):
+        """Entries stamped with an old engine schema are ignored on load
+        and dropped by the next write-through (the ROADMAP age-out)."""
+        import json
+        path = tmp_path / "tuning.json"
+        stale = {"block": [8, 128], "variant": "shift_psum",
+                 "model_cost": 1.0, "measured_us": 5.0,
+                 "schema": tuning.ENGINE_SCHEMA_VERSION - 1}
+        fresh = dict(stale, schema=tuning.ENGINE_SCHEMA_VERSION)
+        path.write_text(json.dumps(
+            {"version": 1, "entries": {"stale-key": stale,
+                                       "fresh-key": fresh}}))
+        tuning.clear_sidecar()
+        try:
+            assert tuning.load_sidecar(str(path)) == 1   # stale one skipped
+            assert "fresh-key" in tuning._SIDECAR
+            tuning.save_sidecar(str(path))               # rewrite ages it out
+            doc = json.loads(path.read_text())
+            assert set(doc["entries"]) == {"fresh-key"}
+            assert doc["entries"]["fresh-key"]["schema"] == \
+                tuning.ENGINE_SCHEMA_VERSION
+        finally:
+            tuning.clear_sidecar()
+
+
+# ---------------------------------------------------------------------------
+# Engine-lowered recurrences: the production LM paths through run_scan_plan
+# ---------------------------------------------------------------------------
+
+class TestEngineLoweredRecurrences:
+    """Acceptance: selective_scan / wkv6 / chunked_linear_recurrence give
+    identical outputs through ``impl='engine'`` (run_scan_plan Kogge–
+    Stone blocks) as through the chunked production schedules."""
+
+    def test_chunked_linear_recurrence_engine(self, rng):
+        from repro.kernels import ops
+        a = jnp.array(rng.uniform(0.5, 1.0, (2, 3, 70)), jnp.float32)
+        b = jnp.array(rng.standard_normal((2, 3, 70)), jnp.float32)
+        want = ops.chunked_linear_recurrence(a, b)
+        got = ops.chunked_linear_recurrence(a, b, chunk=32, impl="engine")
+        assert_close(got, want, 1e-4)
+        with pytest.raises(ValueError):
+            ops.chunked_linear_recurrence(a, b, impl="nope")
+
+    def test_selective_scan_engine(self, rng):
+        from repro.nn import ssm
+        B, T, Di, N = 2, 37, 6, 4
+        delta = jnp.array(rng.uniform(0.1, 0.5, (B, T, Di)), jnp.float32)
+        A_log = jnp.array(rng.uniform(-1, 0.5, (Di, N)), jnp.float32)
+        Bm = jnp.array(rng.standard_normal((B, T, N)), jnp.float32)
+        Cm = jnp.array(rng.standard_normal((B, T, N)), jnp.float32)
+        x = jnp.array(rng.standard_normal((B, T, Di)), jnp.float32)
+        y1, h1 = ssm.selective_scan(delta, A_log, Bm, Cm, x, chunk=16)
+        y2, h2 = ssm.selective_scan(delta, A_log, Bm, Cm, x, impl="engine")
+        assert_close(y2, y1, 2e-4)
+        assert_close(h2, h1, 2e-4)
+
+    def test_wkv6_engine(self, rng):
+        from repro.nn import ssm
+        B, T, H, K, V = 2, 33, 2, 4, 5
+        r = jnp.array(rng.standard_normal((B, T, H, K)), jnp.float32)
+        k = jnp.array(rng.standard_normal((B, T, H, K)), jnp.float32)
+        v = jnp.array(rng.standard_normal((B, T, H, V)), jnp.float32)
+        logw = jnp.array(-np.exp(rng.standard_normal((B, T, H, K))),
+                         jnp.float32)
+        u = jnp.array(rng.standard_normal((H, K)), jnp.float32)
+        y1, S1 = ssm.wkv6_chunked(r, k, v, logw, u, chunk=16)
+        y2, S2 = ssm.wkv6_chunked(r, k, v, logw, u, impl="engine")
+        y3, _ = ssm.wkv6_sequential(r, k, v, logw, u)
+        assert_close(y2, y1, 2e-4)
+        assert_close(S2, S1, 2e-4)
+        assert_close(y2, y3, 2e-4)      # and both match the gold oracle
+
+    def test_mamba_block_engine_path(self, rng):
+        from repro.nn import ssm
+        specs = ssm.mamba_specs(16, d_inner=32, ssm_state=4)
+        p = {k: jnp.array(rng.standard_normal(s.shape), jnp.float32) * 0.1
+             for k, s in specs.items()}
+        x = jnp.array(rng.standard_normal((2, 24, 16)), jnp.float32)
+        o1, _ = ssm.mamba_apply(p, x, ssm_state=4)
+        o2, _ = ssm.mamba_apply(p, x, ssm_state=4, conv_impl="interpret",
+                                scan_impl="engine")
+        assert_close(o2, o1, 2e-4)

@@ -104,6 +104,65 @@ def test_conv2d_and_meshes():
     assert "DONE" in run_with_devices(code)
 
 
+def test_sharded_batch_axis():
+    """Batched plans shard the batch axis (no halo exchange — items are
+    independent) and compose with spatial sharding; sharded == single
+    device for (B, H, W) stacks and NCHW minibatches, and a sharded
+    reduce axis is a clear pre-pallas ValueError."""
+    code = PRELUDE + textwrap.dedent("""
+        mesh1d = make_domain_mesh((8,))
+
+        # (B, H, W) stack: batch over 'data', lanes over 'model'
+        xb = jnp.array(rng.standard_normal((8, 32, 288)), jnp.float32)
+        w = jnp.array(rng.standard_normal((3, 5)), jnp.float32)
+        want = ops.conv2d(xb, w, impl="interpret")
+        check("batched conv2d 2d-mesh",
+              ops.conv2d(xb, w, impl="interpret", mesh=mesh2d), want)
+        check("batched conv2d batch-only mesh",
+              ops.conv2d(xb, w, impl="interpret", mesh=mesh1d,
+                         in_specs=P("data", None, None)), want)
+        check("batched conv2d rows+batch",
+              ops.conv2d(xb, w, impl="interpret", mesh=mesh2d,
+                         in_specs=P("data", "model", None)), want)
+
+        # NCHW minibatch: default spec = batch over 'data', lanes 'model'
+        xn = jnp.array(rng.standard_normal((4, 3, 24, 96)), jnp.float32)
+        wn = jnp.array(rng.standard_normal((5, 3, 3, 3)), jnp.float32)
+        want = ops.conv2d(xn, wn, impl="interpret")
+        check("nchw conv2d 2d-mesh",
+              ops.conv2d(xn, wn, impl="interpret", mesh=mesh2d), want)
+        check("nchw conv2d rows sharded",
+              ops.conv2d(xn, wn, impl="interpret", mesh=mesh2d,
+                         in_specs=P("data", None, "model", None)), want)
+        check("nchw conv2d autotuned",
+              ops.conv2d(xn, wn, impl="interpret", mesh=mesh2d,
+                         autotune=True), want)
+
+        # sharding the channel-reduction axis is refused pre-pallas
+        try:
+            ops.conv2d(xn, wn, impl="interpret", mesh=mesh2d,
+                       in_specs=P(None, "data", None, None))
+        except ValueError as e:
+            assert "reduce axis" in str(e), e
+            print("ok reduce-axis refusal")
+        else:
+            raise AssertionError("sharded reduce axis did not raise")
+
+        # depthwise conv1d batched plan: batch over 'data'
+        xd = jnp.array(rng.standard_normal((8, 24, 16)), jnp.float32)
+        wd = jnp.array(rng.standard_normal((4, 16)), jnp.float32)
+        from repro.distributed import halo_exchange as hx
+        from repro.kernels import ssam_conv1d
+        got = hx.sharded_window_plan(
+            xd, wd, plan=ssam_conv1d.plan_for(4), mesh=mesh1d,
+            in_spec=P("data", None, None), block=(128, 128))
+        check("depthwise conv1d sharded batch", got,
+              ref.conv1d_causal(xd, wd), 1e-4)
+        print("DONE")
+    """)
+    assert "DONE" in run_with_devices(code)
+
+
 def test_boundaries():
     """wrap == periodic reference (any t); replicate == edge-clamp (t=1)."""
     code = PRELUDE + textwrap.dedent("""
