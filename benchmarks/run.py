@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV rows per the repo convention.
 | bench_perf_model          | Table 2/§5     | hardware latency tables, L_smem/L_reg/AvgDif, halo ratios |
 | bench_scan                | §3.6           | Kogge–Stone cumsum / linear recurrence vs lax reference |
 | bench_sharded (--mesh AxB)| (beyond paper) | sharded halo-exchange vs single device: per-device bandwidth + §5 scaling prediction |
+| bench_grad (--grad)       | (beyond paper) | fwd vs fwd+bwd through the adjoint plans, vs §5 fwd+adjoint cost |
 | bench_lm_roofline         | (assignment)   | summary of dry-run roofline artifacts |
 
 The container is CPU-only: wall-times are CPU XLA numbers that compare
@@ -368,6 +369,86 @@ def bench_sharded(mesh_shape: tuple[int, ...], size2d: int = 256,
 
 
 # ---------------------------------------------------------------------------
+# Adjoint plans: fwd+bwd bandwidth vs the §5 model (--grad)
+# ---------------------------------------------------------------------------
+
+def bench_grad(size2d: int = 128, size3d: int = 24,
+               batch: int = 2, channels: tuple[int, int] = (3, 8),
+               img: int = 48):
+    """Forward vs forward+backward wall-time per engine op, next to the
+    §5 model's prediction that bwd ≈ fwd + the adjoint plan's cost.
+
+    Table-3 stencils differentiate through the point-reflected adjoint
+    plan (backward-input only — 'table' coefficients have no weight
+    grad); NCHW conv adds the backward-weight correlation, whose cost
+    the model approximates by a second forward sweep (it reads the same
+    x volume once more against the cotangent). MB/s counts useful
+    traffic: fwd = read+write of the domain; fwd+bwd = 3× (forward,
+    cotangent in, input-grad out) per step. Interpret-mode wall-times
+    compare schedules, not TPU performance.
+    """
+    import jax
+
+    from repro.core import adjoint as adjoint_mod
+    from repro.core import conv2d_nchw_plan, input_adjoint_plan, tuning
+    from repro.kernels import ops
+    from repro.kernels import ssam_stencil2d, ssam_stencil3d
+    from repro.kernels.stencils import BENCHMARKS
+
+    rng = np.random.default_rng(0)
+    print(f"# Adjoint plans: fwd vs fwd+bwd (2D {size2d}^2, 3D {size3d}^3, "
+          "interpret-mode wall-time; model: cyc_fwd + cyc_adj per element)")
+    for name in ("2d5pt", "2d9pt", "2ds25pt", "2d121pt", "3d7pt", "poisson"):
+        sdef = BENCHMARKS[name]
+        if sdef.ndim == 2:
+            x = jnp.array(rng.standard_normal((size2d, size2d)), jnp.float32)
+            mod, base = ssam_stencil2d, (8, 128)
+        else:
+            x = jnp.array(rng.standard_normal((size3d,) * 3), jnp.float32)
+            mod, base = ssam_stencil3d, (4, 8, 128)
+        plan = mod.plan_for(sdef)
+        cfg = tuning.KernelConfig(tuple(min(b, n) for b, n in
+                                        zip(base, x.shape)))
+        fwd = jax.jit(lambda v: ops.stencil(v, sdef, impl="interpret"))
+        vjp = jax.jit(jax.grad(lambda v: jnp.sum(
+            ops.stencil(v, sdef, impl="interpret"))))
+        t_fwd = _timeit(fwd, x)
+        t_bwd = _timeit(vjp, x)
+        cyc_f = tuning.model_cost(plan, cfg)
+        cyc_a = tuning.model_cost(input_adjoint_plan(plan), cfg)
+        mb_f = x.size * 8 / max(t_fwd, 1e-9)
+        mb_b = x.size * 8 * 3 / max(t_bwd, 1e-9)
+        _row(f"grad_{name}_fwd", t_fwd,
+             f"mb_s={mb_f:.2f};model_cyc={cyc_f:.1f}")
+        _row(f"grad_{name}_fwdbwd", t_bwd,
+             f"mb_s={mb_b:.2f};model_cyc={cyc_f + cyc_a:.1f};"
+             f"bwd_ratio={t_bwd / t_fwd:.2f}x;"
+             f"model_ratio={(cyc_f + cyc_a) / cyc_f:.2f}x")
+
+    C_in, C_out = channels
+    x = jnp.array(rng.standard_normal((batch, C_in, img, img)), jnp.float32)
+    w = jnp.array(rng.standard_normal((C_out, C_in, 3, 3)), jnp.float32)
+    plan = conv2d_nchw_plan(batch, C_in, C_out, 3, 3, mode="same")
+    cfg = tuning.KernelConfig((min(8, img), min(128, img)))
+    fwd = jax.jit(lambda a, b: ops.conv2d(a, b, impl="interpret"))
+    vjp = jax.jit(jax.grad(
+        lambda a, b: jnp.sum(ops.conv2d(a, b, impl="interpret")), (0, 1)))
+    t_fwd = _timeit(fwd, x, w)
+    t0 = _timeit(lambda: vjp(x, w))
+    cyc_f = tuning.model_cost(plan, cfg) * C_in
+    cyc_a = tuning.model_cost(input_adjoint_plan(plan), cfg) * C_out
+    bytes_img = (C_in + C_out) * img * img * 4
+    _row(f"grad_nchw_{C_in}x{C_out}_fwd", t_fwd,
+         f"mb_s_per_img={bytes_img / max(t_fwd, 1e-9):.2f};"
+         f"model_cyc={cyc_f:.1f}")
+    _row(f"grad_nchw_{C_in}x{C_out}_fwdbwd", t0,
+         f"mb_s_per_img={3 * bytes_img / max(t0, 1e-9):.2f};"
+         f"model_cyc={2 * cyc_f + cyc_a:.1f};"      # + wgrad ≈ one fwd sweep
+         f"bwd_ratio={t0 / t_fwd:.2f}x")
+    print(f"# backward lowerings: {dict(adjoint_mod.BACKWARD_LOWERINGS)}")
+
+
+# ---------------------------------------------------------------------------
 # LM roofline summary (assignment §Roofline)
 # ---------------------------------------------------------------------------
 
@@ -403,6 +484,11 @@ def main(argv=None) -> None:
         "--time-steps", type=int, default=1,
         help="fused temporal steps for the sharded bench (default 1)")
     p.add_argument(
+        "--grad", action="store_true",
+        help="run the adjoint-plan benchmark: fwd vs fwd+bwd MB/s for "
+             "Table-3 stencils and NCHW conv next to the §5 model's "
+             "fwd + adjoint-plan cost prediction")
+    p.add_argument(
         "--batch", type=int, default=None, metavar="B",
         help="run the NCHW conv bench with a B-image minibatch through "
              "the reduce-axes engine plan")
@@ -414,6 +500,9 @@ def main(argv=None) -> None:
     if args.mesh:
         shape = tuple(int(v) for v in args.mesh.lower().split("x"))
         bench_sharded(shape, time_steps=args.time_steps)
+        return
+    if args.grad:
+        bench_grad()
         return
     if args.batch is not None or args.channels is not None:
         ch = tuple(int(v) for v in (args.channels or "3,8").split(","))

@@ -3,6 +3,8 @@
 - :mod:`repro.core.plan` — 𝒥 = (O, D, X, Y) plan formulation (§3.4).
 - :mod:`repro.core.executor` — pure-JAX lane-roll interpreter of plans.
 - :mod:`repro.core.engine` — generic plan→Pallas lowering (every kernel).
+- :mod:`repro.core.adjoint` — symbolic plan transposition: every
+  backward pass as an adjoint plan through the same engine.
 - :mod:`repro.core.halo` — halo geometry shared by the engine, the
   sharded halo-exchange layer and per-shard tuning.
 - :mod:`repro.core.tuning` — §5 perf-model-guided block-config autotuner
@@ -39,7 +41,13 @@ from .executor import (
     execute_linear_recurrence,
     execute_scan,
 )
-from .engine import run_scan_plan, run_window_plan
+from .engine import run_scan_plan, run_weight_grad_plan, run_window_plan
+from .adjoint import (
+    adjoint_coeff_array,
+    input_adjoint_plan,
+    reversed_recurrence_coeffs,
+    weight_adjoint_plan,
+)
 
 __all__ = [
     "GPU_WARP_LANES",
@@ -66,5 +74,10 @@ __all__ = [
     "execute_linear_recurrence",
     "execute_scan",
     "run_scan_plan",
+    "run_weight_grad_plan",
     "run_window_plan",
+    "adjoint_coeff_array",
+    "input_adjoint_plan",
+    "reversed_recurrence_coeffs",
+    "weight_adjoint_plan",
 ]

@@ -1,0 +1,229 @@
+"""Adjoint plans — symbolic transposition of systolic plans.
+
+Every ``ops.*`` kernel is a *linear* operator in its data input (and,
+for convs, in its coefficients), so its backward pass is itself a
+regular memory-bound kernel of the same family — exactly the class the
+SSAM model targets. This module derives those backward kernels
+**symbolically, at the plan level**, so the whole backward pass lowers
+through the same :func:`repro.core.engine.run_window_plan` /
+:func:`repro.core.engine.run_scan_plan` engine (and the same sharded
+halo-exchange layer) as the forward pass. Nothing re-derives gradients
+numerically; a plan in, a plan out (DESIGN.md §10).
+
+Derivation rules:
+
+* **Windowed plans (backward-input)** — the forward computes
+  ``y[o] = Σ_k xp[o + k] · c_k`` over the tap footprint ``k ∈ [0, ext)``
+  with ``lead``/``trail`` origin padding. Its transpose is the same
+  windowed form on the cotangent with the **point-reflected tap set**
+  (``k → ext − 1 − k``, coefficients riding along) and the lead/trail
+  halo geometry **swapped through the footprint**:
+  ``lead' = ext − 1 − lead``, ``trail' = ext − 1 − trail``. A 'valid'
+  conv (pads nothing, output shrinks) transposes to a 'full' conv (pads
+  ``ext − 1`` on both sides, output grows back); a shape-preserving
+  stencil/'same' conv transposes to a shape-preserving plan with lead
+  and trail exchanged — which is why the sharded adjoint's ppermute
+  pushes run in the reversed direction with no new collective code.
+  For reduce plans (NCHW), the channel roles flip: the forward's
+  ``C_out`` (out axis) becomes the adjoint's reduction and vice versa —
+  plan-side this swaps ``out_axes``/``reduce_axes``; the runtime
+  coefficient array is viewed with its out/reduce axes swapped.
+
+* **Windowed plans (backward-weight)** — ``∂L/∂c_k = Σ_o g[o]·xp[o+k]``
+  is a *correlation* of the padded input with the cotangent, expressed
+  through the engine's reduce machinery with **batch and the spatial
+  tiles as the reduction**: the grid sweeps batch × spatial output
+  tiles as block-1 reduce iterates, each accumulating a filter-shaped
+  partial into an fp32 VMEM scratch block
+  (:func:`repro.core.engine.run_weight_grad_plan`). 'table' plans
+  (stencils) have no runtime coefficients and no weight gradient.
+
+* **Scan/recurrence plans** — the transpose of an inclusive scan is the
+  time-reversed scan: ``(cumsum)ᵀ g = rev(cumsum(rev g))``. For the
+  linear recurrence ``h_t = a_t·h_{t−1} + b_t`` the adjoint state obeys
+  ``λ_t = g_t + a_{t+1}·λ_{t+1}`` — the same recurrence run backwards
+  in time with the coefficients shifted one step
+  (:func:`reversed_recurrence_coeffs`); then ``∂b = λ`` and
+  ``∂a_t = λ_t · h_{t−1}``. Both lower through ``run_scan_plan`` on
+  flipped operands — a time-reversed scan plan.
+
+The adjoint of an adjoint is the original plan (taps reflect twice,
+lead/trail swap twice) — asserted in tests as the basic sanity check of
+the symbolic rules.
+
+Backward lowerings are counted in :data:`BACKWARD_LOWERINGS` (plan kind
+→ count) so tests and CI can *prove* a gradient went through the engine
+rather than silently falling back to an XLA autodiff path.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Iterator
+
+import jax.numpy as jnp
+
+from .plan import Step, SystolicPlan, Tap
+
+# kind → number of backward lowerings dispatched through the engine.
+# Incremented by the ops-layer custom_vjp rules at backward trace time;
+# the gradcheck suite asserts these move, which is the acceptance proof
+# that jax.grad(ops.*) runs on the plan engine.
+BACKWARD_LOWERINGS: collections.Counter = collections.Counter()
+
+
+def record_lowering(kind: str) -> None:
+    BACKWARD_LOWERINGS[kind] += 1
+
+
+def reset_lowering_counts() -> None:
+    BACKWARD_LOWERINGS.clear()
+
+
+# ---------------------------------------------------------------------------
+# Windowed plans: backward-input
+# ---------------------------------------------------------------------------
+
+def iter_tap_offsets(
+    plan: SystolicPlan,
+) -> Iterator[tuple[tuple[int, ...], tuple[int, ...]]]:
+    """Yield ``(offset, coeff_id)`` per tap of a windowed plan.
+
+    ``offset`` is the tap's read position relative to the output point's
+    window origin, axes ordered like ``plan.exts`` (lane axis last). The
+    lane coordinate is the cumulative partial-sum shift at the tap's
+    step — the engine's roll schedule flattened back into footprint
+    coordinates.
+    """
+    assert plan.combine == "fma", plan.combine
+    cum = 0
+    for step in plan.steps:
+        assert not step.masked, "windowed plans carry no masked steps"
+        cum += step.shift
+        for tap in step.taps:
+            if plan.ndim_spatial == 3:
+                yield (tap.z_offset, tap.row_offset, cum), tap.coeff_id
+            else:
+                yield (tap.row_offset, cum), tap.coeff_id
+
+
+def _steps_from_offsets(
+    taps: list[tuple[tuple[int, ...], tuple[int, ...]]], M: int
+) -> tuple[Step, ...]:
+    """Regroup footprint-coordinate taps into the engine's column steps."""
+    cols: dict[int, list] = {}
+    for off, cid in taps:
+        if len(off) == 3:
+            z, row, col = off
+        else:
+            z, (row, col) = 0, off
+        cols.setdefault(col, []).append((z, row, cid))
+    steps = []
+    for m in range(M):
+        col_taps = tuple(
+            Tap(row, cid, z_offset=z) for z, row, cid in sorted(
+                cols.get(m, ()), key=lambda t: (t[0], t[1])))
+        steps.append(Step(shift=1 if m > 0 else 0, taps=col_taps))
+    return tuple(steps)
+
+
+def input_adjoint_plan(plan: SystolicPlan) -> SystolicPlan:
+    """The backward-input plan: point-reflected taps, swapped halo.
+
+    ``run_window_plan(g, w̃, plan=input_adjoint_plan(p))`` computes
+    ``∂L/∂x`` of ``y = run_window_plan(x, w, plan=p)`` given the
+    cotangent ``g = ∂L/∂y`` — same engine, same block/variant knobs,
+    autotuned under its own plan signature. For reduce plans, ``w̃`` is
+    the forward coefficient array with its out/reduce axes swapped
+    (``w.swapaxes(0, 1)`` for NCHW); dense/perlane plans otherwise
+    reuse ``w`` unchanged because the reflection lives in the tap
+    ``coeff_id``s, not the array.
+    """
+    if plan.combine != "fma":
+        raise ValueError(
+            f"input_adjoint_plan wants a windowed plan, got combine="
+            f"{plan.combine!r}; scan plans transpose to time-reversed "
+            "scans (see reversed_recurrence_coeffs)")
+    exts = plan.exts
+    reflected = [
+        (tuple(e - 1 - o for e, o in zip(exts, off)), cid)
+        for off, cid in iter_tap_offsets(plan)
+    ]
+    lead, trail = plan.lead_trail()
+    kind = plan.kind[4:] if plan.kind.startswith("adj_") else \
+        "adj_" + plan.kind
+    # all-zero pads normalize to None (the builders' default) so that
+    # the adjoint of an adjoint is *identically* the original plan.
+    norm = lambda t: t if any(t) else None
+    return dataclasses.replace(
+        plan,
+        kind=kind,
+        steps=_steps_from_offsets(reflected, plan.M),
+        lead=norm(tuple(e - 1 - l for e, l in zip(exts, lead))),
+        trail=norm(tuple(e - 1 - r for e, r in zip(exts, trail))),
+        # channel roles flip: the forward's out axis is summed over in
+        # the adjoint and its reduce axis is produced.
+        reduce_axes=plan.out_axes,
+        out_axes=plan.reduce_axes,
+    )
+
+
+def adjoint_coeff_array(plan: SystolicPlan, w):
+    """View the forward coefficient array in the adjoint plan's layout
+    (out and reduce axes swapped); identity for plans without them."""
+    if w is None or not (plan.out_axes or plan.reduce_axes):
+        return w
+    no, nr = plan.out_axes, plan.reduce_axes
+    perm = tuple(range(no, no + nr)) + tuple(range(no)) + tuple(
+        range(no + nr, w.ndim))
+    return jnp.transpose(w, perm)
+
+
+# ---------------------------------------------------------------------------
+# Windowed plans: backward-weight
+# ---------------------------------------------------------------------------
+
+def weight_adjoint_plan(plan: SystolicPlan) -> SystolicPlan:
+    """Descriptor plan for the backward-weight correlation.
+
+    Carries the forward schedule under a ``wgrad_``-prefixed kind so the
+    §5 tuner/sidecar keys it independently of the forward and the
+    backward-input plan. The lowering itself
+    (:func:`repro.core.engine.run_weight_grad_plan`) reads the grid
+    extents off the operand shapes — batch and the cotangent's spatial
+    tiles become the grid's reduce sweep, the filter footprint the
+    accumulated output block.
+    """
+    if plan.coeff_mode == "table":
+        raise ValueError(
+            f"{plan.kind!r} has compile-time 'table' coefficients — no "
+            "runtime coefficient array, hence no weight gradient")
+    return dataclasses.replace(plan, kind="wgrad_" + plan.kind)
+
+
+# ---------------------------------------------------------------------------
+# Scan plans: time reversal
+# ---------------------------------------------------------------------------
+
+def time_reversed(x):
+    """Reverse the systolic time (lane) axis — the data movement of a
+    transposed scan plan (the Kogge–Stone schedule itself is symmetric)."""
+    return jnp.flip(x, axis=-1)
+
+
+def reversed_recurrence_coeffs(a):
+    """Coefficients of the adjoint recurrence, *forward-time* layout.
+
+    The adjoint state of ``h_t = a_t·h_{t−1} + b_t`` obeys
+    ``λ_t = g_t + a_{t+1}·λ_{t+1}`` (``λ`` at the last step = ``g``
+    there): the same affine recurrence run in reversed time with the
+    ``a`` sequence shifted one step toward the past. Returns
+    ``ā_t = a_{t+1}`` (identity 1 in the final slot); run
+    ``λ = rev(linrec(rev(ā), rev(g)))`` through the scan engine.
+    """
+    return jnp.concatenate([a[..., 1:], jnp.ones_like(a[..., :1])], axis=-1)
+
+
+def shifted_state(h):
+    """``h_{t−1}`` stream (zero initial state) for ``∂a_t = λ_t·h_{t−1}``."""
+    return jnp.concatenate([jnp.zeros_like(h[..., :1]), h[..., :-1]], axis=-1)

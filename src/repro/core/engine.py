@@ -67,6 +67,31 @@ def _coeff(plan: SystolicPlan, w_ref, tap: Tap, acc_dtype):
     raise ValueError(plan.coeff_mode)
 
 
+def _accumulate_over_reduce(acc_ref, o_ref, contrib, rdims, o_idx):
+    """Grid-reduce epilogue shared by every accumulating kernel.
+
+    The sweep over ``rdims`` (innermost, sequential grid dims) revisits
+    the same output block: reset the scratch on the first reduce
+    iterate, ⊕-accumulate the block's contribution, flush to the output
+    ref on the last — the matmul-k pattern (DESIGN.md §9.2/§10.1).
+    """
+    first = functools.reduce(
+        jnp.logical_and, [pl.program_id(d) == 0 for d in rdims])
+    last = functools.reduce(
+        jnp.logical_and,
+        [pl.program_id(d) == pl.num_programs(d) - 1 for d in rdims])
+
+    @pl.when(first)
+    def _reset():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += contrib.astype(acc_ref.dtype)
+
+    @pl.when(last)
+    def _flush():
+        o_ref[o_idx] = acc_ref[...].astype(o_ref.dtype)
+
+
 def _tap_read(xb: jnp.ndarray, tap: Tap, valid: tuple[int, ...]) -> jnp.ndarray:
     """The vertical (in-lane, cheap-direction) register read of Fig. 1d."""
     if xb.ndim == 3:
@@ -134,21 +159,7 @@ def _window_kernel(*refs, plan: SystolicPlan, block: tuple[int, ...],
         # sequential, so the scratch accumulator is exact fp32 ⊕ (§2).
         rdims = range(nb + no + plan.ndim_spatial,
                       nb + no + plan.ndim_spatial + nr)
-        first = functools.reduce(
-            jnp.logical_and, [pl.program_id(d) == 0 for d in rdims])
-        last = functools.reduce(
-            jnp.logical_and,
-            [pl.program_id(d) == pl.num_programs(d) - 1 for d in rdims])
-
-        @pl.when(first)
-        def _reset():
-            acc_ref[...] = jnp.zeros_like(acc_ref)
-
-        acc_ref[...] += res.astype(acc_ref.dtype)
-
-        @pl.when(last)
-        def _flush():
-            o_ref[o_idx] = acc_ref[...].astype(o_ref.dtype)
+        _accumulate_over_reduce(acc_ref, o_ref, res, tuple(rdims), o_idx)
     else:
         o_ref[o_idx] = res.astype(o_ref.dtype)
 
@@ -266,6 +277,164 @@ def run_window_plan(
     )(*operands)
     return out[(slice(None),) * (nb + no)
                + tuple(slice(0, o) for o in out_sp)]
+
+
+# ---------------------------------------------------------------------------
+# Windowed family: backward-weight (the adjoint correlation, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def _wgrad_dense_kernel(x_ref, g_ref, o_ref, acc_ref, *, exts, block,
+                        acc_dtype):
+    """One reduce iterate of ``∂L/∂w[n,m] = Σ_{b,o} g[b,o]·xp[b,o+(n,m)]``.
+
+    The filter footprint is the *output* here; every grid step over
+    batch × cotangent tiles is a reduce iterate contributing one
+    filter-shaped partial to the fp32 scratch accumulator — the same
+    accumulator pattern as the NCHW channel reduction, with batch and
+    the spatial tiles playing the reduction.
+    """
+    N, M = exts
+    bh, bw = block
+    xb = x_ref[0, 0].astype(acc_dtype)
+    gb = g_ref[0, 0].astype(acc_dtype)
+    contrib = jnp.stack([
+        jnp.stack([jnp.sum(xb[n:n + bh, m:m + bw] * gb) for m in range(M)])
+        for n in range(N)])
+    _accumulate_over_reduce(acc_ref, o_ref, contrib, (2, 3, 4), (0, 0))
+
+
+def _wgrad_perlane_kernel(x_ref, g_ref, o_ref, acc_ref, *, K, block,
+                          acc_dtype):
+    """Per-lane backward-weight: ``∂L/∂w[k,d] = Σ_{b,t} g[b,t,d]·xp[b,t+k,d]``.
+
+    Lanes (channels) are an *output* grid axis; batch and the time tiles
+    are the reduce sweep.
+    """
+    bt, _ = block
+    xb = x_ref[0].astype(acc_dtype)
+    gb = g_ref[0].astype(acc_dtype)
+    contrib = jnp.stack([
+        jnp.sum(xb[k:k + bt, :] * gb, axis=0) for k in range(K)])
+    _accumulate_over_reduce(acc_ref, o_ref, contrib, (1, 2), ...)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("plan", "block", "interpret", "acc_dtype", "pre_padded"),
+)
+def run_weight_grad_plan(
+    x: jax.Array,
+    g: jax.Array,
+    *,
+    plan: SystolicPlan,
+    block: tuple[int, ...] = (8, 128),
+    interpret: bool = True,
+    acc_dtype=jnp.float32,
+    pre_padded: bool = False,
+) -> jax.Array:
+    """Backward-weight of a windowed plan: ``∂L/∂w`` of
+    ``y = run_window_plan(x, w, plan=plan)`` given the cotangent ``g``.
+
+    This is the adjoint *correlation* expressed through the engine's
+    reduce machinery (DESIGN.md §10): batch and the cotangent's spatial
+    tiles become block-1 grid **reduce** iterates, each accumulating a
+    filter-shaped partial (``Σ`` over the tile of ``g · shifted x``) in
+    an fp32 VMEM scratch block that is flushed once at the end of the
+    sweep. The output is the coefficient array's own shape — tiny — so
+    the whole gradient is one ``pallas_call`` with no Python loop over
+    batch, channels or tiles.
+
+    Args:
+      x: the forward input (same layout run_window_plan consumed).
+      g: the cotangent, shaped like the forward output.
+      block: tile of ``g``'s spatial axes per reduce iterate (clamped).
+      pre_padded: the sharded path passes ``x`` already halo-extended by
+        the plan's lead/trail (neighbor rows via ppermute); skip the
+        origin padding then.
+
+    Returns:
+      ``∂L/∂w`` in ``acc_dtype`` with the forward coefficient layout:
+      ``(N, M)`` dense, ``(C_out, C_in, N, M)`` NCHW (out+reduce
+      leading), ``(K, D)`` perlane.
+    """
+    if plan.combine != "fma" or plan.coeff_mode == "table":
+        raise ValueError(
+            f"no weight gradient for {plan.kind!r} "
+            f"(combine={plan.combine!r}, coeff_mode={plan.coeff_mode!r})")
+    nb, nr, no = plan.batch_axes, plan.reduce_axes, plan.out_axes
+
+    if plan.coeff_mode == "perlane":
+        K = plan.N
+        B, T, D = x.shape
+        assert g.shape[0] == B and g.shape[2] == D, (x.shape, g.shape)
+        lead = 0 if pre_padded else (plan.lead or (0, 0))[0]
+        Tg = g.shape[1]
+        assert Tg == T + lead + (0 if pre_padded else
+                                 (plan.trail or (0, 0))[0]) - (K - 1), \
+            (x.shape, g.shape)
+        bt, bd = min(block[0], Tg), min(block[1], D)
+        gt, gd = pl.cdiv(Tg, bt), pl.cdiv(D, bd)
+        gp = jnp.pad(g, ((0, 0), (0, gt * bt - Tg), (0, gd * bd - D)))
+        xp = jnp.pad(x, ((0, 0), (lead, gt * bt + K - 1 - lead - T),
+                         (0, gd * bd - D)))
+        kern = functools.partial(_wgrad_perlane_kernel, K=K, block=(bt, bd),
+                                 acc_dtype=acc_dtype)
+        out = pl.pallas_call(
+            kern,
+            grid=(gd, B, gt),               # lanes out; batch × time reduce
+            in_specs=[
+                pl.BlockSpec((1, bt + K - 1, bd),
+                             lambda d, b, i: (b, i * bt, d * bd),
+                             indexing_mode=pl.Unblocked()),
+                pl.BlockSpec((1, bt, bd),
+                             lambda d, b, i: (b, i * bt, d * bd),
+                             indexing_mode=pl.Unblocked()),
+            ],
+            out_specs=pl.BlockSpec((K, bd), lambda d, b, i: (0, d)),
+            out_shape=jax.ShapeDtypeStruct((K, gd * bd), acc_dtype),
+            scratch_shapes=[pltpu.VMEM((K, bd), acc_dtype)],
+            interpret=interpret,
+        )(xp, gp)
+        return out[:, :D]
+
+    assert plan.coeff_mode == "dense" and plan.ndim_spatial == 2, plan.kind
+    assert no == nr, (no, nr)            # plain dense (0,0) or NCHW (1,1)
+    N, M = plan.exts
+    x4 = x if nb else x[None]
+    x4 = x4 if nr else x4[:, None]       # (B, C_in, H, W)
+    g4 = g if nb else g[None]
+    g4 = g4 if no else g4[:, None]       # (B, C_out, H', W')
+    B, C_in, H, W = x4.shape
+    _, C_out, Ho, Wo = g4.shape
+    lead, trail = ((0, 0), (0, 0)) if pre_padded else plan.lead_trail()
+    assert Ho == H + lead[0] + trail[0] - (N - 1), (x.shape, g.shape)
+    assert Wo == W + lead[1] + trail[1] - (M - 1), (x.shape, g.shape)
+    bh, bw = min(block[0], Ho), min(block[1], Wo)
+    gh, gw = pl.cdiv(Ho, bh), pl.cdiv(Wo, bw)
+    gp = jnp.pad(g4, ((0, 0), (0, 0), (0, gh * bh - Ho), (0, gw * bw - Wo)))
+    xp = jnp.pad(x4, ((0, 0), (0, 0),
+                      (lead[0], gh * bh + N - 1 - lead[0] - H),
+                      (lead[1], gw * bw + M - 1 - lead[1] - W)))
+    kern = functools.partial(_wgrad_dense_kernel, exts=(N, M),
+                             block=(bh, bw), acc_dtype=acc_dtype)
+    out = pl.pallas_call(
+        kern,
+        grid=(C_out, C_in, B, gh, gw),   # channels out; batch×tiles reduce
+        in_specs=[
+            pl.BlockSpec((1, 1, bh + N - 1, bw + M - 1),
+                         lambda co, ci, b, i, j: (b, ci, i * bh, j * bw),
+                         indexing_mode=pl.Unblocked()),
+            pl.BlockSpec((1, 1, bh, bw),
+                         lambda co, ci, b, i, j: (b, co, i * bh, j * bw),
+                         indexing_mode=pl.Unblocked()),
+        ],
+        out_specs=pl.BlockSpec((1, 1, N, M),
+                               lambda co, ci, b, i, j: (co, ci, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((C_out, C_in, N, M), acc_dtype),
+        scratch_shapes=[pltpu.VMEM((N, M), acc_dtype)],
+        interpret=interpret,
+    )(xp, gp)
+    return out if no else out[0, 0]
 
 
 # ---------------------------------------------------------------------------

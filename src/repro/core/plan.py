@@ -394,7 +394,7 @@ def depthwise_conv1d_plan(K: int, *, S: int = TPU_VREG_LANES) -> SystolicPlan:
     taps = tuple(Tap(k, (k,)) for k in range(K))
     return SystolicPlan(
         "conv1d", S=S, C=K, P=1, M=1, N=K, steps=(Step(shift=0, taps=taps),),
-        batch_axes=1, lead=(K - 1, 0), trail=(0, 0), coeff_mode="perlane",
+        batch_axes=1, lead=(K - 1, 0), coeff_mode="perlane",
     )
 
 

@@ -125,7 +125,15 @@ def _cache_key(plan: SystolicPlan, shape: tuple[int, ...], time_steps: int,
 # ---------------------------------------------------------------------------
 
 def plan_signature(plan: SystolicPlan) -> str:
-    """Stable cross-process identity of a plan's schedule + geometry."""
+    """Stable cross-process identity of a plan's schedule + geometry.
+
+    Adjoint plans key apart automatically: ``core.adjoint`` derives
+    backward plans with ``adj_``/``wgrad_``-prefixed kinds and
+    reflected taps / swapped lead-trail, so a backward-input winner
+    never replays a forward winner (and vice versa) in the cache or the
+    sidecar — the adjoint is a different kernel with its own block
+    optimum (DESIGN.md §10.3).
+    """
     digest = hashlib.sha1(repr(plan).encode()).hexdigest()[:16]
     return f"{plan.kind}-{digest}"
 

@@ -45,7 +45,7 @@ from jax import lax
 from jax.experimental import shard_map as shm
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.engine import run_window_plan
+from repro.core.engine import run_weight_grad_plan, run_window_plan
 from repro.core.halo import (check_shard_geometry, extended_crop,
                              is_shape_preserving, shard_halo)
 from repro.core.plan import SystolicPlan
@@ -400,3 +400,90 @@ def sharded_window_plan(
         check_rep=False,
     )
     return sharded(x, *w_args)
+
+
+# ---------------------------------------------------------------------------
+# Sharded adjoint: backward-weight (DESIGN.md §10)
+#
+# The backward-*input* of a sharded plan needs no code here at all: the
+# adjoint plan (core.adjoint.input_adjoint_plan) swaps lead and trail,
+# so running it through sharded_window_plan with the same mesh/in_spec
+# reverses the direction of every ppermute halo push automatically —
+# the transposed dataflow falls out of the unchanged geometry machinery.
+# ---------------------------------------------------------------------------
+
+def sharded_weight_grad(
+    x: jax.Array,
+    g: jax.Array,
+    *,
+    plan: SystolicPlan,
+    mesh: Mesh,
+    in_spec: P | None = None,
+    block: tuple[int, ...] = (8, 128),
+    boundary: str = "zero",
+    interpret: bool = True,
+    acc_dtype=jnp.float32,
+    rules=None,
+) -> jax.Array:
+    """``∂L/∂w`` of a sharded windowed-plan call, replicated to all shards.
+
+    A shard's cotangent rows ``o`` pair with forward-input rows
+    ``[o − lead, o + trail]`` — exactly the forward's shard halo — so
+    the same single-hop ppermute pushes materialize the needed context
+    (zeros beyond the domain edge under ``boundary='zero'``, the wrapped
+    image under ``'wrap'``). Each shard then runs
+    :func:`repro.core.engine.run_weight_grad_plan` on its halo-extended
+    local block (batch + local spatial tiles as the grid's reduce
+    sweep), and the partial filter gradients ``psum`` over every mesh
+    axis the ``in_spec`` actually shards — batch axes included, since
+    batch items are independent forward but *summed* in the weight
+    gradient.
+    """
+    nb, nr, no, nd = (plan.batch_axes, plan.reduce_axes, plan.out_axes,
+                      plan.ndim_spatial)
+    if in_spec is None:
+        in_spec = default_plan_spec(plan, x.shape, mesh, rules)
+    all_assigns = _axis_assignments(in_spec, mesh, nb + nr + nd)
+    batch_assigns, assigns = all_assigns[:nb], all_assigns[nb + nr:]
+    check_shard_geometry(plan, x.shape[nb + nr:], assigns, 1)
+    halos = shard_halo(plan, 1)
+    in_off = nb + nr
+    psum_axes = tuple(dict.fromkeys(
+        a[0] for a in batch_assigns + assigns if a is not None))
+
+    def local(xl, gl):
+        ext = xl
+        for a in range(nd):
+            lo, hi = halos[a]
+            front = _halo_slab(ext, in_off + a, lo, assigns[a], boundary,
+                               front=True)
+            back = _halo_slab(ext, in_off + a, hi, assigns[a], boundary,
+                              front=False)
+            # unsharded zero-boundary axes get no slab from the
+            # collective — materialize the origin padding locally so the
+            # engine sees a uniformly pre-padded block.
+            def zeros(width):
+                shape = list(ext.shape)
+                shape[in_off + a] = width
+                return jnp.zeros(shape, ext.dtype)
+            parts = [front if front is not None else (zeros(lo) if lo else None),
+                     ext,
+                     back if back is not None else (zeros(hi) if hi else None)]
+            parts = [p for p in parts if p is not None]
+            ext = parts[0] if len(parts) == 1 else jnp.concatenate(
+                parts, axis=in_off + a)
+        dw = run_weight_grad_plan(ext, gl, plan=plan, block=block,
+                                  interpret=interpret, acc_dtype=acc_dtype,
+                                  pre_padded=True)
+        return lax.psum(dw, psum_axes) if psum_axes else dw
+
+    b_names = tuple(a[0] if a else None for a in batch_assigns)
+    s_names = tuple(a[0] if a else None for a in assigns)
+    sharded = shm.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(*b_names, *((None,) * nr), *s_names),
+                  P(*b_names, *((None,) * no), *s_names)),
+        out_specs=P(),
+        check_rep=False,
+    )
+    return sharded(x, g)

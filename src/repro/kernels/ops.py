@@ -32,15 +32,30 @@ follows the rule tables' divisibility fallback and leaves a
 non-dividing axis replicated instead. Autotuning under a mesh targets
 the *shard-local* halo-extended shape, so the winner is exactly the
 per-device kernel.
+
+Every engine-lowered op is differentiable: the ops are ``custom_vjp``
+wrappers whose backward rules rebuild the **adjoint plan**
+(:mod:`repro.core.adjoint` — point-reflected taps with swapped
+lead/trail for backward-input, the batch+spatial-reduce correlation for
+backward-weight, time-reversed scans for the scan family) and lower it
+through the same engine; sharded forward ⇒ sharded backward (reversed
+ppermute pushes, psum'd weight grads). With ``autotune=True`` the
+backward-input plan is tuned independently under its own §5 signature.
+``impl="xla"`` keeps JAX's native AD of the oracle — the gradcheck
+reference.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import adjoint as adj
 from repro.core import tuning
+from repro.core.engine import run_weight_grad_plan, run_window_plan
+from repro.core.plan import SystolicPlan
 from . import ref
 from . import ssam_conv1d as _c1
 from . import ssam_conv2d as _c2
@@ -52,6 +67,20 @@ from .stencils import BENCHMARKS, StencilDef
 
 def default_impl() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def default_engine_impl() -> str:
+    """The engine-lowered path for the current backend: compiled Mosaic
+    on real TPU, the Pallas interpreter elsewhere.
+
+    This is the layer/training default (``nn/layers.conv2d_apply``,
+    ``nn/ssm.mamba_apply``): with the adjoint-plan subsystem
+    (:mod:`repro.core.adjoint`) every engine op is a ``custom_vjp``
+    whose backward pass lowers through the same plan engine, so model
+    code no longer silently differentiates through the XLA oracle
+    off-TPU. ``default_impl()`` remains the serving/oracle default
+    (pjit-shardable XLA off-TPU)."""
+    return "pallas" if jax.default_backend() == "tpu" else "interpret"
 
 
 def _interp(impl: str) -> bool:
@@ -89,16 +118,192 @@ def _engine_block(plan, kw: dict) -> tuple[tuple[int, ...], str, dict]:
     return block, kw.pop("variant", "shift_psum"), kw
 
 
-def _sharded(plan, x, w, *, mesh, in_specs, time_steps, boundary, impl, kw):
-    """Dispatch a windowed op through the halo-exchange layer."""
-    from repro.distributed import halo_exchange as hx
-    spec = in_specs if in_specs is not None else \
-        hx.default_plan_spec(plan, x.shape, mesh)
-    block, variant, rest = _engine_block(plan, kw)
-    return hx.sharded_window_plan(
-        x, w, plan=plan, mesh=mesh, in_spec=spec, block=block,
-        time_steps=time_steps, variant=variant, boundary=boundary,
-        interpret=_interp(impl), **rest)
+# ---------------------------------------------------------------------------
+# Differentiable engine cores (custom_vjp over adjoint plans)
+#
+# Every engine-lowered op routes through one of these wrappers. The
+# forward is exactly the plan engine (single-device ``run_window_plan``
+# or the sharded halo-exchange layer); the backward rule rebuilds the
+# *adjoint* plan symbolically (:mod:`repro.core.adjoint`) and lowers it
+# through the same engine — point-reflected taps with swapped lead/trail
+# for backward-input, the batch+spatial-reduce correlation
+# (``run_weight_grad_plan``) for backward-weight, time-reversed scans
+# for the scan family. Sharded forward ⇒ sharded backward: the adjoint
+# plan's swapped lead/trail reverses the ppermute halo pushes through
+# the unchanged halo-exchange layer, and the weight grad psums partial
+# filter blocks across the mesh.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _WindowCfg:
+    """Static (nondiff) configuration of one windowed engine call."""
+
+    plan: SystolicPlan
+    block: tuple[int, ...]
+    time_steps: int = 1
+    variant: str = "shift_psum"
+    interpret: bool = True
+    acc_dtype: object = jnp.float32
+    mesh: object = None              # jax.sharding.Mesh | None
+    in_specs: object = None          # PartitionSpec | None (rule-table default)
+    boundary: str = "zero"
+    overlap: bool = True
+    bwd_tune: tuple | None = None    # tuner context → adjoint tuned on its
+    #                                  own plan signature; None → reuse block
+
+
+def _window_forward(cfg: _WindowCfg, x, w):
+    if cfg.mesh is not None:
+        from repro.distributed import halo_exchange as hx
+        return hx.sharded_window_plan(
+            x, w, plan=cfg.plan, mesh=cfg.mesh, in_spec=cfg.in_specs,
+            block=cfg.block, time_steps=cfg.time_steps, variant=cfg.variant,
+            boundary=cfg.boundary, overlap=cfg.overlap,
+            interpret=cfg.interpret, acc_dtype=cfg.acc_dtype)
+    return run_window_plan(
+        x, w, plan=cfg.plan, block=cfg.block, time_steps=cfg.time_steps,
+        variant=cfg.variant, interpret=cfg.interpret, acc_dtype=cfg.acc_dtype)
+
+
+def _tuned_adjoint_config(aplan, g_shape, g_dtype, w, cfg: _WindowCfg):
+    """Tune the backward-input plan independently of the forward.
+
+    The adjoint is a *different* kernel (its own taps/halo), so it gets
+    its own §5 tuner/sidecar signature; measurement runs on zeros of the
+    cotangent's (static) shape, which keeps it legal even while the
+    backward pass itself is being traced under jit.
+    """
+    zeros = jnp.zeros(g_shape, g_dtype)
+    wa = None if w is None else adj.adjoint_coeff_array(
+        cfg.plan, jnp.zeros(w.shape, w.dtype))
+    runner = lambda c: tuning.measure_us(lambda: run_window_plan(
+        zeros, wa, plan=aplan, block=c.block, time_steps=cfg.time_steps,
+        variant=c.variant, interpret=cfg.interpret, acc_dtype=cfg.acc_dtype))
+    res = tuning.autotune(
+        aplan, g_shape, time_steps=cfg.time_steps,
+        default=tuning.KernelConfig(cfg.block, cfg.variant), runner=runner,
+        context=cfg.bwd_tune)
+    return res.config.block, res.config.variant
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _window_op(cfg: _WindowCfg, x, w):
+    return _window_forward(cfg, x, w)
+
+
+def _window_op_fwd(cfg, x, w):
+    return _window_forward(cfg, x, w), (x, w)
+
+
+def _window_op_bwd(cfg, res, g):
+    x, w = res
+    plan = cfg.plan
+    if cfg.boundary == "replicate":
+        raise ValueError(
+            "gradients under boundary='replicate' are not supported: the "
+            "transpose of an edge clamp accumulates halo rows onto the "
+            "edge, which is not a windowed plan; use 'zero' or 'wrap'")
+    if cfg.time_steps != 1 and plan.coeff_mode != "table":
+        raise ValueError(
+            "gradients of temporally-blocked convolutions are not "
+            "supported (the weight enters every fused iterate); stencil "
+            "plans (compile-time coefficients) differentiate at any "
+            "time_steps")
+    aplan = adj.input_adjoint_plan(plan)
+    block, variant = cfg.block, cfg.variant
+    if cfg.bwd_tune is not None and cfg.mesh is None:
+        block, variant = _tuned_adjoint_config(aplan, g.shape, g.dtype, w,
+                                               cfg)
+    acfg = dataclasses.replace(cfg, plan=aplan, block=block, variant=variant,
+                               bwd_tune=None)
+    adj.record_lowering(aplan.kind)
+    dx = _window_forward(acfg, g, adj.adjoint_coeff_array(plan, w))
+    dx = dx.astype(x.dtype)
+    if w is None or plan.coeff_mode == "table":
+        return dx, None
+    adj.record_lowering(adj.weight_adjoint_plan(plan).kind)
+    wg_block = cfg.block[-2:]
+    if cfg.mesh is not None:
+        from repro.distributed import halo_exchange as hx
+        dw = hx.sharded_weight_grad(
+            x, g, plan=plan, mesh=cfg.mesh, in_spec=cfg.in_specs,
+            block=wg_block, boundary=cfg.boundary, interpret=cfg.interpret,
+            acc_dtype=cfg.acc_dtype)
+    else:
+        dw = run_weight_grad_plan(
+            x, g, plan=plan, block=wg_block, interpret=cfg.interpret,
+            acc_dtype=cfg.acc_dtype)
+    return dx, dw.astype(w.dtype)
+
+
+_window_op.defvjp(_window_op_fwd, _window_op_bwd)
+
+
+@dataclasses.dataclass(frozen=True)
+class _ScanCfg:
+    """Static configuration of one scan-engine call."""
+
+    block_r: int = 8
+    block_t: int = 128
+    interpret: bool = True
+    acc_dtype: object = jnp.float32
+
+
+def _cumsum_run(cfg: _ScanCfg, x):
+    return _sc.cumsum(x, block_r=cfg.block_r, block_t=cfg.block_t,
+                      interpret=cfg.interpret, acc_dtype=cfg.acc_dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _cumsum_op(cfg: _ScanCfg, x):
+    return _cumsum_run(cfg, x)
+
+
+def _cumsum_op_fwd(cfg, x):
+    return _cumsum_run(cfg, x), None
+
+
+def _cumsum_op_bwd(cfg, _, g):
+    # (cumsum)ᵀ = the time-reversed scan plan: rev ∘ cumsum ∘ rev.
+    adj.record_lowering("adj_scan")
+    return (adj.time_reversed(_cumsum_run(cfg, adj.time_reversed(g))),)
+
+
+_cumsum_op.defvjp(_cumsum_op_fwd, _cumsum_op_bwd)
+
+
+def _linrec_run(cfg: _ScanCfg, a, b):
+    return _sc.linear_recurrence(a, b, block_r=cfg.block_r,
+                                 block_t=cfg.block_t,
+                                 interpret=cfg.interpret,
+                                 acc_dtype=cfg.acc_dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _linrec_op(cfg: _ScanCfg, a, b):
+    return _linrec_run(cfg, a, b)
+
+
+def _linrec_op_fwd(cfg, a, b):
+    h = _linrec_run(cfg, a, b)
+    return h, (a, h)
+
+
+def _linrec_op_bwd(cfg, res, g):
+    # λ_t = g_t + a_{t+1}·λ_{t+1}: the same recurrence, time-reversed,
+    # with shifted coefficients — lowered through the same scan engine.
+    a, h = res
+    adj.record_lowering("adj_recurrence")
+    abar = adj.reversed_recurrence_coeffs(a)
+    lam = adj.time_reversed(_linrec_run(
+        cfg, adj.time_reversed(abar), adj.time_reversed(g)))
+    da = (lam.astype(jnp.float32)
+          * adj.shifted_state(h).astype(jnp.float32)).astype(a.dtype)
+    return da, lam.astype(a.dtype)
+
+
+_linrec_op.defvjp(_linrec_op_fwd, _linrec_op_bwd)
 
 
 def _shard_tuning_call(plan, x, mesh, in_specs, time_steps, boundary):
@@ -196,12 +401,31 @@ def conv2d(x, w, *, mode: str = "same", impl: str | None = None,
                           in_specs=in_specs, boundary=boundary, kw=kw)
 
 
+def _window_cfg(plan, kw, *, interpret, time_steps=1, mesh=None,
+                in_specs=None, boundary="zero", bwd_tune=None) -> _WindowCfg:
+    """Resolve family kwargs into the static config of one engine call."""
+    block, variant, rest = _engine_block(plan, kw)
+    cfg = _WindowCfg(
+        plan=plan, block=block, variant=variant, interpret=interpret,
+        time_steps=rest.pop("time_steps", time_steps),
+        acc_dtype=rest.pop("acc_dtype", jnp.float32),
+        mesh=mesh, in_specs=in_specs, boundary=boundary,
+        overlap=rest.pop("overlap", True), bwd_tune=bwd_tune)
+    if rest:
+        raise TypeError(f"unexpected kwargs for {plan.kind!r}: "
+                        f"{sorted(rest)}")
+    return cfg
+
+
 def _conv2d_engine(x, w, *, plan, kernel, tag, mode, impl, autotune, mesh,
                    in_specs, boundary, kw):
     """Shared mesh/autotune scaffolding for every conv2d rank.
 
     ``kernel(xs, interpret=..., **block_kwargs)`` lowers the engine call
-    on ``xs``; ``plan`` is its schedule; ``tag`` keys the tuner context.
+    on ``xs`` for tuning measurements; ``plan`` is its schedule; ``tag``
+    keys the tuner context. The actual call goes through the
+    differentiable ``_window_op`` core, so ``jax.grad`` of any conv2d
+    rank lowers its backward pass through the adjoint plans.
     """
     interpret = _interp(impl)
     if mesh is not None:
@@ -219,28 +443,47 @@ def _conv2d_engine(x, w, *, plan, kernel, tag, mode, impl, autotune, mesh,
                 lambda **k: kernel(zeros, interpret=interpret, **k),
                 kw, context=(tag, mode, impl) + sctx)
             kw.update(sharded_kw)
-        return _sharded(plan, x, w, mesh=mesh, in_specs=in_specs,
-                        time_steps=1, boundary=boundary, impl=impl, kw=kw)
+        cfg = _window_cfg(plan, kw, interpret=interpret, mesh=mesh,
+                          in_specs=in_specs, boundary=boundary)
+        return _window_op(cfg, x, w)
+    bwd_tune = None
     if autotune:
         kw = _tuned_kwargs(
             plan, x.shape,
             lambda **k: kernel(x, interpret=interpret, **k), kw,
             context=(tag, mode, impl))
-    return kernel(x, interpret=interpret, **kw)
+        bwd_tune = ("adjoint", tag, mode, impl)
+    return _window_op(_window_cfg(plan, kw, interpret=interpret,
+                                  bwd_tune=bwd_tune), x, w)
 
 
 def conv1d_causal(x, w, *, impl: str | None = None, autotune: bool = False,
                   **kw):
     impl = impl or default_impl()
+    if w.shape[-1] != x.shape[-1]:
+        # checked for every impl — the oracle would otherwise silently
+        # broadcast a mismatched filter across channels
+        raise ValueError(f"conv1d_causal: filter lanes {w.shape} do not "
+                         f"match input channels {x.shape}")
     if impl == "xla":
         return ref.conv1d_causal(x, w)
     interpret = _interp(impl)
+    plan = _c1.plan_for(w.shape[0])
+    bwd_tune = None
     if autotune:
         kw = _tuned_kwargs(
-            _c1.plan_for(w.shape[0]), x.shape,
+            plan, x.shape,
             lambda **k: _c1.conv1d_causal(x, w, interpret=interpret, **k), kw,
             context=("conv1d", impl))
-    return _c1.conv1d_causal(x, w, interpret=interpret, **kw)
+        bwd_tune = ("adjoint", "conv1d", impl)
+    d = _DEFAULTS["conv1d"].block
+    cfg = _WindowCfg(
+        plan=plan, block=(kw.pop("block_t", d[0]), kw.pop("block_d", d[1])),
+        interpret=interpret, acc_dtype=kw.pop("acc_dtype", jnp.float32),
+        bwd_tune=bwd_tune)
+    if kw:
+        raise TypeError(f"unexpected kwargs for conv1d_causal: {sorted(kw)}")
+    return _window_op(cfg, x, w)
 
 
 def stencil(x, sdef: StencilDef | str, *, time_steps: int = 1,
@@ -257,8 +500,8 @@ def stencil(x, sdef: StencilDef | str, *, time_steps: int = 1,
     mod = _s2 if sdef.ndim == 2 else _s3
     fn = mod.stencil2d if sdef.ndim == 2 else mod.stencil3d
     interpret = _interp(impl)
+    plan = mod.plan_for(sdef)
     if mesh is not None:
-        plan = mod.plan_for(sdef)
         if autotune:
             shape, sctx = _shard_tuning_call(plan, x, mesh, in_specs,
                                              time_steps, boundary)
@@ -273,19 +516,47 @@ def stencil(x, sdef: StencilDef | str, *, time_steps: int = 1,
                 kw, time_steps=time_steps,
                 context=("stencil", impl) + sctx)
             kw.update(sharded_kw)
-        return _sharded(plan, x, None, mesh=mesh, in_specs=in_specs,
-                        time_steps=time_steps, boundary=boundary, impl=impl,
-                        kw=kw)
+        cfg = _window_cfg(plan, kw, interpret=interpret,
+                          time_steps=time_steps, mesh=mesh,
+                          in_specs=in_specs, boundary=boundary)
+        return _window_op(cfg, x, None)
+    bwd_tune = None
     if autotune:
         kw = _tuned_kwargs(
-            mod.plan_for(sdef), x.shape,
+            plan, x.shape,
             lambda **k: fn(x, sdef, time_steps=time_steps,
                            interpret=interpret, **k),
             kw, time_steps=time_steps, context=("stencil", impl))
-    return fn(x, sdef, time_steps=time_steps, interpret=interpret, **kw)
+        bwd_tune = ("adjoint", "stencil", impl)
+    return _window_op(_window_cfg(plan, kw, interpret=interpret,
+                                  time_steps=time_steps, bwd_tune=bwd_tune),
+                      x, None)
+
+
+def _reject_scan_mesh(op: str, kw: dict) -> None:
+    """Scan ops cannot shard over the halo-exchange layer — say so
+    loudly (pre-pallas) instead of silently ignoring unknown kwargs."""
+    bad = sorted(k for k in ("mesh", "in_specs", "boundary") if k in kw)
+    if bad:
+        raise ValueError(
+            f"ops.{op} does not take {', '.join(bad)}: scan plans carry a "
+            "sequential inter-block carry along the lane axis, so the "
+            "halo-exchange layer cannot shard them; shard the row axis "
+            "under pjit with impl='xla' instead")
+
+
+def _scan_cfg(kw: dict, *, interpret: bool, op: str) -> _ScanCfg:
+    cfg = _ScanCfg(block_r=kw.pop("block_r", 8),
+                   block_t=kw.pop("block_t", 128),
+                   interpret=interpret,
+                   acc_dtype=kw.pop("acc_dtype", jnp.float32))
+    if kw:
+        raise TypeError(f"unexpected kwargs for ops.{op}: {sorted(kw)}")
+    return cfg
 
 
 def cumsum(x, *, impl: str | None = None, autotune: bool = False, **kw):
+    _reject_scan_mesh("cumsum", kw)
     impl = impl or default_impl()
     if impl == "xla":
         return ref.cumsum(x)
@@ -297,12 +568,13 @@ def cumsum(x, *, impl: str | None = None, autotune: bool = False, **kw):
             plan, x.shape,
             lambda **k: _sc.cumsum(x, interpret=interpret, **k), kw,
             context=("cumsum", impl))
-    return _sc.cumsum(x, interpret=interpret, **kw)
+    return _cumsum_op(_scan_cfg(kw, interpret=interpret, op="cumsum"), x)
 
 
 def sat(x, *, impl: str | None = None, **kw):
     """Summed-area table (§3.6 / the paper's companion SAT work [7]):
     two passes of the SSAM Kogge–Stone cumsum — rows, then columns."""
+    _reject_scan_mesh("sat", kw)
     rows = cumsum(x, impl=impl, **kw)
     return cumsum(rows.T, impl=impl, **kw).T
 
@@ -310,6 +582,7 @@ def sat(x, *, impl: str | None = None, **kw):
 def linear_recurrence(a, b, *, impl: str | None = None,
                       autotune: bool = False, **kw):
     """h_t = a_t·h_{t−1} + b_t along the last axis of (R, T)-shaped a, b."""
+    _reject_scan_mesh("linear_recurrence", kw)
     impl = impl or default_impl()
     if impl == "xla":
         return ref.linear_recurrence(a, b)
@@ -321,7 +594,8 @@ def linear_recurrence(a, b, *, impl: str | None = None,
             plan, a.shape,
             lambda **k: _sc.linear_recurrence(a, b, interpret=interpret, **k),
             kw, context=("linrec", impl))
-    return _sc.linear_recurrence(a, b, interpret=interpret, **kw)
+    return _linrec_op(
+        _scan_cfg(kw, interpret=interpret, op="linear_recurrence"), a, b)
 
 
 # ---------------------------------------------------------------------------
@@ -346,9 +620,8 @@ def chunked_linear_recurrence(a: jax.Array, b: jax.Array, *,
     """Same math as :func:`linear_recurrence`; a, b shaped (..., T)."""
     if impl == "engine":
         T = a.shape[-1]
-        out = _sc.linear_recurrence(
-            a.reshape((-1, T)), b.reshape((-1, T)), block_t=chunk,
-            interpret=engine_interpret())
+        cfg = _ScanCfg(block_t=chunk, interpret=engine_interpret())
+        out = _linrec_op(cfg, a.reshape((-1, T)), b.reshape((-1, T)))
         return out.reshape(a.shape)
     if impl != "chunked":
         raise ValueError(impl)

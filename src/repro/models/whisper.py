@@ -111,6 +111,9 @@ class Whisper:
         'same' convs with GELU, the second at stride 2 — each an NCHW
         minibatch ``(B, C, 1, T)`` through one engine ``pallas_call``
         (channel mix = the plan's C_in reduction, time on the lane axis).
+        ``impl=None`` trains on the engine path (conv2d_apply's default):
+        the backward pass lowers through the adjoint plans of
+        :mod:`repro.core.adjoint`, not the XLA oracle.
         """
         c = self.cfg
         x = mel[:, :, None, :]                       # (B, n_mels, 1, T)

@@ -92,13 +92,18 @@ def conv2d_apply(p, x, *, mode: str = "same", stride: int | tuple[int, int] = 1,
     :func:`repro.kernels.ops.conv2d`'s reduce-axes plan — one
     ``pallas_call`` whose grid iterates batch × C_out × spatial × C_in
     with an fp32 channel accumulator; no Python loop over batch or
-    channels. ``impl=None`` picks the backend default (engine on TPU,
-    the pjit-shardable XLA oracle elsewhere). Strides subsample the full
-    convolution's output (a stride-s conv is the dense conv at every
-    s-th tap), keeping the engine plan stride-free.
+    channels. ``impl=None`` picks the backend's *engine* path (compiled
+    Mosaic on TPU, Pallas interpret elsewhere): with the adjoint-plan
+    subsystem the engine is fully differentiable, so training no longer
+    silently falls back to the XLA oracle — forward and backward both
+    lower through the plan engine. Pass ``impl="xla"`` explicitly for
+    the pjit-shardable oracle. Strides subsample the full convolution's
+    output (a stride-s conv is the dense conv at every s-th tap),
+    keeping the engine plan stride-free.
     """
     from repro.kernels import ops as kops
-    y = kops.conv2d(x, p["w"], mode=mode, impl=impl, **kw)
+    y = kops.conv2d(x, p["w"], mode=mode,
+                    impl=impl or kops.default_engine_impl(), **kw)
     sh, sw = (stride, stride) if isinstance(stride, int) else stride
     if (sh, sw) != (1, 1):
         y = y[..., ::sh, ::sw]

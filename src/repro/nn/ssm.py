@@ -137,10 +137,12 @@ def mamba_apply(p, x, *, ssm_state: int, conv_k: int = 4, chunk: int = 128,
     {"h": (B, Di, N), "conv": (B, K−1, Di)} — O(1) per-token step.
 
     ``conv_impl`` routes the depthwise causal conv: None picks the
-    backend default (the engine-lowered D-optimal SSAM plan on TPU, the
-    pjit-shardable XLA oracle elsewhere); 'interpret'/'pallas'/'xla'
-    force a path. ``scan_impl`` ('chunked' | 'engine') selects the
-    selective-scan execution, see :func:`selective_scan`.
+    backend's *engine* path (the D-optimal SSAM plan — compiled Mosaic
+    on TPU, Pallas interpret elsewhere; differentiable via its adjoint
+    plan, so training runs on the engine by default);
+    'interpret'/'pallas'/'xla' force a path. ``scan_impl``
+    ('chunked' | 'engine') selects the selective-scan execution, see
+    :func:`selective_scan`.
     """
     from repro.kernels import ops as kops
 
@@ -152,7 +154,7 @@ def mamba_apply(p, x, *, ssm_state: int, conv_k: int = 4, chunk: int = 128,
 
     if state is None:
         xs = kops.conv1d_causal(
-            xs, p["conv_w"], impl=conv_impl or kops.default_impl()
+            xs, p["conv_w"], impl=conv_impl or kops.default_engine_impl()
         ) + p["conv_b"].astype(x.dtype)
         xs = jax.nn.silu(xs)
         dbc = xs @ p["x_proj"].astype(x.dtype)

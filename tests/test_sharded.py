@@ -17,6 +17,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.sharded
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
