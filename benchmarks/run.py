@@ -11,12 +11,19 @@ Prints ``name,us_per_call,derived`` CSV rows per the repo convention.
 | bench_scan                | §3.6           | Kogge–Stone cumsum / linear recurrence vs lax reference |
 | bench_sharded (--mesh AxB)| (beyond paper) | sharded halo-exchange vs single device: per-device bandwidth + §5 scaling prediction |
 | bench_grad (--grad)       | (beyond paper) | fwd vs fwd+bwd through the adjoint plans, vs §5 fwd+adjoint cost |
+| bench_fused (--fused)     | (beyond paper) | fused plan pipelines + epilogues vs the unfused HBM-round-trip sequence (stencil chain, Whisper stem) |
 | bench_lm_roofline         | (assignment)   | summary of dry-run roofline artifacts |
+
+``--json PATH`` additionally writes every row as machine-readable JSON
+(name, µs, parsed derived fields + run metadata) — the committed
+``BENCH_5.json`` perf-trajectory artifact comes from
+``--fused --json BENCH_5.json``.
 
 The container is CPU-only: wall-times are CPU XLA numbers that compare
 *schedules*, not TPU performance; TPU performance is reported by the
 roofline pipeline (artifacts → benchmarks/roofline.py → EXPERIMENTS.md).
 """
+import json
 import os
 import sys
 import time
@@ -41,8 +48,42 @@ def _timeit(fn, *args, reps: int = 3) -> float:
     return float(np.median(ts) * 1e6)
 
 
+_JSON_ROWS: list | None = None     # set by main() when --json is given
+
+
+def _parse_derived(derived: str) -> dict:
+    out = {}
+    for part in derived.split(";"):
+        if not part or "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k] = float(v.rstrip("x").rstrip("cyc").rstrip("pct"))
+        except ValueError:
+            out[k] = v
+    return out
+
+
 def _row(name: str, us: float, derived: str = ""):
     print(f"{name},{us:.1f},{derived}")
+    if _JSON_ROWS is not None:
+        _JSON_ROWS.append({"name": name, "us_per_call": round(us, 2),
+                           "derived": _parse_derived(derived)})
+
+
+def _write_json(path: str) -> None:
+    doc = {
+        "meta": {
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "note": "CPU interpret-mode wall-times compare schedules, "
+                    "not TPU performance",
+        },
+        "rows": _JSON_ROWS,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"# wrote {len(_JSON_ROWS)} rows to {path}")
 
 
 # ---------------------------------------------------------------------------
@@ -449,6 +490,102 @@ def bench_grad(size2d: int = 128, size3d: int = 24,
 
 
 # ---------------------------------------------------------------------------
+# Fused plan pipelines: epilogues + chain composition (--fused)
+# ---------------------------------------------------------------------------
+
+def bench_fused(size2d: int = 192, B: int = 1, n_mels: int = 8,
+                d_model: int = 16, T: int = 256):
+    """Fused pipelines vs the unfused HBM-round-trip sequence.
+
+    Two workloads (DESIGN.md §11):
+
+    * a 3-deep 2-D stencil chain — ``ops.pipeline(fuse=True)`` lowers
+      ONE engine kernel over the chain-widened halo vs ``fuse=False``
+      (three kernels, two full HBM round-trips of the activation).
+      The §5 model prediction next to it: summed flop terms + one
+      load/store for the fused chain vs a load/store per stage unfused.
+    * the Whisper mel stem — two k=3 NCHW convs with bias+GELU fused as
+      kernel epilogues and the second conv's stride-2 lowered as an
+      output-strided grid (half the lanes), vs the unfused form (dense
+      engine convs, XLA bias/GELU between them, subsample at the end).
+
+    Both fused paths are fp32-tolerance identical to the unfused ones
+    (asserted here, not just in tests) and differentiable with backward
+    on the engine. Interpret-mode wall-times compare schedules, not TPU
+    performance.
+    """
+    from repro.core import tuning
+    from repro.core.fuse import fuse_plans
+    from repro.kernels import ops
+    from repro.kernels import ssam_stencil2d
+    from repro.kernels.stencils import BENCHMARKS
+    from repro.nn import layers as nnl
+
+    rng = np.random.default_rng(0)
+    chain = ["2d5pt", "2d9pt", "2d5pt"]
+    x = jnp.array(rng.standard_normal((size2d, size2d)), jnp.float32)
+    print(f"# Fused pipelines: {'+'.join(chain)} chain ({size2d}^2) and the "
+          f"Whisper stem (B={B}, {n_mels} mels -> d={d_model}, T={T}); "
+          "interpret-mode wall-time")
+
+    fused = jax.jit(lambda v: ops.pipeline(v, chain, impl="interpret",
+                                           fuse=True))
+    unfused = jax.jit(lambda v: ops.pipeline(v, chain, impl="interpret",
+                                             fuse=False))
+    np.testing.assert_allclose(np.asarray(fused(x)), np.asarray(unfused(x)),
+                               rtol=1e-4, atol=1e-4)
+    t_f = _timeit(fused, x)
+    t_u = _timeit(unfused, x)
+    plans = [ssam_stencil2d.plan_for(BENCHMARKS[n]) for n in chain]
+    fplan = fuse_plans(*plans)
+    cfg = tuning.KernelConfig(tuple(min(b, n) for b, n in
+                                    zip((8, 128), x.shape)))
+    cyc_f = tuning.model_cost(fplan, cfg)
+    cyc_u = sum(tuning.model_cost(p, cfg) for p in plans)
+    bytes_useful = x.size * 8            # one read + one write of the domain
+    _row(f"fused_chain_{'+'.join(chain)}_unfused", t_u,
+         f"mb_s={bytes_useful / max(t_u, 1e-9):.2f};model_cyc={cyc_u:.1f}")
+    _row(f"fused_chain_{'+'.join(chain)}_fused", t_f,
+         f"mb_s={bytes_useful / max(t_f, 1e-9):.2f};model_cyc={cyc_f:.1f};"
+         f"speedup={t_u / t_f:.2f}x;model_speedup={cyc_u / cyc_f:.2f}x")
+
+    # Whisper stem: conv(n_mels->d) + GELU, conv(d->d, stride 2) + GELU.
+    p1 = {"w": jnp.array(rng.standard_normal((d_model, n_mels, 1, 3)),
+                         jnp.float32) * 0.2,
+          "b": jnp.array(rng.standard_normal((d_model,)), jnp.float32)}
+    p2 = {"w": jnp.array(rng.standard_normal((d_model, d_model, 1, 3)),
+                         jnp.float32) * 0.2,
+          "b": jnp.array(rng.standard_normal((d_model,)), jnp.float32)}
+    mel = jnp.array(rng.standard_normal((B, n_mels, 1, T)), jnp.float32)
+
+    def stem_fused(v):
+        h = nnl.conv2d_apply(p1, v, impl="interpret", activation="gelu")
+        return nnl.conv2d_apply(p2, h, impl="interpret", stride=(1, 2),
+                                activation="gelu")
+
+    def stem_unfused(v):
+        # pre-§11 engine form: dense conv kernels, bias/GELU in XLA
+        # between the calls, stride as an output subsample.
+        h = ops.conv2d(v, p1["w"], impl="interpret")
+        h = jax.nn.gelu(h + p1["b"][:, None, None], approximate=True)
+        h = ops.conv2d(h, p2["w"], impl="interpret")
+        h = jax.nn.gelu(h + p2["b"][:, None, None], approximate=True)
+        return h[..., ::2]
+
+    jf, ju = jax.jit(stem_fused), jax.jit(stem_unfused)
+    np.testing.assert_allclose(np.asarray(jf(mel)), np.asarray(ju(mel)),
+                               rtol=1e-4, atol=1e-4)
+    t_f = _timeit(jf, mel)
+    t_u = _timeit(ju, mel)
+    bytes_stem = (mel.size + B * d_model * (T // 2)) * 4
+    _row("fused_whisper_stem_unfused", t_u,
+         f"mb_s={bytes_stem / max(t_u, 1e-9):.2f}")
+    _row("fused_whisper_stem_fused", t_f,
+         f"mb_s={bytes_stem / max(t_f, 1e-9):.2f};"
+         f"speedup={t_u / t_f:.2f}x")
+
+
+# ---------------------------------------------------------------------------
 # LM roofline summary (assignment §Roofline)
 # ---------------------------------------------------------------------------
 
@@ -496,25 +633,44 @@ def main(argv=None) -> None:
         "--channels", default=None, metavar="Cin,Cout",
         help="input,output channel counts for the NCHW conv bench "
              "(default 3,8; implies --batch 4 when only --channels given)")
+    p.add_argument(
+        "--fused", action="store_true",
+        help="run the fused-pipeline benchmark: fused vs unfused wall-time "
+             "and §5 cost for a 3-deep stencil chain (ops.pipeline) and "
+             "the epilogue+strided Whisper mel stem")
+    p.add_argument(
+        "--json", default=None, metavar="PATH",
+        help="also write every benchmark row as machine-readable JSON "
+             "(per-kernel µs, MB/s, tuned config, §5 prediction, fused vs "
+             "unfused) to PATH")
     args = p.parse_args(argv)
-    if args.mesh:
-        shape = tuple(int(v) for v in args.mesh.lower().split("x"))
-        bench_sharded(shape, time_steps=args.time_steps)
-        return
-    if args.grad:
-        bench_grad()
-        return
-    if args.batch is not None or args.channels is not None:
-        ch = tuple(int(v) for v in (args.channels or "3,8").split(","))
-        bench_conv2d_batched(args.batch if args.batch is not None else 4, ch)
-        return
-    bench_perf_model()
-    bench_conv2d_filter_sweep()
-    bench_stencil_suite()
-    bench_temporal_blocking()
-    bench_scan()
-    bench_autotune()
-    bench_lm_roofline()
+    global _JSON_ROWS
+    if args.json:
+        _JSON_ROWS = []
+    try:
+        if args.mesh:
+            shape = tuple(int(v) for v in args.mesh.lower().split("x"))
+            bench_sharded(shape, time_steps=args.time_steps)
+        elif args.grad:
+            bench_grad()
+        elif args.fused:
+            bench_fused()
+        elif args.batch is not None or args.channels is not None:
+            ch = tuple(int(v) for v in (args.channels or "3,8").split(","))
+            bench_conv2d_batched(args.batch if args.batch is not None else 4,
+                                 ch)
+        else:
+            bench_perf_model()
+            bench_conv2d_filter_sweep()
+            bench_stencil_suite()
+            bench_temporal_blocking()
+            bench_scan()
+            bench_autotune()
+            bench_fused()
+            bench_lm_roofline()
+    finally:
+        if args.json:
+            _write_json(args.json)
 
 
 if __name__ == "__main__":

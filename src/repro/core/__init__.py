@@ -5,6 +5,9 @@
 - :mod:`repro.core.engine` — generic plan→Pallas lowering (every kernel).
 - :mod:`repro.core.adjoint` — symbolic plan transposition: every
   backward pass as an adjoint plan through the same engine.
+- :mod:`repro.core.fuse` — chain composition: consecutive
+  shape-preserving windowed plans fused into one pipeline plan
+  (epilogues + fused chains, DESIGN.md §11).
 - :mod:`repro.core.halo` — halo geometry shared by the engine, the
   sharded halo-exchange layer and per-shard tuning.
 - :mod:`repro.core.tuning` — §5 perf-model-guided block-config autotuner
@@ -13,11 +16,15 @@
 - :mod:`repro.core.rooflines` — TPU v5e 3-term roofline from XLA artifacts.
 """
 from .plan import (
+    EPILOGUE_OPS,
     GPU_WARP_LANES,
     TPU_VREG_LANES,
+    EpilogueStage,
     Step,
     SystolicPlan,
     Tap,
+    epilogue_operand_stages,
+    normalize_epilogue,
     conv1d_plan,
     conv2d_batched_plan,
     conv2d_nchw_plan,
@@ -42,19 +49,27 @@ from .executor import (
     execute_scan,
 )
 from .engine import run_scan_plan, run_weight_grad_plan, run_window_plan
+from .fuse import fuse_plans
 from .adjoint import (
     adjoint_coeff_array,
+    apply_epilogue,
     input_adjoint_plan,
     reversed_recurrence_coeffs,
     weight_adjoint_plan,
 )
 
 __all__ = [
+    "EPILOGUE_OPS",
     "GPU_WARP_LANES",
     "TPU_VREG_LANES",
+    "EpilogueStage",
     "Step",
     "SystolicPlan",
     "Tap",
+    "epilogue_operand_stages",
+    "normalize_epilogue",
+    "fuse_plans",
+    "apply_epilogue",
     "check_shard_geometry",
     "conv1d_plan",
     "conv2d_batched_plan",

@@ -61,6 +61,7 @@ import collections
 import dataclasses
 from typing import Iterator
 
+import jax
 import jax.numpy as jnp
 
 from .plan import Step, SystolicPlan, Tap
@@ -138,12 +139,30 @@ def input_adjoint_plan(plan: SystolicPlan) -> SystolicPlan:
     (``w.swapaxes(0, 1)`` for NCHW); dense/perlane plans otherwise
     reuse ``w`` unchanged because the reflection lives in the tap
     ``coeff_id``s, not the array.
+
+    The adjoint transposes the *linear* part only: any epilogue is
+    stripped (its VJP is an elementwise chain the ops layer recomputes
+    from saved pre-activations, DESIGN.md §11.4). A fused pipeline
+    transposes to the **reversed chain of stage adjoints** —
+    ``(P_k ∘ … ∘ P_1)ᵀ = P_1ᵀ ∘ … ∘ P_kᵀ`` — which is itself a fused
+    plan, so a purely linear chain differentiates through one fused
+    backward kernel.
     """
     if plan.combine != "fma":
         raise ValueError(
             f"input_adjoint_plan wants a windowed plan, got combine="
             f"{plan.combine!r}; scan plans transpose to time-reversed "
             "scans (see reversed_recurrence_coeffs)")
+    if any(v > 1 for v in plan.stride_per_axis()):
+        raise ValueError(
+            "the transpose of an output-strided plan is input-dilated, "
+            "which is not a windowed plan; the ops layer dilates the "
+            "cotangent and transposes the stride-free plan instead")
+    if plan.stages:
+        from .fuse import fuse_plans
+        return fuse_plans(*[
+            input_adjoint_plan(dataclasses.replace(s, epilogue=()))
+            for s in reversed(plan.stages)])
     exts = plan.exts
     reflected = [
         (tuple(e - 1 - o for e, o in zip(exts, off)), cid)
@@ -165,6 +184,7 @@ def input_adjoint_plan(plan: SystolicPlan) -> SystolicPlan:
         # the adjoint and its reduce axis is produced.
         reduce_axes=plan.out_axes,
         out_axes=plan.reduce_axes,
+        epilogue=(),            # the adjoint is of the linear part only
     )
 
 
@@ -177,6 +197,47 @@ def adjoint_coeff_array(plan: SystolicPlan, w):
     perm = tuple(range(no, no + nr)) + tuple(range(no)) + tuple(
         range(no + nr, w.ndim))
     return jnp.transpose(w, perm)
+
+
+# ---------------------------------------------------------------------------
+# Epilogues: the jnp replay and its VJP (DESIGN.md §11.4)
+# ---------------------------------------------------------------------------
+
+def apply_epilogue(plan: SystolicPlan, y, args):
+    """Replay a plan's epilogue stages on ``y`` in plain jnp.
+
+    This is the semantic reference of what the engine fuses in VMEM —
+    used by the ``impl='xla'`` oracle path and, crucially, by the
+    backward rules: an epilogue makes the op affine/nonlinear, so its
+    VJP is this elementwise chain differentiated by JAX at the saved
+    pre-activation (``jax.vjp(lambda z, a: apply_epilogue(plan, z, a),
+    z, args)``), after which the remaining cotangent flows through the
+    *linear* adjoint plan on the engine. Bias broadcasting follows the
+    plan's layout: per-C_out ahead of the spatial axes for out-axes
+    plans, per-lane (trailing axis) for perlane plans, scalar otherwise.
+    """
+    ai = 0
+    for st in plan.epilogue:
+        if st.op == "gelu":
+            y = jax.nn.gelu(y, approximate=True)
+        elif st.op == "silu":
+            y = jax.nn.silu(y)
+        elif st.op == "relu":
+            y = jnp.maximum(y, 0)
+        elif st.op == "scale":
+            y = y * st.value
+        elif st.op == "bias":
+            b = args[ai].astype(y.dtype)
+            ai += 1
+            if plan.out_axes:
+                b = b.reshape(b.shape + (1,) * plan.ndim_spatial)
+            y = y + b
+        elif st.op == "residual_add":
+            y = y + args[ai].astype(y.dtype)
+            ai += 1
+        else:
+            raise ValueError(st.op)
+    return y
 
 
 # ---------------------------------------------------------------------------

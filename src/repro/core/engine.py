@@ -40,8 +40,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .fuse import pipeline_coeff_count
 from .halo import origin_pads
-from .plan import SystolicPlan, Tap
+from .plan import (EPILOGUE_OPERANDS, EpilogueStage, SystolicPlan, Tap,
+                   epilogue_operand_stages)
 
 
 # ---------------------------------------------------------------------------
@@ -67,13 +69,17 @@ def _coeff(plan: SystolicPlan, w_ref, tap: Tap, acc_dtype):
     raise ValueError(plan.coeff_mode)
 
 
-def _accumulate_over_reduce(acc_ref, o_ref, contrib, rdims, o_idx):
+def _accumulate_over_reduce(acc_ref, o_ref, contrib, rdims, o_idx,
+                            epilogue_fn=None):
     """Grid-reduce epilogue shared by every accumulating kernel.
 
     The sweep over ``rdims`` (innermost, sequential grid dims) revisits
     the same output block: reset the scratch on the first reduce
     iterate, ⊕-accumulate the block's contribution, flush to the output
     ref on the last — the matmul-k pattern (DESIGN.md §9.2/§10.1).
+    ``epilogue_fn`` (plan-IR output stages, DESIGN.md §11) applies at
+    the flush, i.e. to the *summed* block, in VMEM — between the
+    accumulator flush and the output store.
     """
     first = functools.reduce(
         jnp.logical_and, [pl.program_id(d) == 0 for d in rdims])
@@ -89,7 +95,10 @@ def _accumulate_over_reduce(acc_ref, o_ref, contrib, rdims, o_idx):
 
     @pl.when(last)
     def _flush():
-        o_ref[o_idx] = acc_ref[...].astype(o_ref.dtype)
+        out = acc_ref[...]
+        if epilogue_fn is not None:
+            out = epilogue_fn(out)
+        o_ref[o_idx] = out.astype(o_ref.dtype)
 
 
 def _tap_read(xb: jnp.ndarray, tap: Tap, valid: tuple[int, ...]) -> jnp.ndarray:
@@ -103,65 +112,148 @@ def _tap_read(xb: jnp.ndarray, tap: Tap, valid: tuple[int, ...]) -> jnp.ndarray:
     return xb[tap.row_offset : tap.row_offset + valid[0], :]
 
 
+def _apply_plan_once(xb, stage: SystolicPlan, w_ref, variant: str, acc_dtype):
+    """One valid application of ``stage``'s schedule on the block ``xb``.
+
+    Dense (stride-1) plans run either schedule variant (DESIGN.md §2).
+    Output-strided plans use the data-stationary strided read directly —
+    output lane ``l`` gathers input lane ``l·stride + cum`` per column
+    step, so the kernel computes only the lanes the stride keeps instead
+    of the dense result it would subsample.
+    """
+    exts = stage.exts
+    M = stage.M
+    stride = stage.stride_per_axis()
+    if any(v > 1 for v in stride):
+        sh, sw = stride
+        out_sp = tuple((n - e) // v + 1
+                       for n, e, v in zip(xb.shape, exts, stride))
+        s = jnp.zeros(out_sp, acc_dtype)
+        cum = 0
+        for step in stage.steps:
+            cum += step.shift
+            for tap in step.taps:
+                patch = xb[
+                    tap.row_offset : tap.row_offset + out_sp[0] * sh : sh,
+                    cum : cum + out_sp[1] * sw : sw,
+                ]
+                s = s + patch * _coeff(stage, w_ref, tap, acc_dtype)
+        return s
+    valid = tuple(n - (e - 1) for n, e in zip(xb.shape, exts))
+    # Partial sums keep the full lane width until the valid-lane crop.
+    s = jnp.zeros(valid[:-1] + (xb.shape[-1],), acc_dtype)
+    if variant == "shift_psum":
+        # Paper Listing 1/2: shift the partial sums one lane per
+        # column-step, then accumulate that column's vertical taps.
+        for step in stage.steps:
+            if step.shift:
+                s = jnp.roll(s, step.shift, axis=-1)
+            for tap in step.taps:
+                s = s + _tap_read(xb, tap, valid) * _coeff(
+                    stage, w_ref, tap, acc_dtype)
+        return s[..., M - 1 : M - 1 + valid[-1]]
+    if variant == "shift_data":
+        # Stationary accumulator: roll the data by the cumulative
+        # shift instead. Same per-lane sums in the same order.
+        cum = 0
+        for step in stage.steps:
+            cum += step.shift
+            xs = jnp.roll(xb, -cum, axis=-1) if cum else xb
+            for tap in step.taps:
+                s = s + _tap_read(xs, tap, valid) * _coeff(
+                    stage, w_ref, tap, acc_dtype)
+        return s[..., : valid[-1]]
+    raise ValueError(variant)
+
+
+def _apply_epilogue_val(st: EpilogueStage, val, epi_ref, plan: SystolicPlan,
+                        acc_dtype, o_idx):
+    """One elementwise epilogue stage on an in-VMEM block (DESIGN.md §11)."""
+    if st.op == "gelu":
+        return jax.nn.gelu(val, approximate=True)
+    if st.op == "silu":
+        return jax.nn.silu(val)
+    if st.op == "relu":
+        return jnp.maximum(val, 0)
+    if st.op == "scale":
+        return val * st.value
+    if st.op == "bias":
+        if plan.out_axes:                 # per-out-channel (NCHW): scalar
+            return val + epi_ref[(0,) * plan.out_axes].astype(acc_dtype)
+        if plan.coeff_mode == "perlane":  # per-lane (depthwise conv) row
+            return val + epi_ref[...].astype(acc_dtype)
+        return val + epi_ref[0].astype(acc_dtype)
+    if st.op == "residual_add":
+        return val + epi_ref[o_idx].astype(acc_dtype)
+    raise ValueError(st.op)
+
+
 def _window_kernel(*refs, plan: SystolicPlan, block: tuple[int, ...],
                    time_steps: int, variant: str, acc_dtype):
     """One overlapped block of any windowed plan.
 
-    ``refs`` is ``(x_ref, [w_ref,] o_ref[, acc_ref])``. The block runs
-    ``time_steps`` fused plan applications (§6.4); each iterate consumes
-    one footprint of halo per axis and the valid lanes shrink by M−1
-    (§4.4). Reduce plans carry the block's partial sum in an fp32 VMEM
-    scratch accumulator across the (innermost, sequential) reduce grid
-    iterates and write the output on the last one — §2's shift-psum
-    dataflow applied across channels instead of lanes.
+    ``refs`` is ``(x_ref, *w_refs, *epilogue_refs, o_ref[, acc_ref])``.
+    The block runs ``time_steps`` fused applications of the plan (§6.4)
+    — or, for a fused pipeline, one application of each ``plan.stages``
+    entry with the stage's own taps/coefficients and any mid-chain
+    elementwise epilogues applied between stages, all in VMEM
+    (DESIGN.md §11). Each application consumes one stage-footprint of
+    halo per axis. The final epilogue applies between the accumulator
+    flush and the output store. Reduce plans carry the block's partial
+    sum in an fp32 VMEM scratch accumulator across the (innermost,
+    sequential) reduce grid iterates and write the output on the last
+    one — §2's shift-psum dataflow applied across channels instead of
+    lanes.
     """
     nb, nr, no = plan.batch_axes, plan.reduce_axes, plan.out_axes
+    n_w = pipeline_coeff_count(plan)
+    epi_entries = epilogue_operand_stages(plan.final_epilogue())
     x_ref = refs[0]
-    w_ref = refs[1] if plan.coeff_mode != "table" else None
-    if nr:
-        o_ref, acc_ref = refs[-2], refs[-1]
-    else:
-        o_ref = refs[-1]
+    w_refs = refs[1:1 + n_w]
+    epi_refs = refs[1 + n_w:1 + n_w + len(epi_entries)]
+    o_ref = refs[1 + n_w + len(epi_entries)]
+    acc_ref = refs[-1] if nr else None
     xb = (x_ref[(0,) * (nb + nr)] if nb + nr else x_ref[...]).astype(acc_dtype)
-    exts = plan.exts
-    M = plan.M
-    for _ in range(time_steps):
-        valid = tuple(s - (e - 1) for s, e in zip(xb.shape, exts))
-        # Partial sums keep the full lane width until the valid-lane crop.
-        s = jnp.zeros(valid[:-1] + (xb.shape[-1],), acc_dtype)
-        if variant == "shift_psum":
-            # Paper Listing 1/2: shift the partial sums one lane per
-            # column-step, then accumulate that column's vertical taps.
-            for step in plan.steps:
-                if step.shift:
-                    s = jnp.roll(s, step.shift, axis=-1)
-                for tap in step.taps:
-                    s = s + _tap_read(xb, tap, valid) * _coeff(
-                        plan, w_ref, tap, acc_dtype)
-            xb = s[..., M - 1 : M - 1 + valid[-1]]
-        elif variant == "shift_data":
-            # Stationary accumulator: roll the data by the cumulative
-            # shift instead. Same per-lane sums in the same order.
-            cum = 0
-            for step in plan.steps:
-                cum += step.shift
-                xs = jnp.roll(xb, -cum, axis=-1) if cum else xb
-                for tap in step.taps:
-                    s = s + _tap_read(xs, tap, valid) * _coeff(
-                        plan, w_ref, tap, acc_dtype)
-            xb = s[..., : valid[-1]]
-        else:
-            raise ValueError(variant)
+    if plan.stages:
+        wi = 0
+        for si, stage in enumerate(plan.stages):
+            w_ref = None
+            if stage.coeff_mode == "dense":
+                w_ref = w_refs[wi]
+                wi += 1
+            xb = _apply_plan_once(xb, stage, w_ref, variant, acc_dtype)
+            if si < len(plan.stages) - 1:
+                # mid-chain epilogues are operand-free (fuse_plans) and
+                # fix zero, so the pad-once boundary survives the chain.
+                for st in stage.epilogue:
+                    xb = _apply_epilogue_val(st, xb, None, plan, acc_dtype,
+                                             None)
+    else:
+        w_ref = w_refs[0] if n_w else None
+        for _ in range(time_steps):
+            xb = _apply_plan_once(xb, plan, w_ref, variant, acc_dtype)
     res = xb[tuple(slice(0, b) for b in block)]
     o_idx = (0,) * (nb + no) if nb + no else ...
+
+    def epilogue_fn(val):
+        ei = 0
+        for st in plan.final_epilogue():
+            ref = None
+            if st.op in EPILOGUE_OPERANDS:
+                ref = epi_refs[ei]
+                ei += 1
+            val = _apply_epilogue_val(st, val, ref, plan, acc_dtype, o_idx)
+        return val
+
     if nr:
         # Reduce grid dims are innermost: per output block the sweep is
         # sequential, so the scratch accumulator is exact fp32 ⊕ (§2).
         rdims = range(nb + no + plan.ndim_spatial,
                       nb + no + plan.ndim_spatial + nr)
-        _accumulate_over_reduce(acc_ref, o_ref, res, tuple(rdims), o_idx)
+        _accumulate_over_reduce(acc_ref, o_ref, res, tuple(rdims), o_idx,
+                                epilogue_fn)
     else:
-        o_ref[o_idx] = res.astype(o_ref.dtype)
+        o_ref[o_idx] = epilogue_fn(res).astype(o_ref.dtype)
 
 
 @functools.partial(
@@ -171,7 +263,7 @@ def _window_kernel(*refs, plan: SystolicPlan, block: tuple[int, ...],
 )
 def run_window_plan(
     x: jax.Array,
-    w: jax.Array | None = None,
+    w=None,
     *,
     plan: SystolicPlan,
     block: tuple[int, ...],
@@ -179,6 +271,7 @@ def run_window_plan(
     variant: str = "shift_psum",
     interpret: bool = True,
     acc_dtype=jnp.float32,
+    epilogue_args: tuple = (),
 ) -> jax.Array:
     """Lower a windowed plan to a Pallas call and run it.
 
@@ -188,14 +281,21 @@ def run_window_plan(
       w: runtime coefficients for ``coeff_mode`` 'dense' (full filter,
         prefixed by ``out_axes + reduce_axes`` channel axes for reduce
         plans) or 'perlane' (``(K, lanes)`` rows); None for 'table' plans.
+        For a fused pipeline (``plan.stages``), a tuple with one entry
+        per stage — an array for 'dense' stages, None for 'table' ones.
       plan: the systolic schedule + geometry (lead/trail, footprint).
       block: output block size per windowed axis, lane axis last.
       time_steps: fused plan applications per block (§6.4).
+      epilogue_args: runtime operands of the final epilogue's
+        operand-bearing stages, in stage order — ``bias`` (per-C_out for
+        out-axes plans, per-lane for perlane plans, scalar otherwise)
+        and/or ``residual_add`` (shaped like the output).
 
     Returns:
       The plan's output, ``batch + out_axes + spatial``-shaped: per
-      windowed axis, ``out = in + t·(lead+trail) − t·(ext−1)``; reduce
-      axes are contracted away (fp32 grid accumulator).
+      windowed axis, ``out = (in + t·(lead+trail) − t·(ext−1) − 1) //
+      stride + 1``; reduce axes are contracted away (fp32 grid
+      accumulator).
     """
     nb, nr, no, nd = (plan.batch_axes, plan.reduce_axes, plan.out_axes,
                       plan.ndim_spatial)
@@ -209,6 +309,18 @@ def run_window_plan(
             "temporal blocking does not commute with a channel reduction: "
             "iterate t must see the *summed* output of iterate t-1, which "
             "only exists after the full reduce sweep")
+    if plan.stages:
+        assert time_steps == 1, "a fused pipeline already is the fusion"
+        assert isinstance(w, tuple) and len(w) == len(plan.stages), (
+            "fused plans take one coefficient entry per stage (None for "
+            "'table' stages)", plan.kind)
+    if any(v > 1 for v in plan.stride_per_axis()):
+        assert nd == 2 and time_steps == 1 and not plan.stages, (
+            "output strides support single 2-D plan applications")
+    epi_entries = epilogue_operand_stages(plan.final_epilogue())
+    assert len(epilogue_args) == len(epi_entries), (
+        "epilogue_args must match the final epilogue's operand-bearing "
+        "stages", [s.op for s in epi_entries])
     t = time_steps
     spatial_in = x.shape[nb + nr:]
     out_sp = plan.out_shape(spatial_in, t)
@@ -216,6 +328,7 @@ def run_window_plan(
 
     B = tuple(min(b, o) for b, o in zip(block, out_sp))
     g = tuple(pl.cdiv(o, b) for o, b in zip(out_sp, B))
+    stride = plan.stride_per_axis()
     # Origin + round-up padding (core.halo): t·lead zeros ahead of the
     # origin, then enough behind so every (including the last) overlapped
     # input block is in-bounds.
@@ -235,16 +348,26 @@ def run_window_plan(
     # Overlapped input blocks (§4.5): element-indexed specs — output tiles
     # are disjoint, input tiles overlap by the halo, so grid steps never
     # communicate (the TPU analogue of the paper's branch-free warp blocks).
+    # An output-strided grid reads input tiles at stride-scaled origins.
     in_block = plan.block_in_shape(B, t)
     x_spec = pl.BlockSpec(
         (1,) * (nb + nr) + in_block,
         lambda *ids: ids[:nb] + ids[rd0:rd0 + nr] + tuple(
-            i * b for i, b in zip(ids[sp0:sp0 + nd], B)),
+            i * b * v for i, b, v in zip(ids[sp0:sp0 + nd], B, stride)),
         indexing_mode=pl.Unblocked(),
     )
     in_specs = [x_spec]
     operands = [xp]
-    if plan.coeff_mode == "dense":
+    if plan.stages:
+        for stage, w_s in zip(plan.stages, w):
+            if stage.coeff_mode == "table":
+                assert w_s is None, (stage.kind, "table stage took a w")
+                continue
+            fil = w_s.shape
+            in_specs.append(pl.BlockSpec(
+                fil, lambda *ids, _n=len(fil): (0,) * _n))
+            operands.append(w_s)
+    elif plan.coeff_mode == "dense":
         fil = w.shape[no + nr:]
         in_specs.append(pl.BlockSpec(
             (1,) * (no + nr) + fil,
@@ -258,6 +381,35 @@ def run_window_plan(
             pl.BlockSpec((w.shape[0], B[-1]),
                          lambda *ids: (0, ids[sp0 + nd - 1])))
         operands.append(wp)
+
+    # Epilogue operands (DESIGN.md §11): bias rides per-channel/lane/
+    # scalar, a residual rides blocked exactly like the output.
+    for st, arr in zip(epi_entries, epilogue_args):
+        if st.op == "bias":
+            if no:
+                assert arr.shape == out_dims, (arr.shape, out_dims)
+                in_specs.append(pl.BlockSpec(
+                    (1,) * no, lambda *ids: ids[nb:nb + no]))
+                operands.append(arr)
+            elif plan.coeff_mode == "perlane" and not plan.stages:
+                assert arr.shape == (spatial_in[-1],), (arr.shape, spatial_in)
+                bp = jnp.pad(arr, (0, g[-1] * B[-1] - arr.shape[-1]))
+                in_specs.append(pl.BlockSpec(
+                    (B[-1],), lambda *ids: (ids[sp0 + nd - 1],)))
+                operands.append(bp)
+            else:
+                assert arr.size == 1, ("scalar bias expected for "
+                                       f"{plan.kind!r}", arr.shape)
+                in_specs.append(pl.BlockSpec((1,), lambda *ids: (0,)))
+                operands.append(jnp.reshape(arr, (1,)))
+        else:                           # residual_add: output layout
+            assert arr.shape == batch_dims + out_dims + out_sp, (
+                arr.shape, batch_dims + out_dims + out_sp)
+            rp = jnp.pad(arr, [(0, 0)] * (nb + no) + [
+                (0, gi * bi - o) for gi, bi, o in zip(g, B, out_sp)])
+            in_specs.append(pl.BlockSpec(
+                (1,) * (nb + no) + B, lambda *ids: ids[:rd0]))
+            operands.append(rp)
 
     kern = functools.partial(
         _window_kernel, plan=plan, block=B, time_steps=t, variant=variant,
@@ -451,6 +603,15 @@ def _scan_kernel(*refs, plan: SystolicPlan, acc_dtype):
     def _reset():
         carry[:] = jnp.zeros_like(carry)   # h₋₁ = 0 for both combines
 
+    def store(s):
+        # The epilogue applies to the *stored* copy only (DESIGN.md §11);
+        # the inter-block carry keeps the raw scan state — fusing an
+        # activation must not corrupt the recurrence.
+        out = s
+        for st in plan.epilogue:
+            out = _apply_epilogue_val(st, out, None, plan, acc_dtype, None)
+        o_ref[:] = out.astype(o_ref.dtype)
+
     lane = jax.lax.broadcasted_iota(jnp.int32, ins[0].shape, 1)
     if plan.combine == "add":
         s = ins[0][:].astype(acc_dtype)
@@ -459,7 +620,7 @@ def _scan_kernel(*refs, plan: SystolicPlan, acc_dtype):
             s = s + jnp.where(lane >= step.shift, shifted, jnp.zeros_like(s))
         s = s + carry[:]                  # inter-block carry (scratchpad)
         carry[:] = s[:, -1:]
-        o_ref[:] = s.astype(o_ref.dtype)
+        store(s)
     elif plan.combine == "linrec":
         A = ins[0][:].astype(acc_dtype)   # transfer pairs (a, b)
         B = ins[1][:].astype(acc_dtype)
@@ -472,7 +633,7 @@ def _scan_kernel(*refs, plan: SystolicPlan, acc_dtype):
             A, B = A * As, A * Bs + B     # f_t ∘ f_{t−d}
         h = A * carry[:] + B              # prefix applied to the carry
         carry[:] = h[:, -1:]
-        o_ref[:] = h.astype(o_ref.dtype)
+        store(h)
     else:
         raise ValueError(plan.combine)
 
@@ -492,8 +653,15 @@ def run_scan_plan(
     ``plan.S`` is the lane-tile width BT (a power of two); T is tiled into
     sequential grid steps whose carries ride in VMEM scratch. Padding uses
     the combine's identity element ('add': 0; 'linrec': (1, 0)) so padded
-    tail lanes are no-ops.
+    tail lanes are no-ops. ``plan.epilogue`` may carry *operand-free*
+    elementwise stages (gelu/silu/relu/scale), applied to the stored
+    output only — the carry keeps the raw scan state.
     """
+    if epilogue_operand_stages(plan.epilogue):
+        raise ValueError(
+            f"scan plans take operand-free epilogue stages only, got "
+            f"{[s.op for s in plan.epilogue]}: bias/residual operands "
+            "have no blocked layout along the sequential carry")
     R, T = operands[0].shape
     BT = plan.S
     BR = min(block_r, R)

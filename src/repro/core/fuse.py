@@ -1,0 +1,170 @@
+"""Fused plan pipelines — chain composition in the plan IR (DESIGN.md §11).
+
+The paper's §6.4 temporal blocking fuses ``t`` applications of the *same*
+plan inside one block; :func:`fuse_plans` generalizes that machinery from
+"same plan × t" to an arbitrary **plan list**: consecutive shape-preserving
+windowed plans compose into one :class:`~repro.core.plan.SystolicPlan`
+whose ``stages`` field carries the per-stage tap sets/coefficients and
+whose top-level footprint/lead/trail are the *summed* stage geometry.
+
+Because the composite is an ordinary ``SystolicPlan``, every downstream
+layer gets chains for free:
+
+* the **engine** iterates ``plan.stages`` inside the block exactly where
+  temporal blocking iterated ``time_steps`` copies — partial activations
+  between stages never leave VMEM/VREGs (the whole point: each seam of an
+  unfused chain is a full HBM write+read of the activation);
+* the **halo geometry** (:mod:`repro.core.halo`) sees summed
+  lead/trail/ext, so :func:`~repro.core.halo.shard_halo` ships **one
+  widened halo per fused chain** over the mesh, same as temporal blocking;
+* the **tuner** keys the chain as one plan signature whose §5 cost is the
+  summed flop terms against a single load+store;
+* the **adjoint** of a chain is the reversed chain of stage adjoints
+  (:func:`repro.core.adjoint.input_adjoint_plan` recurses into stages), so
+  a purely linear fused pipeline differentiates through one fused backward
+  kernel.
+
+Legality (checked here, pre-``pallas_call``, with named errors):
+
+* every stage is a windowed (``combine='fma'``) plan — scans carry a
+  sequential inter-block carry and cannot sit in a spatial chain;
+* no stage has reduce/out axes — a channel reduction (NCHW conv) must
+  complete its full accumulator sweep before the next stage may read the
+  summed output, exactly the reason temporal blocking refuses reduce
+  plans (route those through a fused *epilogue* instead);
+* every stage is shape-preserving per axis (``lead+trail = ext−1``) so
+  intermediate shapes survive the chain and the composite stays
+  shardable;
+* stage epilogues between stages must fix zero (no ``bias`` /
+  ``residual_add`` mid-chain — they would shift the pad-once zero
+  boundary); the final stage may carry any epilogue.
+
+Semantics are pad-once (trapezoidal), shared with temporal blocking and
+``ref.stencil_iterate``: the domain is zero-padded once by the *summed*
+leads/trails, then the stages apply as valid windows in order. Since the
+mid-chain activations fix zero, this agrees with per-op same-shape
+zero-boundary application on the interior at distance > Σ radius from
+the boundary.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .plan import SystolicPlan, epilogue_operand_stages
+
+
+def _check_stage(i: int, p: SystolicPlan, n: int) -> None:
+    tag = f"fuse_plans: stage {i} ({p.kind!r})"
+    if p.combine != "fma":
+        raise ValueError(
+            f"{tag} is a scan plan (combine={p.combine!r}); only windowed "
+            "plans chain-fuse — scans carry a sequential inter-block carry")
+    if p.stages:
+        raise ValueError(f"{tag} is already a fused chain; flatten the "
+                         "stage list instead of nesting pipelines")
+    if p.reduce_axes or p.out_axes:
+        raise ValueError(
+            f"{tag} carries reduce/out axes: a channel reduction must "
+            "complete its accumulator sweep before the next stage can read "
+            "the summed output, so NCHW conv stages cannot chain-fuse — "
+            "fuse their activation as an epilogue instead (DESIGN.md §11)")
+    if p.coeff_mode == "perlane":
+        raise ValueError(
+            f"{tag} uses per-lane coefficients; depthwise plans do not "
+            "chain-fuse (their lane axis is the channel axis)")
+    if p.stride and any(v > 1 for v in p.stride):
+        raise ValueError(
+            f"{tag} is output-strided; a strided stage changes the domain "
+            "extent mid-chain, so strides fuse only as the final engine "
+            "call's own grid (unfused)")
+    lead, trail = p.lead_trail()
+    for a in range(p.ndim_spatial):
+        if lead[a] + trail[a] != p.exts[a] - 1:
+            raise ValueError(
+                f"{tag} is not shape-preserving on axis {a} "
+                f"(lead+trail={lead[a] + trail[a]} != ext-1="
+                f"{p.exts[a] - 1}); only shape-preserving stages chain "
+                "(for conv2d use mode='same')")
+    if i < n - 1 and epilogue_operand_stages(p.epilogue):
+        raise ValueError(
+            f"{tag} carries an operand-bearing epilogue "
+            f"({[s.op for s in epilogue_operand_stages(p.epilogue)]}) "
+            "mid-chain: bias/residual_add shift the zero boundary, so they "
+            "are only legal on the final stage of a fused pipeline")
+
+
+def summed_lead_trail(
+    plans,
+) -> tuple[tuple[int, ...], tuple[int, ...]]:
+    """Per-axis (Σ lead, Σ trail) of a chain — the pad-once frame both
+    the fused composite plan and the unfused fallback/oracle share."""
+    nd = plans[0].ndim_spatial
+    lead = tuple(sum(p.lead_trail()[0][a] for p in plans)
+                 for a in range(nd))
+    trail = tuple(sum(p.lead_trail()[1][a] for p in plans)
+                  for a in range(nd))
+    return lead, trail
+
+
+def fuse_plans(*plans: SystolicPlan) -> SystolicPlan:
+    """Compose consecutive windowed plans into one fused pipeline plan.
+
+    ``fuse_plans(p1, p2, p3)`` executes ``p3(p2(p1(x)))`` in a single
+    engine kernel. The returned plan's ``stages`` are the inputs in
+    application order; its top-level footprint / lead / trail are the
+    summed stage geometry, so halo arithmetic, sharding validation and
+    §5 pricing treat the chain as one (wider) windowed plan. Raises
+    named ``ValueError``\\ s for chains that do not qualify (see module
+    docstring) — callers that want an automatic unfused fallback catch
+    them (``ops.pipeline(fuse='auto')``).
+    """
+    if not plans:
+        raise ValueError("fuse_plans needs at least one plan")
+    if len(plans) == 1:
+        return plans[0]
+    head = plans[0]
+    n = len(plans)
+    for i, p in enumerate(plans):
+        _check_stage(i, p, n)
+        if p.ndim_spatial != head.ndim_spatial:
+            raise ValueError(
+                f"fuse_plans: stage {i} is {p.ndim_spatial}-D but stage 0 "
+                f"is {head.ndim_spatial}-D; chains must share the domain")
+        if p.S != head.S:
+            raise ValueError(
+                f"fuse_plans: stage {i} has lane width S={p.S} != {head.S}")
+        if p.batch_axes != head.batch_axes:
+            raise ValueError(
+                f"fuse_plans: stage {i} has batch_axes={p.batch_axes} != "
+                f"{head.batch_axes}; every stage must see the same batch")
+
+    exts = tuple(
+        1 + sum(p.exts[a] - 1 for p in plans)
+        for a in range(head.ndim_spatial))
+    lead, trail = summed_lead_trail(plans)
+    if head.ndim_spatial == 3:
+        depth, N, M = exts
+    else:
+        depth, (N, M) = 1, exts
+    return dataclasses.replace(
+        head,
+        kind="pipe%d_%s" % (n, "+".join(p.kind for p in plans)),
+        stages=tuple(plans),
+        steps=(),                       # per-stage steps live on the stages
+        M=M, N=N, depth=depth,
+        C=N + head.P - 1,
+        lead=lead if any(lead) else None,
+        trail=trail if any(trail) else None,
+        coeffs=None,
+        coeff_mode="dense" if any(p.coeff_mode == "dense" for p in plans)
+        else "table",
+        epilogue=(),                    # stage epilogues live on the stages
+    )
+
+
+def pipeline_coeff_count(plan: SystolicPlan) -> int:
+    """Number of runtime coefficient operands a fused plan consumes (one
+    per 'dense' stage, in stage order); 0/1 for unfused plans."""
+    if plan.stages:
+        return sum(1 for s in plan.stages if s.coeff_mode == "dense")
+    return 0 if plan.coeff_mode == "table" else 1

@@ -40,13 +40,23 @@ def origin_pads(
 
     ``t·lead`` zeros ahead of the origin (the plan's semantic boundary
     padding), then enough behind so every — including the last —
-    overlapped input block of the ``grid × block`` tiling is in-bounds.
+    overlapped input block of the ``grid × block`` tiling is in-bounds:
+    the tiling reads ``(g·b − 1)·stride + 1 + halo`` input rows per axis
+    (stride 1 ⇒ the familiar ``g·b + halo``). Fused chains need no case
+    here: their composite ``exts``/``lead`` already carry the summed
+    stage footprints (DESIGN.md §11).
     """
     lead, _ = plan.lead_trail()
     halo = plan.halo(time_steps)
+    stride = plan.stride_per_axis()
+    # A strided tiling can need *fewer* input rows than provided (the
+    # stride skips the tail); clamp at zero — the surplus rows are
+    # simply never read by any block.
     return [
-        (time_steps * l, g * b + h - time_steps * l - s)
-        for l, g, b, h, s in zip(lead, grid, block, halo, spatial_in)
+        ((time_steps * l),
+         max(0, (g * b - 1) * v + 1 + h - time_steps * l - s))
+        for l, g, b, h, s, v in zip(lead, grid, block, halo, spatial_in,
+                                    stride)
     ]
 
 

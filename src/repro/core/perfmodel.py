@@ -67,7 +67,13 @@ def avg_dif_lower_bound(hw: HardwareLatencies, plan: SystolicPlan) -> float:
 
 
 def plan_cycles_per_window(hw: HardwareLatencies, plan: SystolicPlan) -> float:
-    """Price an arbitrary plan: Σ taps·T_mad + Σ shifts·T_shfl per window step."""
-    mads = plan.mads_per_output_window()
+    """Price an arbitrary plan: Σ taps·T_mad + Σ shifts·T_shfl per window
+    step. Fused pipelines price as the sum of their stage schedules plus
+    one VPU op per fused epilogue stage — the flop side of the §11 "summed
+    flop terms, one load+store" account (the memory side lives in
+    :func:`repro.core.tuning.model_cost`)."""
+    mads = plan.mads_per_output_window()    # summed over stages when fused
     shifts = plan.shift_count()
-    return plan.P * (mads * (hw.t_mad + hw.t_reg)) + plan.P * shifts * hw.t_shfl
+    epi = plan.epilogue_op_count() * hw.t_mad
+    return (plan.P * (mads * (hw.t_mad + hw.t_reg))
+            + plan.P * shifts * hw.t_shfl + plan.P * epi)

@@ -35,6 +35,75 @@ from typing import Sequence
 GPU_WARP_LANES = 32
 TPU_VREG_LANES = 128
 
+# Closed vocabulary of fusable elementwise epilogue stages (DESIGN.md §11).
+# Applied in VMEM between the accumulator flush and the output store, so a
+# conv→activation seam stops round-tripping HBM. The activations all fix 0
+# (gelu(0) = silu(0) = relu(0) = s·0 = 0), which is what lets them sit
+# *between* fused pipeline stages without disturbing the zero-boundary
+# pad-once semantics; `bias`/`residual_add` shift zero and are therefore
+# only legal as the *final* stage of a chain.
+EPILOGUE_OPS = ("bias", "gelu", "silu", "relu", "scale", "residual_add")
+# op → number of runtime operands it consumes from ``epilogue_args``.
+EPILOGUE_OPERANDS = {"bias": 1, "residual_add": 1}
+
+
+@dataclasses.dataclass(frozen=True)
+class EpilogueStage:
+    """One elementwise output stage: ``op`` from :data:`EPILOGUE_OPS`.
+
+    ``value`` is the static operand of ``'scale'`` (compile-time, like a
+    'table' coefficient); ``'bias'``/``'residual_add'`` take *runtime*
+    operands from the ``epilogue_args`` of the engine call instead.
+    """
+
+    op: str
+    value: float | None = None
+
+
+def normalize_epilogue(epilogue) -> tuple[EpilogueStage, ...]:
+    """Normalize user epilogue spec → ``tuple[EpilogueStage, ...]``.
+
+    Accepts None, a single op name, an :class:`EpilogueStage`, a
+    ``(op, value)`` pair, or any sequence of those. Unknown ops raise a
+    named ``ValueError`` here — before any ``pallas_call``.
+    """
+    if epilogue is None:
+        return ()
+    if isinstance(epilogue, (str, EpilogueStage)):
+        epilogue = (epilogue,)
+    elif (isinstance(epilogue, tuple) and len(epilogue) == 2
+          and isinstance(epilogue[0], str)
+          and isinstance(epilogue[1], (int, float))):
+        epilogue = (epilogue,)
+    out = []
+    for st in epilogue:
+        if isinstance(st, str):
+            st = EpilogueStage(st)
+        elif isinstance(st, tuple):
+            op, value = st
+            st = EpilogueStage(op, float(value))
+        if not isinstance(st, EpilogueStage) or st.op not in EPILOGUE_OPS:
+            raise ValueError(
+                f"unknown epilogue stage {st!r}: the fusable vocabulary is "
+                f"{EPILOGUE_OPS} (DESIGN.md §11)")
+        if st.op == "scale" and st.value is None:
+            raise ValueError("epilogue stage 'scale' needs a static value: "
+                             "pass ('scale', s)")
+        if st.op != "scale" and st.value is not None:
+            raise ValueError(
+                f"epilogue stage {st.op!r} takes no static value (got "
+                f"{st.value!r}); only 'scale' does — bias/residual operands "
+                "ride in epilogue_args")
+        out.append(st)
+    return tuple(out)
+
+
+def epilogue_operand_stages(
+    stages: tuple[EpilogueStage, ...]
+) -> tuple[EpilogueStage, ...]:
+    """The subsequence of stages that consume a runtime operand, in order."""
+    return tuple(st for st in stages if st.op in EPILOGUE_OPERANDS)
+
 
 @dataclasses.dataclass(frozen=True)
 class Tap:
@@ -125,6 +194,11 @@ class SystolicPlan:
     trail: tuple[int, ...] | None = None  # zero-pad behind the data per axis
     coeffs: tuple[float, ...] | None = None  # immediates for 'table' mode
     coeff_mode: str = "dense"  # 'table' | 'dense' | 'perlane'
+    # ---- fused pipelines + output epilogues (DESIGN.md §11) ---------------
+    epilogue: tuple[EpilogueStage, ...] = ()  # elementwise output stages
+    stride: tuple[int, ...] | None = None  # output stride per windowed axis
+    stages: tuple["SystolicPlan", ...] = ()  # fused chain (core.fuse); the
+    #   top-level fields then carry the *composite* footprint/lead/trail
 
     # ---- X geometry: what the engine lowers from --------------------------
     @property
@@ -138,23 +212,37 @@ class SystolicPlan:
         zeros = (0,) * self.ndim_spatial
         return (self.lead or zeros, self.trail or zeros)
 
+    def stride_per_axis(self) -> tuple[int, ...]:
+        """Output stride per windowed axis (1 = dense)."""
+        return self.stride or (1,) * self.ndim_spatial
+
     def halo(self, time_steps: int = 1) -> tuple[int, ...]:
         """Input-over-output overlap per windowed axis — the §4.5 halo,
-        widened ``time_steps``-fold under temporal blocking (§6.4)."""
+        widened ``time_steps``-fold under temporal blocking (§6.4). For a
+        fused chain (``stages``) the top-level ``exts`` already carry the
+        summed stage footprints, so the same expression yields the
+        chain-widened halo (DESIGN.md §11)."""
         return tuple(time_steps * (e - 1) for e in self.exts)
 
     def out_shape(self, in_shape: tuple[int, ...], time_steps: int = 1) -> tuple[int, ...]:
         """Windowed-axes output shape: each valid application shrinks an
-        axis by ``ext−1`` and the lead/trail zero-pad grows it back."""
+        axis by ``ext−1``, the lead/trail zero-pad grows it back, and an
+        output stride subsamples what remains."""
         lead, trail = self.lead_trail()
         return tuple(
-            s + time_steps * (l + r) - time_steps * (e - 1)
-            for s, l, r, e in zip(in_shape, lead, trail, self.exts)
+            (s + time_steps * (l + r) - time_steps * (e - 1) - 1) // v + 1
+            for s, l, r, e, v in zip(in_shape, lead, trail, self.exts,
+                                     self.stride_per_axis())
         )
 
     def block_in_shape(self, block: tuple[int, ...], time_steps: int = 1) -> tuple[int, ...]:
-        """Overlapped input block for a given output block (§4.5)."""
-        return tuple(b + h for b, h in zip(block, self.halo(time_steps)))
+        """Overlapped input block for a given output block (§4.5):
+        ``(b−1)·stride + 1 + halo`` per axis (stride 1 ⇒ ``b + halo``)."""
+        return tuple(
+            (b - 1) * v + 1 + h
+            for b, h, v in zip(block, self.halo(time_steps),
+                               self.stride_per_axis())
+        )
 
     # ---- Y geometry -------------------------------------------------------
     @property
@@ -188,12 +276,30 @@ class SystolicPlan:
         return (s * c - (s - m) * (c - n)) / (s * c)
 
     def shift_count(self) -> int:
-        """Total lane shifts per window step (the (M−1)·T_shfl term of Eq. 4)."""
+        """Total lane shifts per window step (the (M−1)·T_shfl term of
+        Eq. 4); summed over the chain for a fused plan."""
+        if self.stages:
+            return sum(s.shift_count() for s in self.stages)
         return sum(1 for st in self.steps if st.shift)
 
     def mads_per_output_window(self) -> int:
-        """MAD ops per window step per lane (M·N for dense conv)."""
+        """MAD ops per window step per lane (M·N for dense conv); summed
+        over the chain for a fused plan — the §5 flop terms of the whole
+        pipeline priced against a single load+store (DESIGN.md §11)."""
+        if self.stages:
+            return sum(s.mads_per_output_window() for s in self.stages)
         return sum(len(st.taps) for st in self.steps)
+
+    def epilogue_op_count(self) -> int:
+        """Total elementwise epilogue stages across the plan/chain."""
+        n = len(self.epilogue)
+        return n + sum(len(s.epilogue) for s in self.stages)
+
+    def final_epilogue(self) -> tuple[EpilogueStage, ...]:
+        """The epilogue applied at the output store: the last stage's for
+        a fused chain, the plan's own otherwise (mid-chain epilogues are
+        applied between stages inside the kernel)."""
+        return self.stages[-1].epilogue if self.stages else self.epilogue
 
 
 # ---------------------------------------------------------------------------

@@ -66,7 +66,10 @@ SIDECAR_ENV = "REPRO_TUNING_CACHE"
 #   v1 — PR 1/2 lowering (spatial grids only).
 #   v2 — reduction axes: grid gained out/reduce dims + scratch
 #        accumulator; NCHW/batched shapes join the key space.
-ENGINE_SCHEMA_VERSION = 2
+#   v3 — fused pipelines + epilogues + output-strided grids: kernels may
+#        carry extra epilogue operands, iterate stage lists and read
+#        stride-scaled input tiles.
+ENGINE_SCHEMA_VERSION = 3
 
 # VMEM working-set budget per block (f32 elements): input block + psum +
 # output must fit comfortably in ~16 MB VMEM; stay conservative.
@@ -296,7 +299,13 @@ def candidate_configs(
         axes.append(_WINDOW_BLOCK_Z)
     axes.append(_WINDOW_BLOCK_H)
     axes.append(_WINDOW_BLOCK_W)
-    variants = ("shift_psum", "shift_data") if plan.shift_count() else ("shift_psum",)
+    if any(v > 1 for v in plan.stride_per_axis()):
+        # strided grids use the data-stationary strided read — the
+        # variant knob does not apply.
+        variants = ("shift_data",)
+    else:
+        variants = (("shift_psum", "shift_data") if plan.shift_count()
+                    else ("shift_psum",))
 
     configs: set[KernelConfig] = set()
     def rec(i: int, acc: tuple[int, ...]):
@@ -329,6 +338,14 @@ def model_cost(
     ``C_in``, which multiplies every candidate identically and so drops
     out of the ranking (the bench applies the C_in factor when quoting
     absolute predictions).
+
+    A fused pipeline (``plan.stages``) prices as one kernel: the flop
+    terms are the *summed* stage MADs/shifts (``plan`` methods sum over
+    stages) against a **single** load+store whose redundancy uses the
+    chain-widened composite halo — whereas the unfused sequence pays the
+    memory term once per stage. Epilogue stages add one VPU op each.
+    Output strides shrink useful outputs per loaded element, which
+    ``block_in_shape``'s stride term prices automatically.
     """
     t = time_steps
     if plan.combine != "fma":                       # Kogge–Stone scan
@@ -348,6 +365,7 @@ def model_cost(
     P = block[-2]                                   # rows one roll amortizes
     shfl = hw.t_shfl * (0.5 if cfg.variant == "shift_data" else 1.0)
     compute = t * mads * (hw.t_mad + hw.t_reg) + t * shifts * shfl / max(P, 1)
+    compute += plan.epilogue_op_count() * hw.t_mad  # fused output stages
     memory = (loaded / useful) * hw.t_gmem_read / plan.S
     return compute + memory
 

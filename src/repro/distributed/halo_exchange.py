@@ -213,7 +213,7 @@ def _frame_regions(
 
 
 def _local_lowering(
-    xl, wl, *, plan, block, time_steps, variant, boundary, interpret,
+    xl, wl, epi, *, plan, block, time_steps, variant, boundary, interpret,
     acc_dtype, assigns, halos, overlap,
 ):
     """The per-shard program: exchange → interior compute → frame splice.
@@ -238,9 +238,14 @@ def _local_lowering(
     exchanged = tuple(
         a for a in range(nd) if ext.shape[in_off + a] != local[a])
 
+    # Epilogue operands replicate to every shard (per-channel bias /
+    # scalars — residuals are refused upstream); the epilogue itself is
+    # elementwise, so applying it per engine call (interior and frame
+    # strips alike) matches the single-device fused store.
     engine = functools.partial(
         run_window_plan, plan=plan, block=block, time_steps=time_steps,
-        variant=variant, interpret=interpret, acc_dtype=acc_dtype)
+        variant=variant, interpret=interpret, acc_dtype=acc_dtype,
+        epilogue_args=epi)
 
     def cropped(e):
         """Engine output on a (partially) extended slab, mapped back to
@@ -298,6 +303,7 @@ def sharded_window_plan(
     interpret: bool = True,
     acc_dtype=jnp.float32,
     rules=None,
+    epilogue_args: tuple = (),
 ) -> jax.Array:
     """Run a windowed plan on a domain sharded over a device mesh.
 
@@ -381,11 +387,24 @@ def sharded_window_plan(
                     f"its own axis-{a} halo: {n} rows per shard < "
                     f"({lo}, {hi}) halo")
 
+    from repro.core.plan import epilogue_operand_stages
+    for st in epilogue_operand_stages(plan.final_epilogue()):
+        if st.op == "residual_add":
+            raise ValueError(
+                "a residual_add epilogue cannot ride a sharded call: the "
+                "residual operand is output-shaped and would need the "
+                "same sharding; add the residual outside the mesh call")
+
     b_names = tuple(a[0] if a else None for a in batch_assigns)
     s_names = tuple(a[0] if a else None for a in assigns)
     spec_in = P(*b_names, *((None,) * nr), *s_names)
     spec_out = P(*b_names, *((None,) * no), *s_names)
-    w_args, w_specs = ((w,), (P(),)) if w is not None else ((), ())
+    n_w = 1 if w is not None else 0
+    # fused plans pass a tuple of per-stage filters — replicate each leaf
+    w_args = (w,) if n_w else ()
+    w_specs = (jax.tree.map(lambda _: P(), w),) if n_w else ()
+    epi = tuple(epilogue_args)
+    epi_specs = tuple(P() for _ in epi)
 
     fn = functools.partial(
         _local_lowering, plan=plan, block=block, time_steps=time_steps,
@@ -393,13 +412,14 @@ def sharded_window_plan(
         acc_dtype=acc_dtype, assigns=assigns, halos=halos, overlap=overlap)
 
     sharded = shm.shard_map(
-        lambda xs, *ws: fn(xs, ws[0] if ws else None),
+        lambda xs, *rest: fn(xs, rest[0] if n_w else None,
+                             tuple(rest[n_w:])),
         mesh=mesh,
-        in_specs=(spec_in,) + w_specs,
+        in_specs=(spec_in,) + w_specs + epi_specs,
         out_specs=spec_out,
         check_rep=False,
     )
-    return sharded(x, *w_args)
+    return sharded(x, *w_args, *epi)
 
 
 # ---------------------------------------------------------------------------

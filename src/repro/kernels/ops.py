@@ -33,6 +33,18 @@ non-dividing axis replicated instead. Autotuning under a mesh targets
 the *shard-local* halo-extended shape, so the winner is exactly the
 per-device kernel.
 
+Fusion surfaces (DESIGN.md §11): windowed ops take ``epilogue=`` /
+``epilogue_args=`` — elementwise output stages (bias/gelu/silu/relu/
+scale/residual_add) applied in VMEM between the accumulator flush and
+the output store, killing the HBM round-trip of a conv→activation seam
+— and ``ops.conv2d`` takes ``stride=`` (an output-strided grid that
+computes only the kept lanes). :func:`pipeline` chains shape-preserving
+windowed stages into ONE fused engine kernel via
+:func:`repro.core.fuse.fuse_plans` (``fuse='auto'`` falls back to the
+unfused pad-once sequence when the chain does not qualify). Scan ops
+reject all of these with named pre-pallas errors — a scan's output is
+also its sequential inter-block carry.
+
 Every engine-lowered op is differentiable: the ops are ``custom_vjp``
 wrappers whose backward rules rebuild the **adjoint plan**
 (:mod:`repro.core.adjoint` — point-reflected taps with swapped
@@ -55,7 +67,9 @@ import jax.numpy as jnp
 from repro.core import adjoint as adj
 from repro.core import tuning
 from repro.core.engine import run_weight_grad_plan, run_window_plan
-from repro.core.plan import SystolicPlan
+from repro.core.fuse import fuse_plans
+from repro.core.plan import (SystolicPlan, epilogue_operand_stages,
+                             normalize_epilogue)
 from . import ref
 from . import ssam_conv1d as _c1
 from . import ssam_conv2d as _c2
@@ -106,16 +120,119 @@ def engine_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _default_cfg(plan) -> tuning.KernelConfig:
+    """Family default block config; fused-pipeline kinds fall back to the
+    dimensionality default (the chain is one windowed kernel)."""
+    cfg = _DEFAULTS.get(plan.kind)
+    if cfg is not None:
+        return cfg
+    if plan.combine != "fma":
+        return tuning.KernelConfig((8, 128))
+    return tuning.KernelConfig((4, 8, 128) if plan.ndim_spatial == 3
+                               else (8, 128))
+
+
 def _engine_block(plan, kw: dict) -> tuple[tuple[int, ...], str, dict]:
     """Split family kwargs into (engine block tuple, variant, rest)."""
     kw = dict(kw)
-    d = _DEFAULTS[plan.kind].block
-    if plan.ndim_spatial == 3:
+    d = _default_cfg(plan).block
+    if plan.kind == "conv1d":
+        block = (kw.pop("block_t", d[0]), kw.pop("block_d", d[1]))
+    elif plan.ndim_spatial == 3:
         block = (kw.pop("block_z", d[0]), kw.pop("block_h", d[1]),
                  kw.pop("block_w", d[2]))
     else:
         block = (kw.pop("block_h", d[0]), kw.pop("block_w", d[1]))
     return block, kw.pop("variant", "shift_psum"), kw
+
+
+def _engine_runner(plan, x, w, interpret, *, epi_args=(), time_steps=1):
+    """Generic tuning-measurement closure: lower ``plan`` itself.
+
+    The thin family wrappers rebuild their plan without epilogue/stride/
+    stages, so ops that carry those must measure the *actual* plan — the
+    kernel the tuned config will run."""
+    def call(**k):
+        blk, variant, rest = _engine_block(plan, dict(k))
+        t = rest.pop("time_steps", time_steps)
+        acc = rest.pop("acc_dtype", jnp.float32)
+        if rest:
+            raise TypeError(f"unexpected kwargs for {plan.kind!r}: "
+                            f"{sorted(rest)}")
+        return run_window_plan(x, w, plan=plan, block=blk, variant=variant,
+                               time_steps=t, interpret=interpret,
+                               acc_dtype=acc, epilogue_args=epi_args)
+    return call
+
+
+def _epilogue_spec(epilogue, epilogue_args, op: str):
+    """Normalize + validate an op's epilogue kwargs, pre-pallas."""
+    stages = normalize_epilogue(epilogue)
+    need = [s.op for s in epilogue_operand_stages(stages)]
+    args = tuple(epilogue_args)
+    if len(args) != len(need):
+        raise ValueError(
+            f"ops.{op}: epilogue {tuple(s.op for s in stages)} needs "
+            f"{len(need)} runtime operand(s) ({need}) in epilogue_args, "
+            f"got {len(args)}")
+    return stages, args
+
+
+def _check_epilogue_operands(plan, args, op: str, x, w=None,
+                             time_steps: int = 1) -> None:
+    """Named pre-pallas shape validation of epilogue operands.
+
+    Bias follows the plan's layout — per-C_out for out-axes plans,
+    per-lane for perlane plans, a scalar otherwise — and a residual
+    must be shaped exactly like the op's output. Raised here so the
+    failure names the op instead of surfacing as an assert/BlockSpec
+    error inside the jitted engine (the mesh path included).
+    """
+    nb, nr, no = plan.batch_axes, plan.reduce_axes, plan.out_axes
+    out_sp = plan.out_shape(tuple(x.shape[nb + nr:]), time_steps)
+    for st, arr in zip(epilogue_operand_stages(plan.final_epilogue()), args):
+        shape = tuple(getattr(arr, "shape", ()))
+        if st.op == "bias":
+            if no:
+                want = tuple(w.shape[:no])
+                what = f"a per-C_out {want} row"
+            elif plan.coeff_mode == "perlane":
+                want = (x.shape[-1],)
+                what = f"a per-channel {want} row (channels are the lanes)"
+            else:
+                if _shape_size(shape) == 1:
+                    continue
+                raise ValueError(
+                    f"ops.{op}: bias epilogue wants a scalar for "
+                    f"{plan.kind!r} plans (no channel axis), got shape "
+                    f"{shape}")
+            if shape != want:
+                raise ValueError(
+                    f"ops.{op}: bias epilogue wants {what}, got shape "
+                    f"{shape}")
+        elif st.op == "residual_add":
+            want = tuple(x.shape[:nb]) + (tuple(w.shape[:no]) if no
+                                          else ()) + out_sp
+            if shape != want:
+                raise ValueError(
+                    f"ops.{op}: residual_add epilogue wants an "
+                    f"output-shaped {want} operand, got shape {shape}")
+
+
+def _shape_size(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+def _reject_sharded_residual(epi_stages, mesh) -> None:
+    """Shared mesh guard: an output-shaped residual cannot replicate."""
+    if mesh is not None and any(s.op == "residual_add" for s in epi_stages):
+        raise ValueError(
+            "a residual_add epilogue cannot ride a sharded call: the "
+            "residual operand is output-shaped and would need the same "
+            "sharding; add the residual outside the mesh call")
 
 
 # ---------------------------------------------------------------------------
@@ -153,17 +270,19 @@ class _WindowCfg:
     #                                  own plan signature; None → reuse block
 
 
-def _window_forward(cfg: _WindowCfg, x, w):
+def _window_forward(cfg: _WindowCfg, x, w, epi=()):
     if cfg.mesh is not None:
         from repro.distributed import halo_exchange as hx
         return hx.sharded_window_plan(
             x, w, plan=cfg.plan, mesh=cfg.mesh, in_spec=cfg.in_specs,
             block=cfg.block, time_steps=cfg.time_steps, variant=cfg.variant,
             boundary=cfg.boundary, overlap=cfg.overlap,
-            interpret=cfg.interpret, acc_dtype=cfg.acc_dtype)
+            interpret=cfg.interpret, acc_dtype=cfg.acc_dtype,
+            epilogue_args=epi)
     return run_window_plan(
         x, w, plan=cfg.plan, block=cfg.block, time_steps=cfg.time_steps,
-        variant=cfg.variant, interpret=cfg.interpret, acc_dtype=cfg.acc_dtype)
+        variant=cfg.variant, interpret=cfg.interpret, acc_dtype=cfg.acc_dtype,
+        epilogue_args=epi)
 
 
 def _tuned_adjoint_config(aplan, g_shape, g_dtype, w, cfg: _WindowCfg):
@@ -188,28 +307,56 @@ def _tuned_adjoint_config(aplan, g_shape, g_dtype, w, cfg: _WindowCfg):
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _window_op(cfg: _WindowCfg, x, w):
-    return _window_forward(cfg, x, w)
+def _window_op(cfg: _WindowCfg, x, w, epi):
+    return _window_forward(cfg, x, w, epi)
 
 
-def _window_op_fwd(cfg, x, w):
-    return _window_forward(cfg, x, w), (x, w)
+def _window_op_fwd(cfg, x, w, epi):
+    return _window_forward(cfg, x, w, epi), (x, w, epi)
 
 
 def _window_op_bwd(cfg, res, g):
-    x, w = res
+    x, w, epi = res
     plan = cfg.plan
     if cfg.boundary == "replicate":
         raise ValueError(
             "gradients under boundary='replicate' are not supported: the "
             "transpose of an edge clamp accumulates halo rows onto the "
             "edge, which is not a windowed plan; use 'zero' or 'wrap'")
+    if plan.stages:
+        return _pipeline_bwd(cfg, x, w, epi, g)
     if cfg.time_steps != 1 and plan.coeff_mode != "table":
         raise ValueError(
             "gradients of temporally-blocked convolutions are not "
             "supported (the weight enters every fused iterate); stencil "
             "plans (compile-time coefficients) differentiate at any "
             "time_steps")
+    depi = ()
+    if plan.epilogue:
+        # The epilogue makes the op affine/nonlinear: recompute the
+        # pre-activation z with the *linear* plan, differentiate the
+        # elementwise chain there, and feed the remaining cotangent to
+        # the linear adjoint plan below (DESIGN.md §11.4).
+        lin_plan = dataclasses.replace(plan, epilogue=())
+        lin_cfg = dataclasses.replace(cfg, plan=lin_plan)
+        z = _window_forward(lin_cfg, x, w, ())
+        _, epi_vjp = jax.vjp(
+            lambda zz, aa: adj.apply_epilogue(plan, zz, aa), z, epi)
+        g, depi = epi_vjp(g.astype(z.dtype))
+        plan, cfg = lin_plan, lin_cfg
+    if any(v > 1 for v in plan.stride_per_axis()):
+        # Transpose of the output-strided grid: scatter the cotangent
+        # into the dense output lattice (zeros between kept lanes), then
+        # transpose the stride-free plan through the engine as usual.
+        dense_plan = dataclasses.replace(plan, stride=None)
+        nb, nr = plan.batch_axes, plan.reduce_axes
+        dense_out = dense_plan.out_shape(x.shape[nb + nr:], 1)
+        lead_nd = g.ndim - plan.ndim_spatial
+        gd = jnp.zeros(g.shape[:lead_nd] + dense_out, g.dtype)
+        g = gd.at[(slice(None),) * lead_nd + tuple(
+            slice(None, None, v) for v in plan.stride_per_axis())].set(g)
+        plan = dense_plan
+        cfg = dataclasses.replace(cfg, plan=dense_plan)
     aplan = adj.input_adjoint_plan(plan)
     block, variant = cfg.block, cfg.variant
     if cfg.bwd_tune is not None and cfg.mesh is None:
@@ -221,7 +368,7 @@ def _window_op_bwd(cfg, res, g):
     dx = _window_forward(acfg, g, adj.adjoint_coeff_array(plan, w))
     dx = dx.astype(x.dtype)
     if w is None or plan.coeff_mode == "table":
-        return dx, None
+        return dx, None, depi
     adj.record_lowering(adj.weight_adjoint_plan(plan).kind)
     wg_block = cfg.block[-2:]
     if cfg.mesh is not None:
@@ -234,7 +381,84 @@ def _window_op_bwd(cfg, res, g):
         dw = run_weight_grad_plan(
             x, g, plan=plan, block=wg_block, interpret=cfg.interpret,
             acc_dtype=cfg.acc_dtype)
-    return dx, dw.astype(w.dtype)
+    return dx, dw.astype(w.dtype), depi
+
+
+def _pipeline_bwd(cfg, x, ws, epi, g):
+    """Backward of a fused pipeline: stage-by-stage in reverse.
+
+    A purely linear table-coefficient chain transposes to ONE fused
+    adjoint kernel (the reversed chain of stage adjoints, DESIGN.md
+    §11.4). Chains with epilogues or dense weights recompute the
+    pad-once stage inputs/pre-activations forward (engine calls on the
+    valid-mode stage plans), then walk the chain backwards: epilogue
+    VJPs at the saved pre-activations, per-stage weight-grad
+    correlations, and each stage's input-adjoint plan — every linear
+    piece lowers through the engine, so training stays on the engine
+    path end-to-end.
+    """
+    plan = cfg.plan
+    stages = plan.stages
+    if cfg.mesh is not None:
+        raise ValueError(
+            "gradients of a sharded fused pipeline are not supported yet; "
+            "train with fuse=False under a mesh (per-stage sharded "
+            "adjoints) or shard the fused forward only")
+    if (not any(s.epilogue for s in stages)
+            and all(s.coeff_mode == "table" for s in stages)):
+        aplan = adj.input_adjoint_plan(plan)        # fused reversed chain
+        adj.record_lowering(aplan.kind)
+        acfg = dataclasses.replace(cfg, plan=aplan, bwd_tune=None)
+        dx = _window_forward(acfg, g, tuple(None for _ in stages), ())
+        return dx.astype(x.dtype), tuple(None for _ in stages), ()
+
+    lead, trail = plan.lead_trail()
+    nb = plan.batch_axes
+    pads = [(0, 0)] * nb + [(l, r) for l, r in zip(lead, trail)]
+    h = jnp.pad(x, pads)
+    hs, zs, valids = [], [], []
+    for i, s in enumerate(stages):
+        sv = dataclasses.replace(s, lead=None, trail=None, epilogue=())
+        w_s = ws[i] if s.coeff_mode == "dense" else None
+        hs.append(h)
+        valids.append(sv)
+        z = run_window_plan(h, w_s, plan=sv, block=cfg.block,
+                            variant=cfg.variant, interpret=cfg.interpret,
+                            acc_dtype=cfg.acc_dtype)
+        se = dataclasses.replace(sv, epilogue=s.epilogue)
+        a = epi if i == len(stages) - 1 else ()
+        h = adj.apply_epilogue(se, z, a).astype(x.dtype)
+        zs.append(z)
+
+    depi = ()
+    dws = [None] * len(stages)
+    for i in reversed(range(len(stages))):
+        s, sv = stages[i], valids[i]
+        if s.epilogue:
+            se = dataclasses.replace(sv, epilogue=s.epilogue)
+            a = epi if i == len(stages) - 1 else ()
+            _, epi_vjp = jax.vjp(
+                lambda zz, aa, _se=se: adj.apply_epilogue(_se, zz, aa),
+                zs[i], a)
+            g, da = epi_vjp(g.astype(zs[i].dtype))
+            if i == len(stages) - 1:
+                depi = da
+        if s.coeff_mode == "dense":
+            adj.record_lowering("wgrad_" + sv.kind)
+            dws[i] = run_weight_grad_plan(
+                hs[i], g, plan=sv, block=cfg.block[-2:],
+                interpret=cfg.interpret,
+                acc_dtype=cfg.acc_dtype).astype(ws[i].dtype)
+        ap = adj.input_adjoint_plan(sv)     # valid ⇒ full: output grows back
+        adj.record_lowering(ap.kind)
+        g = run_window_plan(
+            g, ws[i] if s.coeff_mode == "dense" else None, plan=ap,
+            block=cfg.block, variant=cfg.variant, interpret=cfg.interpret,
+            acc_dtype=cfg.acc_dtype).astype(x.dtype)
+    # transpose of the pad-once zero pad: crop the summed lead/trail
+    sl = (slice(None),) * nb + tuple(
+        slice(l, l + n) for l, n in zip(lead, x.shape[nb:]))
+    return g[sl].astype(x.dtype), tuple(dws), depi
 
 
 _window_op.defvjp(_window_op_fwd, _window_op_bwd)
@@ -338,7 +562,7 @@ def _tuned_kwargs(plan, shape, call, user_kw, *, time_steps: int = 1,
     runner = lambda cfg: tuning.measure_us(
         lambda: call(**{**cfg.as_kwargs(plan), **user_kw}))
     res = tuning.autotune(plan, shape, time_steps=time_steps,
-                          default=_DEFAULTS[plan.kind], runner=runner,
+                          default=_default_cfg(plan), runner=runner,
                           context=context + tuple(sorted(user_kw.items())),
                           fixed=user_kw)
     return {**res.config.as_kwargs(plan), **user_kw}
@@ -346,7 +570,8 @@ def _tuned_kwargs(plan, shape, call, user_kw, *, time_steps: int = 1,
 
 def conv2d(x, w, *, mode: str = "same", impl: str | None = None,
            autotune: bool = False, mesh=None, in_specs=None,
-           boundary: str = "zero", **kw):
+           boundary: str = "zero", stride=None, epilogue=None,
+           epilogue_args=(), **kw):
     """2-D convolution, dispatched on input rank:
 
     * ``(H, W)``            — single image, single channel (the paper's
@@ -359,11 +584,35 @@ def conv2d(x, w, *, mode: str = "same", impl: str | None = None,
       accumulator across the channel reduction — no Python loop over
       batch or channels.
 
+    ``stride=(sh, sw)`` lowers an **output-strided grid**: the kernel
+    computes only every ``s``-th output lane instead of the dense result
+    a subsample would discard (DESIGN.md §11.3). ``epilogue=`` fuses
+    elementwise output stages (``bias``/``gelu``/``silu``/``relu``/
+    ``scale``/``residual_add``) into the kernel between the accumulator
+    flush and the output store; runtime operands (a per-C_out bias row,
+    a residual) ride in ``epilogue_args``. Both key the tuner cache
+    apart automatically (the plan signature carries them).
+
     Tuner contexts carry the rank tag and the full operand shape, so
     batched/NCHW winners never collide with single-image winners in the
     cache or the JSON sidecar.
     """
     impl = impl or default_impl()
+    epi_stages, epi_args = _epilogue_spec(epilogue, epilogue_args, "conv2d")
+    if stride is not None:
+        stride = (stride, stride) if isinstance(stride, int) else tuple(stride)
+        if len(stride) != 2 or any(int(v) != v or v < 1 for v in stride):
+            raise ValueError(f"conv2d: stride must be two ints >= 1, "
+                             f"got {stride}")
+        stride = tuple(int(v) for v in stride)
+        if stride == (1, 1):
+            stride = None
+    if mesh is not None and stride is not None:
+        raise ValueError(
+            "sharded strided conv2d is not supported: an output stride "
+            "breaks shape preservation, so shards would not own equal "
+            "input and output slices; subsample after the sharded call")
+    _reject_sharded_residual(epi_stages, mesh)
     if x.ndim == 4:
         if w.ndim != 4:
             raise ValueError(
@@ -391,14 +640,24 @@ def conv2d(x, w, *, mode: str = "same", impl: str | None = None,
         kernel = lambda xs, **k: (
             _c2.conv2d_same(xs, w, **k) if mode == "same"
             else _c2.conv2d_valid(xs, w, **k))
+    plan = plan_fn()
+    if stride is not None or epi_stages:
+        plan = dataclasses.replace(plan, stride=stride, epilogue=epi_stages)
+        _check_epilogue_operands(plan, epi_args, "conv2d", x, w)
     if impl == "xla":
         if mesh is not None:
             raise ValueError("mesh= needs the engine path; the 'xla' oracle "
                              "is already shardable under pjit")
-        return ref_fn(x, mode)
-    return _conv2d_engine(x, w, plan=plan_fn(), kernel=kernel, tag=tag,
+        y = ref_fn(x, mode)
+        if stride is not None:
+            y = y[..., ::stride[0], ::stride[1]]
+        if epi_stages:
+            y = adj.apply_epilogue(plan, y, epi_args)
+        return y
+    return _conv2d_engine(x, w, plan=plan, kernel=kernel, tag=tag,
                           mode=mode, impl=impl, autotune=autotune, mesh=mesh,
-                          in_specs=in_specs, boundary=boundary, kw=kw)
+                          in_specs=in_specs, boundary=boundary, kw=kw,
+                          epi_args=epi_args)
 
 
 def _window_cfg(plan, kw, *, interpret, time_steps=1, mesh=None,
@@ -418,16 +677,20 @@ def _window_cfg(plan, kw, *, interpret, time_steps=1, mesh=None,
 
 
 def _conv2d_engine(x, w, *, plan, kernel, tag, mode, impl, autotune, mesh,
-                   in_specs, boundary, kw):
+                   in_specs, boundary, kw, epi_args=()):
     """Shared mesh/autotune scaffolding for every conv2d rank.
 
     ``kernel(xs, interpret=..., **block_kwargs)`` lowers the engine call
     on ``xs`` for tuning measurements; ``plan`` is its schedule; ``tag``
-    keys the tuner context. The actual call goes through the
-    differentiable ``_window_op`` core, so ``jax.grad`` of any conv2d
-    rank lowers its backward pass through the adjoint plans.
+    keys the tuner context. Plans carrying a stride or an epilogue are
+    measured through the generic :func:`_engine_runner` instead — the
+    thin wrappers would rebuild the plan without them. The actual call
+    goes through the differentiable ``_window_op`` core, so ``jax.grad``
+    of any conv2d rank lowers its backward pass through the adjoint
+    plans.
     """
     interpret = _interp(impl)
+    plain = not plan.epilogue and plan.stride is None
     if mesh is not None:
         if mode != "same":
             raise ValueError(
@@ -438,43 +701,58 @@ def _conv2d_engine(x, w, *, plan, kernel, tag, mode, impl, autotune, mesh,
                                              boundary)
             zeros = jnp.zeros(shape, x.dtype)
             sharded_kw = {k: kw.pop(k) for k in ("overlap",) if k in kw}
-            kw = _tuned_kwargs(
-                plan, shape,
-                lambda **k: kernel(zeros, interpret=interpret, **k),
-                kw, context=(tag, mode, impl) + sctx)
+            call = (lambda **k: kernel(zeros, interpret=interpret, **k)) \
+                if plain else _engine_runner(plan, zeros, w, interpret,
+                                             epi_args=epi_args)
+            kw = _tuned_kwargs(plan, shape, call, kw,
+                               context=(tag, mode, impl) + sctx)
             kw.update(sharded_kw)
         cfg = _window_cfg(plan, kw, interpret=interpret, mesh=mesh,
                           in_specs=in_specs, boundary=boundary)
-        return _window_op(cfg, x, w)
+        return _window_op(cfg, x, w, epi_args)
     bwd_tune = None
     if autotune:
-        kw = _tuned_kwargs(
-            plan, x.shape,
-            lambda **k: kernel(x, interpret=interpret, **k), kw,
-            context=(tag, mode, impl))
+        call = (lambda **k: kernel(x, interpret=interpret, **k)) \
+            if plain else _engine_runner(plan, x, w, interpret,
+                                         epi_args=epi_args)
+        kw = _tuned_kwargs(plan, x.shape, call, kw, context=(tag, mode, impl))
         bwd_tune = ("adjoint", tag, mode, impl)
     return _window_op(_window_cfg(plan, kw, interpret=interpret,
-                                  bwd_tune=bwd_tune), x, w)
+                                  bwd_tune=bwd_tune), x, w, epi_args)
 
 
 def conv1d_causal(x, w, *, impl: str | None = None, autotune: bool = False,
-                  **kw):
+                  epilogue=None, epilogue_args=(), **kw):
+    """Depthwise causal conv through the D-optimal plan (§5.4).
+
+    ``epilogue=`` fuses elementwise output stages into the kernel —
+    ``bias`` takes a per-channel ``(D,)`` row (channels are the plan's
+    lanes), which is exactly Mamba's ``conv → +b → silu`` seam without
+    the HBM round-trip between the conv and the activation.
+    """
     impl = impl or default_impl()
     if w.shape[-1] != x.shape[-1]:
         # checked for every impl — the oracle would otherwise silently
         # broadcast a mismatched filter across channels
         raise ValueError(f"conv1d_causal: filter lanes {w.shape} do not "
                          f"match input channels {x.shape}")
-    if impl == "xla":
-        return ref.conv1d_causal(x, w)
-    interpret = _interp(impl)
+    epi_stages, epi_args = _epilogue_spec(epilogue, epilogue_args,
+                                          "conv1d_causal")
     plan = _c1.plan_for(w.shape[0])
+    if epi_stages:
+        plan = dataclasses.replace(plan, epilogue=epi_stages)
+        _check_epilogue_operands(plan, epi_args, "conv1d_causal", x)
+    if impl == "xla":
+        y = ref.conv1d_causal(x, w)
+        return adj.apply_epilogue(plan, y, epi_args) if epi_stages else y
+    interpret = _interp(impl)
     bwd_tune = None
     if autotune:
-        kw = _tuned_kwargs(
-            plan, x.shape,
-            lambda **k: _c1.conv1d_causal(x, w, interpret=interpret, **k), kw,
-            context=("conv1d", impl))
+        call = (lambda **k: _c1.conv1d_causal(x, w, interpret=interpret,
+                                              **k)) \
+            if not epi_stages else _engine_runner(plan, x, w, interpret,
+                                                  epi_args=epi_args)
+        kw = _tuned_kwargs(plan, x.shape, call, kw, context=("conv1d", impl))
         bwd_tune = ("adjoint", "conv1d", impl)
     d = _DEFAULTS["conv1d"].block
     cfg = _WindowCfg(
@@ -483,24 +761,32 @@ def conv1d_causal(x, w, *, impl: str | None = None, autotune: bool = False,
         bwd_tune=bwd_tune)
     if kw:
         raise TypeError(f"unexpected kwargs for conv1d_causal: {sorted(kw)}")
-    return _window_op(cfg, x, w)
+    return _window_op(cfg, x, w, epi_args)
 
 
 def stencil(x, sdef: StencilDef | str, *, time_steps: int = 1,
             impl: str | None = None, autotune: bool = False, mesh=None,
-            in_specs=None, boundary: str = "zero", **kw):
+            in_specs=None, boundary: str = "zero", epilogue=None,
+            epilogue_args=(), **kw):
     impl = impl or default_impl()
     if isinstance(sdef, str):
         sdef = BENCHMARKS[sdef]
+    epi_stages, epi_args = _epilogue_spec(epilogue, epilogue_args, "stencil")
+    _reject_sharded_residual(epi_stages, mesh)
+    mod = _s2 if sdef.ndim == 2 else _s3
+    fn = mod.stencil2d if sdef.ndim == 2 else mod.stencil3d
+    plan = mod.plan_for(sdef)
+    if epi_stages:
+        plan = dataclasses.replace(plan, epilogue=epi_stages)
+        _check_epilogue_operands(plan, epi_args, "stencil", x,
+                                 time_steps=time_steps)
     if impl == "xla":
         if mesh is not None:
             raise ValueError("mesh= needs the engine path; the 'xla' oracle "
                              "is already shardable under pjit")
-        return ref.stencil_iterate(x, sdef, time_steps)
-    mod = _s2 if sdef.ndim == 2 else _s3
-    fn = mod.stencil2d if sdef.ndim == 2 else mod.stencil3d
+        y = ref.stencil_iterate(x, sdef, time_steps)
+        return adj.apply_epilogue(plan, y, epi_args) if epi_stages else y
     interpret = _interp(impl)
-    plan = mod.plan_for(sdef)
     if mesh is not None:
         if autotune:
             shape, sctx = _shard_tuning_call(plan, x, mesh, in_specs,
@@ -509,33 +795,239 @@ def stencil(x, sdef: StencilDef | str, *, time_steps: int = 1,
             # tune with the single-device engine on a shard-shaped block;
             # sharded-layer-only kwargs stay out of the measured closure
             sharded_kw = {k: kw.pop(k) for k in ("overlap",) if k in kw}
-            kw = _tuned_kwargs(
-                plan, shape,
-                lambda **k: fn(zeros, sdef, time_steps=time_steps,
-                               interpret=interpret, **k),
-                kw, time_steps=time_steps,
-                context=("stencil", impl) + sctx)
+            call = (lambda **k: fn(zeros, sdef, time_steps=time_steps,
+                                   interpret=interpret, **k)) \
+                if not epi_stages else _engine_runner(
+                    plan, zeros, None, interpret, epi_args=epi_args,
+                    time_steps=time_steps)
+            kw = _tuned_kwargs(plan, shape, call, kw, time_steps=time_steps,
+                               context=("stencil", impl) + sctx)
             kw.update(sharded_kw)
         cfg = _window_cfg(plan, kw, interpret=interpret,
                           time_steps=time_steps, mesh=mesh,
                           in_specs=in_specs, boundary=boundary)
-        return _window_op(cfg, x, None)
+        return _window_op(cfg, x, None, epi_args)
     bwd_tune = None
     if autotune:
-        kw = _tuned_kwargs(
-            plan, x.shape,
-            lambda **k: fn(x, sdef, time_steps=time_steps,
-                           interpret=interpret, **k),
-            kw, time_steps=time_steps, context=("stencil", impl))
+        call = (lambda **k: fn(x, sdef, time_steps=time_steps,
+                               interpret=interpret, **k)) \
+            if not epi_stages else _engine_runner(
+                plan, x, None, interpret, epi_args=epi_args,
+                time_steps=time_steps)
+        kw = _tuned_kwargs(plan, x.shape, call, kw, time_steps=time_steps,
+                           context=("stencil", impl))
         bwd_tune = ("adjoint", "stencil", impl)
     return _window_op(_window_cfg(plan, kw, interpret=interpret,
                                   time_steps=time_steps, bwd_tune=bwd_tune),
-                      x, None)
+                      x, None, epi_args)
 
 
-def _reject_scan_mesh(op: str, kw: dict) -> None:
-    """Scan ops cannot shard over the halo-exchange layer — say so
-    loudly (pre-pallas) instead of silently ignoring unknown kwargs."""
+# ---------------------------------------------------------------------------
+# Fused plan pipelines: ops.pipeline (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def _pipeline_stage_plan(x, desc, idx: int):
+    """Resolve one pipeline stage descriptor → (plan, w_or_None).
+
+    A descriptor is a Table-3 name / :class:`StencilDef` (table-coeff
+    stencil stage), a 2-D filter array (dense 'same'-mode conv stage),
+    or a ``(descriptor, epilogue)`` pair attaching elementwise stages
+    after it. Anything else — scan ops, NCHW filters — gets a named
+    pre-pallas ``ValueError``.
+    """
+    epilogue = None
+    if (isinstance(desc, tuple) and len(desc) == 2
+            and isinstance(desc[0], (str, StencilDef, jax.Array))):
+        desc, epilogue = desc
+    if isinstance(desc, str):
+        if desc not in BENCHMARKS:
+            raise ValueError(
+                f"ops.pipeline: stage {idx} names unknown stencil "
+                f"{desc!r}; known Table-3 stencils: "
+                f"{sorted(BENCHMARKS)}")
+        desc = BENCHMARKS[desc]
+    if isinstance(desc, StencilDef):
+        if desc.ndim != x.ndim:
+            raise ValueError(
+                f"ops.pipeline: stage {idx} ({desc.name}) is "
+                f"{desc.ndim}-D but the domain is {x.ndim}-D")
+        mod = _s2 if desc.ndim == 2 else _s3
+        plan, w = mod.plan_for(desc), None
+    elif isinstance(desc, jax.Array) or hasattr(desc, "ndim"):
+        if desc.ndim == 4:
+            raise ValueError(
+                f"ops.pipeline: stage {idx} is an OIHW (NCHW conv) "
+                "filter — reduce plans cannot chain-fuse (the channel "
+                "reduction must finish its accumulator sweep first); "
+                "run ops.conv2d / nn.layers.conv2d_apply with a fused "
+                "epilogue= instead")
+        if desc.ndim != 2 or x.ndim != 2:
+            raise ValueError(
+                f"ops.pipeline: stage {idx} filter must be a 2-D (N, M) "
+                f"array on a 2-D domain, got filter {tuple(desc.shape)} "
+                f"on a {x.ndim}-D domain")
+        plan, w = _c2.plan_for(desc.shape, "same"), desc
+    else:
+        raise ValueError(
+            f"ops.pipeline: stage {idx} descriptor {type(desc).__name__} "
+            "is not a stencil name/StencilDef/2-D filter array; scan ops "
+            "(cumsum/linear_recurrence) cannot sit in a spatial chain")
+    if epilogue is not None:
+        plan = dataclasses.replace(plan,
+                                   epilogue=normalize_epilogue(epilogue))
+    return plan, w
+
+
+def _pipeline_ref(x, plans, ws, epi_args):
+    """Pure-jnp oracle of a pipeline: pad-once, then valid stage
+    applications (each stage's dense filter materialized from its taps)
+    with the stage epilogues replayed elementwise. The gradcheck
+    reference for fused backward."""
+    import numpy as np
+    from repro.core.fuse import summed_lead_trail
+    lead, trail = summed_lead_trail(plans)
+    h = jnp.pad(x, list(zip(lead, trail))).astype(jnp.float32)
+    for i, p in enumerate(plans):
+        if p.coeff_mode == "dense":
+            f = ws[i].astype(jnp.float32)
+        else:
+            fa = np.zeros(p.exts, np.float32)
+            for off, cid in adj.iter_tap_offsets(p):
+                fa[off] = p.coeffs[cid[-1]]
+            f = jnp.array(fa)
+        if x.ndim == 2:
+            h = jax.lax.conv_general_dilated(
+                h[None, None], f[None, None], (1, 1), "VALID")[0, 0]
+        else:
+            h = jax.lax.conv_general_dilated(
+                h[None, None], f[None, None], (1, 1, 1), "VALID",
+                dimension_numbers=("NCDHW", "OIDHW", "NCDHW"))[0, 0]
+        a = epi_args if i == len(plans) - 1 else ()
+        h = adj.apply_epilogue(p, h, a)
+    return h.astype(x.dtype)
+
+
+def pipeline(x, stages, *, impl: str | None = None, autotune: bool = False,
+             fuse="auto", epilogue_args=(), mesh=None, in_specs=None,
+             boundary: str = "zero", **kw):
+    """Run a chain of shape-preserving windowed ops as ONE fused engine
+    kernel — partial activations between stages never leave VMEM
+    (DESIGN.md §11).
+
+    ``stages`` is a list of stage descriptors applied left to right:
+    Table-3 stencil names / :class:`StencilDef`\\ s, 2-D 'same'-mode
+    conv filters, each optionally paired with an epilogue as
+    ``(stage, "gelu")``. Mid-chain epilogues must be operand-free (they
+    fix zero, preserving the pad-once boundary); the final stage may
+    also take ``bias``/``residual_add`` via ``epilogue_args``.
+
+    Semantics are pad-once (trapezoidal), shared with temporal blocking:
+    zero-pad once by the summed stage leads/trails, then apply the
+    stages as valid windows — identical to a chain of same-shape per-op
+    calls on the interior at distance > Σ radius from the boundary.
+
+    ``fuse``: ``'auto'`` (default) fuses when the chain qualifies and
+    silently falls back to the unfused pad-once sequence otherwise;
+    ``True`` raises the named legality error instead of falling back;
+    ``False`` forces the unfused sequence (one engine call per stage —
+    the HBM-round-trip baseline the benchmarks compare against).
+
+    Under ``mesh=`` the *fused* chain runs through the halo-exchange
+    layer with one chain-widened halo per call; the unfused fallback
+    cannot shard (its stages are valid-mode plans, not shape-preserving).
+    """
+    impl = impl or default_impl()
+    if fuse not in (True, False, "auto"):
+        raise ValueError(f"ops.pipeline: fuse must be True/False/'auto', "
+                         f"got {fuse!r}")
+    if not stages:
+        raise ValueError("ops.pipeline needs at least one stage")
+    resolved = [_pipeline_stage_plan(x, d, i) for i, d in enumerate(stages)]
+    plans = [p for p, _ in resolved]
+    ws = tuple(w for _, w in resolved)
+    need = [s.op for s in epilogue_operand_stages(plans[-1].epilogue)]
+    if len(tuple(epilogue_args)) != len(need):
+        raise ValueError(
+            f"ops.pipeline: the final stage's epilogue needs {len(need)} "
+            f"runtime operand(s) ({need}) in epilogue_args, got "
+            f"{len(tuple(epilogue_args))}")
+    epi_args = tuple(epilogue_args)
+    for i, p in enumerate(plans[:-1]):
+        if epilogue_operand_stages(p.epilogue):
+            raise ValueError(
+                f"ops.pipeline: stage {i} carries an operand-bearing "
+                "epilogue mid-chain; bias/residual_add shift the zero "
+                "boundary and are only legal on the final stage")
+    if plans[-1].epilogue:
+        # pipeline stages are shape-preserving, so the final stage's own
+        # layout validates the chain's epilogue operands (named errors)
+        _check_epilogue_operands(plans[-1], epi_args, "pipeline", x)
+    if impl == "xla":
+        if mesh is not None:
+            raise ValueError("mesh= needs the engine path; the 'xla' oracle "
+                             "is already shardable under pjit")
+        return _pipeline_ref(x, plans, ws, epi_args)
+    interpret = _interp(impl)
+
+    fused_plan, fuse_err = None, None
+    try:
+        fused_plan = fuse_plans(*plans)
+    except ValueError as e:
+        fuse_err = e
+    if fuse is True and fused_plan is None:
+        raise fuse_err
+    if fuse == "auto" and fused_plan is None or fuse is False:
+        if mesh is not None:
+            raise ValueError(
+                "an unfused pipeline cannot shard: its stages are "
+                "valid-mode (pad-once) plans, not shape-preserving; fuse "
+                "the chain or run per-op ops.stencil calls under the mesh")
+        # Unfused fallback: identical pad-once math, one engine call —
+        # and one full HBM round-trip of the activation — per stage.
+        from repro.core.fuse import summed_lead_trail
+        lead, trail = summed_lead_trail(plans)
+        h = jnp.pad(x, list(zip(lead, trail)))
+        for i, p in enumerate(plans):
+            pv = dataclasses.replace(p, lead=None, trail=None)
+            a = epi_args if i == len(plans) - 1 else ()
+            skw = dict(kw)
+            if autotune:
+                skw = _tuned_kwargs(
+                    pv, h.shape,
+                    _engine_runner(pv, h, ws[i], interpret, epi_args=a),
+                    skw, context=("pipeline_stage", i, impl))
+            cfg = _window_cfg(pv, skw, interpret=interpret)
+            h = _window_op(cfg, h, ws[i], a)
+        return h
+    if autotune:
+        if mesh is not None:
+            shape, sctx = _shard_tuning_call(fused_plan, x, mesh, in_specs,
+                                             1, boundary)
+            zeros = jnp.zeros(shape, x.dtype)
+            sharded_kw = {k: kw.pop(k) for k in ("overlap",) if k in kw}
+            kw = _tuned_kwargs(
+                fused_plan, shape,
+                _engine_runner(fused_plan, zeros,
+                               ws if fused_plan.stages else ws[0],
+                               interpret, epi_args=epi_args),
+                kw, context=("pipeline", impl) + sctx)
+            kw.update(sharded_kw)
+        else:
+            kw = _tuned_kwargs(
+                fused_plan, x.shape,
+                _engine_runner(fused_plan, x,
+                               ws if fused_plan.stages else ws[0],
+                               interpret, epi_args=epi_args),
+                kw, context=("pipeline", impl))
+    cfg = _window_cfg(fused_plan, kw, interpret=interpret, mesh=mesh,
+                      in_specs=in_specs, boundary=boundary)
+    return _window_op(cfg, x, ws if fused_plan.stages else ws[0], epi_args)
+
+
+def _reject_scan_kwargs(op: str, kw: dict) -> None:
+    """Scan ops cannot shard over the halo-exchange layer and cannot
+    take windowed-op fusion kwargs — say so loudly (pre-pallas) instead
+    of silently ignoring unknown kwargs."""
     bad = sorted(k for k in ("mesh", "in_specs", "boundary") if k in kw)
     if bad:
         raise ValueError(
@@ -543,6 +1035,19 @@ def _reject_scan_mesh(op: str, kw: dict) -> None:
             "sequential inter-block carry along the lane axis, so the "
             "halo-exchange layer cannot shard them; shard the row axis "
             "under pjit with impl='xla' instead")
+    bad = sorted(k for k in ("epilogue", "epilogue_args", "stride") if k in kw)
+    if bad:
+        raise ValueError(
+            f"ops.{op} does not take {', '.join(bad)}: fused epilogues, "
+            "output strides and chain fusion are windowed-plan features "
+            "(DESIGN.md §11) — a scan's output is also its inter-block "
+            "carry, so a fused activation would corrupt the recurrence; "
+            "apply the elementwise stage in XLA after the scan, or fuse "
+            "windowed stages with ops.pipeline")
+
+
+# kept under the old name for callers/tests that used the PR 4 guard
+_reject_scan_mesh = _reject_scan_kwargs
 
 
 def _scan_cfg(kw: dict, *, interpret: bool, op: str) -> _ScanCfg:
@@ -556,7 +1061,7 @@ def _scan_cfg(kw: dict, *, interpret: bool, op: str) -> _ScanCfg:
 
 
 def cumsum(x, *, impl: str | None = None, autotune: bool = False, **kw):
-    _reject_scan_mesh("cumsum", kw)
+    _reject_scan_kwargs("cumsum", kw)
     impl = impl or default_impl()
     if impl == "xla":
         return ref.cumsum(x)
@@ -574,7 +1079,7 @@ def cumsum(x, *, impl: str | None = None, autotune: bool = False, **kw):
 def sat(x, *, impl: str | None = None, **kw):
     """Summed-area table (§3.6 / the paper's companion SAT work [7]):
     two passes of the SSAM Kogge–Stone cumsum — rows, then columns."""
-    _reject_scan_mesh("sat", kw)
+    _reject_scan_kwargs("sat", kw)
     rows = cumsum(x, impl=impl, **kw)
     return cumsum(rows.T, impl=impl, **kw).T
 
@@ -582,7 +1087,7 @@ def sat(x, *, impl: str | None = None, **kw):
 def linear_recurrence(a, b, *, impl: str | None = None,
                       autotune: bool = False, **kw):
     """h_t = a_t·h_{t−1} + b_t along the last axis of (R, T)-shaped a, b."""
-    _reject_scan_mesh("linear_recurrence", kw)
+    _reject_scan_kwargs("linear_recurrence", kw)
     impl = impl or default_impl()
     if impl == "xla":
         return ref.linear_recurrence(a, b)

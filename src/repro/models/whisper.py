@@ -111,16 +111,20 @@ class Whisper:
         'same' convs with GELU, the second at stride 2 — each an NCHW
         minibatch ``(B, C, 1, T)`` through one engine ``pallas_call``
         (channel mix = the plan's C_in reduction, time on the lane axis).
+        The bias+GELU of each conv is the kernel's fused *epilogue*
+        (DESIGN.md §11) — the activation never round-trips HBM between
+        the two engine calls — and the second conv's stride-2 lowers as
+        an output-strided grid computing only every other time lane
+        instead of the dense result a subsample would discard.
         ``impl=None`` trains on the engine path (conv2d_apply's default):
         the backward pass lowers through the adjoint plans of
         :mod:`repro.core.adjoint`, not the XLA oracle.
         """
         c = self.cfg
         x = mel[:, :, None, :]                       # (B, n_mels, 1, T)
-        x = jax.nn.gelu(nnl.conv2d_apply(p["conv1"], x, impl=impl),
-                        approximate=True)
-        x = jax.nn.gelu(nnl.conv2d_apply(p["conv2"], x, stride=(1, 2),
-                                         impl=impl), approximate=True)
+        x = nnl.conv2d_apply(p["conv1"], x, impl=impl, activation="gelu")
+        x = nnl.conv2d_apply(p["conv2"], x, stride=(1, 2), impl=impl,
+                             activation="gelu")
         return x[:, :, 0, :].transpose(0, 2, 1).astype(c.param_dtype)
 
     # ---- attention helpers --------------------------------------------------

@@ -85,7 +85,8 @@ def conv2d_specs(c_in: int, c_out: int, k: int | tuple[int, int], *,
 
 
 def conv2d_apply(p, x, *, mode: str = "same", stride: int | tuple[int, int] = 1,
-                 impl: str | None = None, **kw):
+                 impl: str | None = None, activation: str | None = None,
+                 **kw):
     """NCHW convolution lowered through the SSAM engine.
 
     ``x (B, C_in, H, W) → (B, C_out, H', W')`` via
@@ -97,18 +98,38 @@ def conv2d_apply(p, x, *, mode: str = "same", stride: int | tuple[int, int] = 1,
     subsystem the engine is fully differentiable, so training no longer
     silently falls back to the XLA oracle — forward and backward both
     lower through the plan engine. Pass ``impl="xla"`` explicitly for
-    the pjit-shardable oracle. Strides subsample the full convolution's
-    output (a stride-s conv is the dense conv at every s-th tap),
-    keeping the engine plan stride-free.
+    the pjit-shardable oracle.
+
+    The per-channel bias and ``activation`` ('gelu'/'silu'/'relu') ride
+    :func:`repro.kernels.ops.conv2d`'s **epilogue** — fused into the
+    kernel between accumulator flush and output store on the engine
+    path (no XLA elementwise pass, no HBM round-trip of the
+    activation), replayed in jnp by the ``impl="xla"`` oracle — and a
+    stride lowers as an **output-strided grid** computing only the kept
+    lanes (DESIGN.md §11). Exception: under ``mesh=`` the stride stays
+    a local subsample of the dense sharded conv (an output-strided
+    domain is not shape-preserving, so it cannot shard).
     """
     from repro.kernels import ops as kops
-    y = kops.conv2d(x, p["w"], mode=mode,
-                    impl=impl or kops.default_engine_impl(), **kw)
+    impl = impl or kops.default_engine_impl()
     sh, sw = (stride, stride) if isinstance(stride, int) else stride
-    if (sh, sw) != (1, 1):
-        y = y[..., ::sh, ::sw]
+    epilogue, epi_args = [], []
     if "b" in p:
-        y = y + p["b"].astype(y.dtype)[:, None, None]
+        epilogue.append("bias")
+        epi_args.append(p["b"])
+    if activation is not None:
+        epilogue.append(activation)
+    strided = (sh, sw) != (1, 1)
+    # under a mesh the dense sharded conv runs and the stride subsamples
+    # locally (elementwise epilogues commute with the subsample)
+    subsample_locally = strided and kw.get("mesh") is not None
+    y = kops.conv2d(
+        x, p["w"], mode=mode, impl=impl,
+        stride=(sh, sw) if strided and not subsample_locally else None,
+        epilogue=tuple(epilogue) or None, epilogue_args=tuple(epi_args),
+        **kw)
+    if subsample_locally:
+        y = y[..., ::sh, ::sw]
     return y
 
 

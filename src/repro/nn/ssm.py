@@ -153,10 +153,18 @@ def mamba_apply(p, x, *, ssm_state: int, conv_k: int = 4, chunk: int = 128,
     xs, z = xz[..., :Di], xz[..., Di:]
 
     if state is None:
-        xs = kops.conv1d_causal(
-            xs, p["conv_w"], impl=conv_impl or kops.default_engine_impl()
-        ) + p["conv_b"].astype(x.dtype)
-        xs = jax.nn.silu(xs)
+        impl = conv_impl or kops.default_engine_impl()
+        if impl == "xla":
+            xs = kops.conv1d_causal(xs, p["conv_w"], impl="xla") \
+                + p["conv_b"].astype(x.dtype)
+            xs = jax.nn.silu(xs)
+        else:
+            # bias + SiLU ride the depthwise plan's fused epilogue: the
+            # conv output never stores to HBM before the activation
+            # (DESIGN.md §11; previously an XLA silu between two stores).
+            xs = kops.conv1d_causal(
+                xs, p["conv_w"], impl=impl,
+                epilogue=("bias", "silu"), epilogue_args=(p["conv_b"],))
         dbc = xs @ p["x_proj"].astype(x.dtype)
         dt = jax.nn.softplus(dbc[..., :dt_rank] @ p["dt_w"].astype(x.dtype)
                              + p["dt_b"].astype(x.dtype))

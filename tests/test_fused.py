@@ -1,0 +1,470 @@
+"""Fused plan pipelines + epilogues (DESIGN.md §11).
+
+Covers the PR-5 acceptance surface:
+
+* fused-vs-unfused fp32-tolerance equivalence for Table-3 stencil
+  chains (``ops.pipeline(fuse=True)`` vs the pad-once unfused fallback
+  and the pure-jnp reference), the Whisper mel stem (epilogue + strided
+  grid vs the dense+XLA form) and Mamba's conv→bias→silu seam;
+* gradcheck of fused pipelines vs the ref oracle, with
+  ``BACKWARD_LOWERINGS`` counters proving the backward stays on the
+  engine (a *linear* chain transposes to ONE fused adjoint kernel);
+* the strided-conv lowering (forward + grads vs the subsample oracle);
+* the named pre-pallas ``ValueError``s: epilogue/stride on scan ops,
+  NCHW stages in a pipeline, mid-chain operand-bearing epilogues,
+  unknown epilogue ops, fuse=True on illegal chains;
+* tuner keying: a fused chain is one §5 signature whose model cost is
+  cheaper than the summed per-stage costs (one load+store).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import adjoint as adj
+from repro.core import tuning
+from repro.core.fuse import fuse_plans
+from repro.core.plan import (EpilogueStage, conv2d_nchw_plan,
+                             conv2d_same_plan, depthwise_conv1d_plan,
+                             normalize_epilogue, scan_plan, stencil2d_plan)
+from repro.core.engine import run_scan_plan, run_window_plan
+from repro.kernels import ops, ref
+from repro.kernels.stencils import BENCHMARKS
+
+
+def assert_close(a, b, tol=1e-4):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), rtol=tol, atol=tol)
+
+
+def _plan(name):
+    sdef = BENCHMARKS[name]
+    return stencil2d_plan(sdef.offsets, coeffs=sdef.coeffs)
+
+
+# ---------------------------------------------------------------------------
+# fuse_plans: composite geometry + plan algebra
+# ---------------------------------------------------------------------------
+
+class TestFusePlans:
+    def test_composite_geometry(self):
+        p5, p9 = _plan("2d5pt"), _plan("2d9pt")
+        f = fuse_plans(p5, p9, p5)
+        # summed footprints: 3 + 5 + 3 → 1 + (2+4+2) = 9 per axis
+        assert f.exts == (9, 9)
+        assert f.halo(1) == (8, 8)
+        lead, trail = f.lead_trail()
+        assert lead == (4, 4) and trail == (4, 4)
+        # shape-preserving: out shape == in shape
+        assert f.out_shape((64, 64)) == (64, 64)
+        # summed flop terms
+        assert f.mads_per_output_window() == (
+            2 * p5.mads_per_output_window() + p9.mads_per_output_window())
+
+    def test_signature_distinct_and_single_stage_identity(self):
+        p5, p9 = _plan("2d5pt"), _plan("2d9pt")
+        f = fuse_plans(p5, p9)
+        assert tuning.plan_signature(f) != tuning.plan_signature(p5)
+        assert fuse_plans(p5) is p5
+
+    def test_adjoint_of_chain_is_reversed_stage_adjoints(self):
+        p5, p9 = _plan("2d5pt"), _plan("2d9pt")
+        f = fuse_plans(p5, p9)
+        af = adj.input_adjoint_plan(f)
+        assert af.stages == (adj.input_adjoint_plan(p9),
+                             adj.input_adjoint_plan(p5))
+        # involution through the chain
+        assert adj.input_adjoint_plan(af) == f
+
+    def test_fused_model_cost_beats_summed_stages(self):
+        """One load+store for the chain: the §5 cost of the fused plan
+        must undercut the sum of the per-stage costs (each of which pays
+        its own memory term)."""
+        plans = [_plan("2d5pt"), _plan("2d9pt"), _plan("2d5pt")]
+        cfg = tuning.KernelConfig((8, 128))
+        fused = tuning.model_cost(fuse_plans(*plans), cfg)
+        summed = sum(tuning.model_cost(p, cfg) for p in plans)
+        assert fused < summed
+
+    def test_fuse_legality_errors(self):
+        p5 = _plan("2d5pt")
+        with pytest.raises(ValueError, match="reduce/out axes"):
+            fuse_plans(p5, conv2d_nchw_plan(1, 2, 2, 3, 3, mode="same"))
+        with pytest.raises(ValueError, match="shape-preserving"):
+            from repro.core.plan import conv2d_plan
+            fuse_plans(p5, conv2d_plan(3, 3))      # 'valid' mode shrinks
+        with pytest.raises(ValueError, match="scan plan"):
+            fuse_plans(p5, scan_plan(128))
+        with pytest.raises(ValueError, match="per-lane"):
+            fuse_plans(depthwise_conv1d_plan(4), depthwise_conv1d_plan(4))
+        with pytest.raises(ValueError, match="mid-chain"):
+            biased = dataclasses.replace(
+                p5, epilogue=normalize_epilogue("bias"))
+            fuse_plans(biased, p5)
+        with pytest.raises(ValueError, match="already a fused chain"):
+            fuse_plans(fuse_plans(p5, p5), p5)
+
+
+# ---------------------------------------------------------------------------
+# Fused vs unfused equivalence (the Table-3 chain acceptance)
+# ---------------------------------------------------------------------------
+
+class TestPipelineEquivalence:
+    @pytest.mark.parametrize("chain", [
+        ["2d5pt", "2d9pt", "2d5pt"],
+        ["2d9pt", "2d25pt"],
+        ["2d5pt", ("2d9pt", "gelu"), "2d5pt"],
+        [("2d5pt", "relu"), ("2d5pt", ("scale", 0.5)), "2d9pt"],
+    ])
+    def test_fused_vs_unfused_vs_ref_2d(self, rng, chain):
+        x = jnp.array(rng.standard_normal((40, 72)), jnp.float32)
+        fused = ops.pipeline(x, chain, impl="interpret", fuse=True)
+        unfused = ops.pipeline(x, chain, impl="interpret", fuse=False)
+        oracle = ops.pipeline(x, chain, impl="xla")
+        assert_close(fused, unfused)
+        assert_close(fused, oracle)
+
+    def test_fused_3d_chain(self, rng):
+        x = jnp.array(rng.standard_normal((10, 14, 40)), jnp.float32)
+        chain = ["3d7pt", "poisson"]
+        fused = ops.pipeline(x, chain, impl="interpret", fuse=True,
+                             block_z=4, block_h=8, block_w=16)
+        oracle = ops.pipeline(x, chain, impl="xla")
+        assert_close(fused, oracle)
+
+    def test_homogeneous_chain_matches_temporal_blocking(self, rng):
+        """Fusing t copies of one stencil is exactly §6.4 temporal
+        blocking: same pad-once semantics as ``ref.stencil_iterate``."""
+        x = jnp.array(rng.standard_normal((24, 48)), jnp.float32)
+        got = ops.pipeline(x, ["2d5pt"] * 3, impl="interpret", fuse=True)
+        assert_close(got, ref.stencil_iterate(x, BENCHMARKS["2d5pt"], 3))
+        assert_close(got, ops.stencil(x, "2d5pt", time_steps=3,
+                                      impl="interpret"))
+
+    def test_conv_stage_chain(self, rng):
+        x = jnp.array(rng.standard_normal((32, 64)), jnp.float32)
+        w = jnp.array(rng.standard_normal((3, 5)), jnp.float32)
+        chain = [("2d5pt", "gelu"), w]
+        fused = ops.pipeline(x, chain, impl="interpret", fuse=True)
+        assert_close(fused, ops.pipeline(x, chain, impl="xla"))
+        assert_close(fused, ops.pipeline(x, chain, impl="interpret",
+                                         fuse=False))
+
+    def test_final_stage_bias_and_residual(self, rng):
+        x = jnp.array(rng.standard_normal((24, 48)), jnp.float32)
+        res = jnp.array(rng.standard_normal((24, 48)), jnp.float32)
+        b = jnp.float32(0.7)
+        chain = ["2d5pt", ("2d9pt", ("bias", "gelu", "residual_add"))]
+        got = ops.pipeline(x, chain, impl="interpret", fuse=True,
+                           epilogue_args=(b, res))
+        want = ops.pipeline(x, chain, impl="xla", epilogue_args=(b, res))
+        assert_close(got, want)
+
+    def test_pipeline_interior_matches_per_op_loop(self, rng):
+        """Pad-once chain semantics agree with the naive per-op loop on
+        the interior at distance > Σ radius from the boundary."""
+        x = jnp.array(rng.standard_normal((40, 64)), jnp.float32)
+        chain = ["2d5pt", "2d9pt"]
+        fused = ops.pipeline(x, chain, impl="interpret", fuse=True)
+        loop = ops.stencil(ops.stencil(x, "2d5pt", impl="interpret"),
+                           "2d9pt", impl="interpret")
+        r = 3              # Σ radius = 1 + 2
+        assert_close(fused[r:-r, r:-r], loop[r:-r, r:-r])
+
+
+# ---------------------------------------------------------------------------
+# Epilogues on single ops + the engine-level scan epilogue
+# ---------------------------------------------------------------------------
+
+class TestEpilogues:
+    @pytest.mark.parametrize("epi", ["gelu", "silu", "relu", ("scale", 2.5)])
+    def test_stencil_epilogue_matches_oracle(self, rng, epi):
+        x = jnp.array(rng.standard_normal((26, 60)), jnp.float32)
+        got = ops.stencil(x, "2d9pt", impl="interpret", epilogue=epi)
+        want = ops.stencil(x, "2d9pt", impl="xla", epilogue=epi)
+        assert_close(got, want)
+
+    def test_nchw_bias_gelu_epilogue(self, rng):
+        x = jnp.array(rng.standard_normal((2, 3, 10, 40)), jnp.float32)
+        w = jnp.array(rng.standard_normal((4, 3, 3, 3)), jnp.float32)
+        b = jnp.array(rng.standard_normal((4,)), jnp.float32)
+        got = ops.conv2d(x, w, impl="interpret", epilogue=("bias", "gelu"),
+                         epilogue_args=(b,))
+        want = jax.nn.gelu(ref.conv2d_nchw(x, w, "same")
+                           + b[None, :, None, None], approximate=True)
+        assert_close(got, want)
+
+    def test_conv1d_bias_silu_epilogue(self, rng):
+        x = jnp.array(rng.standard_normal((2, 31, 16)), jnp.float32)
+        w = jnp.array(rng.standard_normal((4, 16)), jnp.float32)
+        b = jnp.array(rng.standard_normal((16,)), jnp.float32)
+        got = ops.conv1d_causal(x, w, impl="interpret",
+                                epilogue=("bias", "silu"),
+                                epilogue_args=(b,))
+        assert_close(got, jax.nn.silu(ref.conv1d_causal(x, w) + b))
+
+    def test_epilogue_with_temporal_blocking(self, rng):
+        x = jnp.array(rng.standard_normal((24, 48)), jnp.float32)
+        got = ops.stencil(x, "2d5pt", time_steps=2, impl="interpret",
+                          epilogue="gelu")
+        want = jax.nn.gelu(ref.stencil_iterate(x, BENCHMARKS["2d5pt"], 2),
+                           approximate=True)
+        assert_close(got, want)
+
+    def test_scan_plan_epilogue_engine_level(self, rng):
+        """run_scan_plan applies operand-free epilogues to the stored
+        output only — the inter-block carry keeps the raw scan state."""
+        x = jnp.array(rng.standard_normal((5, 100)), jnp.float32)
+        plan = dataclasses.replace(scan_plan(32),
+                                   epilogue=normalize_epilogue("relu"))
+        got = run_scan_plan(x, plan=plan, block_r=4)
+        assert_close(got, jnp.maximum(ref.cumsum(x), 0))
+        with pytest.raises(ValueError, match="operand-free"):
+            bad = dataclasses.replace(scan_plan(32),
+                                      epilogue=normalize_epilogue("bias"))
+            run_scan_plan(x, plan=bad, block_r=4)
+
+    def test_mamba_fused_conv_matches_xla_path(self, rng):
+        from repro.nn import ssm
+        specs = ssm.mamba_specs(16, d_inner=32, ssm_state=4)
+        p = {k: jnp.array(rng.standard_normal(s.shape), jnp.float32) * 0.1
+             for k, s in specs.items()}
+        x = jnp.array(rng.standard_normal((2, 24, 16)), jnp.float32)
+        o_xla, _ = ssm.mamba_apply(p, x, ssm_state=4, conv_impl="xla")
+        o_eng, _ = ssm.mamba_apply(p, x, ssm_state=4, conv_impl="interpret")
+        assert_close(o_eng, o_xla, 2e-4)
+
+
+# ---------------------------------------------------------------------------
+# The strided lowering + the Whisper stem
+# ---------------------------------------------------------------------------
+
+class TestStridedAndStem:
+    def test_strided_conv_matches_subsample(self, rng):
+        x = jnp.array(rng.standard_normal((2, 3, 12, 40)), jnp.float32)
+        w = jnp.array(rng.standard_normal((4, 3, 3, 3)), jnp.float32)
+        for stride in ((1, 2), (2, 2), (2, 1)):
+            got = ops.conv2d(x, w, impl="interpret", stride=stride)
+            want = ref.conv2d_nchw(x, w, "same")[..., ::stride[0],
+                                                 ::stride[1]]
+            assert_close(got, want)
+
+    @pytest.mark.parametrize("mode", ["same", "valid"])
+    @pytest.mark.parametrize("stride", [2, (1, 2), (2, 1), (3, 3)])
+    def test_strided_single_image_modes(self, rng, mode, stride):
+        """Mode × stride sweep on the 2-D rank — including the
+        valid-mode tilings that need *fewer* input rows than given
+        (the origin-pad clamp)."""
+        x = jnp.array(rng.standard_normal((24, 64)), jnp.float32)
+        w = jnp.array(rng.standard_normal((3, 3)), jnp.float32)
+        got = ops.conv2d(x, w, impl="interpret", mode=mode, stride=stride)
+        sh, sw = (stride, stride) if isinstance(stride, int) else stride
+        dense = (ref.conv2d_same(x, w) if mode == "same"
+                 else ref.conv2d_valid(x, w))
+        assert_close(got, dense[::sh, ::sw])
+
+    def test_strided_conv_grads(self, rng):
+        x = jnp.array(rng.standard_normal((1, 2, 6, 24)), jnp.float32)
+        w = jnp.array(rng.standard_normal((3, 2, 3, 3)), jnp.float32)
+        adj.reset_lowering_counts()
+        f_e = lambda a, b: jnp.sum(ops.conv2d(
+            a, b, impl="interpret", stride=(1, 2)) ** 2)
+        f_r = lambda a, b: jnp.sum(
+            ref.conv2d_nchw(a, b, "same")[..., ::2] ** 2)
+        ge, gr = jax.grad(f_e, (0, 1))(x, w), jax.grad(f_r, (0, 1))(x, w)
+        assert_close(ge[0], gr[0], 1e-3)
+        assert_close(ge[1], gr[1], 1e-3)
+        # the dilated cotangent still lowers through the engine's
+        # adjoint + wgrad plans
+        assert adj.BACKWARD_LOWERINGS["adj_conv2d_nchw"] >= 1
+        assert adj.BACKWARD_LOWERINGS["wgrad_conv2d_nchw"] >= 1
+
+    def test_whisper_stem_fused_vs_oracle(self, rng):
+        """conv2d_apply's engine path (fused bias/GELU epilogue +
+        output-strided grid) == the XLA oracle form (dense conv,
+        subsample, jnp bias+gelu) — forward and grads."""
+        from repro.nn import layers as nnl
+        cs = nnl.conv2d_specs(3, 8, (1, 3))
+        p = {k: jnp.array(rng.standard_normal(s.shape), jnp.float32) * 0.3
+             for k, s in cs.items()}
+        x = jnp.array(rng.standard_normal((2, 3, 1, 40)), jnp.float32)
+        y_e = nnl.conv2d_apply(p, x, impl="interpret", stride=(1, 2),
+                               activation="gelu")
+        y_x = nnl.conv2d_apply(p, x, impl="xla", stride=(1, 2),
+                               activation="gelu")
+        assert_close(y_e, y_x)
+        g_e = jax.grad(lambda q: jnp.sum(nnl.conv2d_apply(
+            q, x, impl="interpret", stride=(1, 2), activation="gelu") ** 2))(p)
+        g_x = jax.grad(lambda q: jnp.sum(nnl.conv2d_apply(
+            q, x, impl="xla", stride=(1, 2), activation="gelu") ** 2))(p)
+        assert_close(g_e["w"], g_x["w"], 2e-3)
+        assert_close(g_e["b"], g_x["b"], 2e-3)
+
+    def test_whisper_frontend_engine_vs_xla(self, rng):
+        from repro.configs.whisper_base import SMOKE_CONV
+        from repro.models.whisper import Whisper
+        m = Whisper(SMOKE_CONV)
+        p = {name: {k: jnp.array(rng.standard_normal(s.shape),
+                                 jnp.float32) * 0.2
+                    for k, s in sub.items()}
+             for name, sub in m.frontend_specs().items()}
+        mel = jnp.array(rng.standard_normal((2, SMOKE_CONV.n_mels, 32)),
+                        jnp.float32)
+        assert_close(m.frontend(p, mel, impl="interpret"),
+                     m.frontend(p, mel, impl="xla"), 2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Gradients of fused pipelines — engine path end-to-end
+# ---------------------------------------------------------------------------
+
+class TestPipelineGradients:
+    def test_linear_chain_one_fused_adjoint_kernel(self, rng):
+        """A purely linear table chain transposes to ONE fused adjoint
+        kernel (the reversed chain of stage adjoints)."""
+        x = jnp.array(rng.standard_normal((28, 56)), jnp.float32)
+        chain = ["2d5pt", "2d9pt"]
+        adj.reset_lowering_counts()
+        g_e = jax.grad(lambda v: jnp.sum(ops.pipeline(
+            v, chain, impl="interpret", fuse=True)))(x)
+        g_r = jax.grad(lambda v: jnp.sum(ops.pipeline(
+            v, chain, impl="xla")))(x)
+        assert_close(g_e, g_r)
+        assert adj.BACKWARD_LOWERINGS[
+            "pipe2_adj_stencil2d+adj_stencil2d"] == 1
+
+    def test_nonlinear_chain_gradcheck_vs_ref(self, rng):
+        x = jnp.array(rng.standard_normal((24, 48)), jnp.float32)
+        w = jnp.array(rng.standard_normal((3, 3)), jnp.float32)
+        chain = lambda ww: [("2d5pt", "gelu"), ww, ("2d9pt", "silu")]
+        adj.reset_lowering_counts()
+        f_e = lambda v, ww: jnp.sum(ops.pipeline(
+            v, chain(ww), impl="interpret", fuse=True) ** 2)
+        f_r = lambda v, ww: jnp.sum(ops.pipeline(
+            v, chain(ww), impl="xla") ** 2)
+        ge, gr = (jax.grad(f_e, (0, 1))(x, w), jax.grad(f_r, (0, 1))(x, w))
+        assert_close(ge[0], gr[0], 2e-3)
+        assert_close(ge[1], gr[1], 2e-3)
+        # every linear piece of the backward lowered through the engine
+        assert adj.BACKWARD_LOWERINGS["adj_stencil2d"] >= 2
+        assert adj.BACKWARD_LOWERINGS["adj_conv2d"] >= 1
+        assert adj.BACKWARD_LOWERINGS["wgrad_conv2d"] >= 1
+
+    def test_final_epilogue_operand_grads(self, rng):
+        x = jnp.array(rng.standard_normal((20, 40)), jnp.float32)
+        res = jnp.array(rng.standard_normal((20, 40)), jnp.float32)
+        chain = ["2d5pt", ("2d9pt", ("gelu", "residual_add"))]
+        f_e = lambda v, r: jnp.sum(ops.pipeline(
+            v, chain, impl="interpret", fuse=True,
+            epilogue_args=(r,)) ** 2)
+        f_r = lambda v, r: jnp.sum(ops.pipeline(
+            v, chain, impl="xla", epilogue_args=(r,)) ** 2)
+        ge = jax.grad(f_e, (0, 1))(x, res)
+        gr = jax.grad(f_r, (0, 1))(x, res)
+        assert_close(ge[0], gr[0], 2e-3)
+        assert_close(ge[1], gr[1], 2e-3)
+
+
+# ---------------------------------------------------------------------------
+# Named pre-pallas errors (the PR 4 guard pattern extended)
+# ---------------------------------------------------------------------------
+
+class TestRejections:
+    def test_scan_ops_reject_epilogue(self, rng):
+        x = jnp.array(rng.standard_normal((4, 64)), jnp.float32)
+        for call in (lambda: ops.cumsum(x, epilogue="gelu"),
+                     lambda: ops.sat(x, epilogue="gelu"),
+                     lambda: ops.linear_recurrence(x, x, epilogue="gelu"),
+                     lambda: ops.cumsum(x, epilogue_args=(x,)),
+                     lambda: ops.linear_recurrence(x, x, stride=(1, 2))):
+            with pytest.raises(ValueError, match="windowed-plan feature"):
+                call()
+
+    def test_scan_ops_still_reject_mesh(self, rng):
+        x = jnp.array(rng.standard_normal((4, 64)), jnp.float32)
+        with pytest.raises(ValueError, match="halo-exchange"):
+            ops.cumsum(x, mesh="anything")
+
+    def test_unknown_epilogue_and_bad_args(self, rng):
+        x = jnp.array(rng.standard_normal((16, 32)), jnp.float32)
+        with pytest.raises(ValueError, match="vocabulary"):
+            ops.stencil(x, "2d5pt", impl="interpret", epilogue="tanh")
+        with pytest.raises(ValueError, match="runtime operand"):
+            ops.stencil(x, "2d5pt", impl="interpret", epilogue="bias")
+        with pytest.raises(ValueError, match="scale"):
+            ops.stencil(x, "2d5pt", impl="interpret", epilogue="scale")
+        with pytest.raises(ValueError, match="per-channel"):
+            ops.conv1d_causal(jnp.zeros((1, 8, 4)), jnp.zeros((2, 4)),
+                              impl="interpret", epilogue="bias",
+                              epilogue_args=(jnp.zeros((5,)),))
+
+    def test_pipeline_rejections(self, rng):
+        x = jnp.array(rng.standard_normal((16, 32)), jnp.float32)
+        with pytest.raises(ValueError, match="OIHW"):
+            ops.pipeline(x, ["2d5pt", jnp.zeros((2, 2, 3, 3))],
+                         impl="interpret")
+        with pytest.raises(ValueError, match="unknown stencil"):
+            ops.pipeline(x, ["nope"], impl="interpret")
+        with pytest.raises(ValueError, match="mid-chain"):
+            ops.pipeline(x, [("2d5pt", "bias"), "2d9pt"], impl="interpret")
+        with pytest.raises(ValueError, match="is 3-D"):
+            ops.pipeline(x, ["3d7pt"], impl="interpret")
+        with pytest.raises(ValueError, match="at least one stage"):
+            ops.pipeline(x, [], impl="interpret")
+        with pytest.raises(ValueError, match="fuse must be"):
+            ops.pipeline(x, ["2d5pt"], impl="interpret", fuse="maybe")
+        with pytest.raises(ValueError, match="not a stencil"):
+            ops.pipeline(x, [lambda: None], impl="interpret")
+
+    def test_strided_rejections(self, rng):
+        x = jnp.array(rng.standard_normal((2, 2, 8, 16)), jnp.float32)
+        w = jnp.array(rng.standard_normal((2, 2, 3, 3)), jnp.float32)
+        with pytest.raises(ValueError, match="stride must be"):
+            ops.conv2d(x, w, impl="interpret", stride=(0, 2))
+        with pytest.raises(ValueError, match="sharded strided"):
+            ops.conv2d(x, w, impl="interpret", stride=(1, 2), mesh=object())
+
+    def test_input_adjoint_refuses_strided_plan(self):
+        plan = dataclasses.replace(
+            conv2d_nchw_plan(1, 2, 2, 3, 3, mode="same"), stride=(1, 2))
+        with pytest.raises(ValueError, match="input-dilated"):
+            adj.input_adjoint_plan(plan)
+
+
+# ---------------------------------------------------------------------------
+# Tuner integration
+# ---------------------------------------------------------------------------
+
+class TestFusedTuning:
+    def test_pipeline_autotune_keys_fused_signature(self, rng):
+        tuning.clear_cache()
+        x = jnp.array(rng.standard_normal((64, 128)), jnp.float32)
+        chain = ["2d5pt", "2d9pt"]
+        out = ops.pipeline(x, chain, impl="interpret", fuse=True,
+                           autotune=True)
+        assert_close(out, ops.pipeline(x, chain, impl="xla"))
+        keys = list(tuning._CACHE)
+        assert any(k[0].kind.startswith("pipe2_") and "pipeline" in k[4]
+                   for k in keys), keys
+
+    def test_strided_candidates_single_variant(self):
+        plan = dataclasses.replace(
+            conv2d_nchw_plan(1, 2, 2, 3, 3, mode="same"), stride=(1, 2))
+        cands = tuning.candidate_configs(plan, (1, 2, 8, 64))
+        assert cands
+        assert all(c.variant == "shift_data" for c in cands)
+
+    def test_epilogue_plan_autotune_measures_actual_kernel(self, rng):
+        tuning.clear_cache()
+        x = jnp.array(rng.standard_normal((48, 96)), jnp.float32)
+        out = ops.stencil(x, "2d5pt", impl="interpret", autotune=True,
+                          epilogue="gelu")
+        want = jax.nn.gelu(ref.stencil_iterate(x, BENCHMARKS["2d5pt"], 1),
+                           approximate=True)
+        assert_close(out, want)
+        # the cached plan carries the epilogue → its own signature
+        assert any(k[0].epilogue for k in tuning._CACHE
+                   if isinstance(k[0], type(_plan("2d5pt")))), \
+            list(tuning._CACHE)

@@ -165,6 +165,50 @@ def test_sharded_batch_axis():
     assert "DONE" in run_with_devices(code)
 
 
+def test_sharded_fused_pipeline():
+    """A fused chain under a mesh: the composite plan ships ONE
+    chain-widened halo per call (summed stage footprints through
+    core.halo, same as temporal blocking), and fused epilogues apply
+    per shard — sharded fused == single-device fused == unfused."""
+    code = PRELUDE + textwrap.dedent("""
+        x = jnp.array(rng.standard_normal((64, 288)), jnp.float32)
+        chain = ["2d5pt", ("2d9pt", "gelu"), "2d5pt"]
+        want = ops.pipeline(x, chain, impl="interpret", fuse=True)
+        got = ops.pipeline(x, chain, impl="interpret", fuse=True,
+                           mesh=mesh2d)
+        check("fused chain 2d-mesh", got, want)
+        # epilogue with a replicated bias operand on a sharded stencil
+        b = jnp.float32(0.3)
+        want = ops.stencil(x, "2d9pt", impl="interpret",
+                           epilogue=("bias", "gelu"), epilogue_args=(b,))
+        got = ops.stencil(x, "2d9pt", impl="interpret", mesh=mesh2d,
+                          epilogue=("bias", "gelu"), epilogue_args=(b,))
+        check("sharded epilogue bias", got, want)
+        # unfused fallback cannot shard: named pre-pallas error
+        try:
+            ops.pipeline(x, chain, impl="interpret", fuse=False, mesh=mesh2d)
+        except ValueError as e:
+            assert "cannot shard" in str(e), e
+            print("ok unfused-mesh refusal")
+        else:
+            raise AssertionError("unfused sharded pipeline did not raise")
+        # conv2d_apply under mesh keeps strides as a local subsample of
+        # the dense sharded conv (an output-strided grid cannot shard)
+        from repro.nn import layers as nnl
+        cs = nnl.conv2d_specs(3, 4, (1, 3))
+        p = {k: jnp.array(rng.standard_normal(s.shape), jnp.float32) * 0.3
+             for k, s in cs.items()}
+        xn = jnp.array(rng.standard_normal((8, 3, 1, 64)), jnp.float32)
+        want = nnl.conv2d_apply(p, xn, impl="interpret", stride=(1, 2),
+                                activation="gelu")
+        got = nnl.conv2d_apply(p, xn, impl="interpret", stride=(1, 2),
+                               activation="gelu", mesh=mesh2d)
+        check("sharded strided conv2d_apply", got, want)
+        print("DONE")
+    """)
+    assert "DONE" in run_with_devices(code)
+
+
 def test_boundaries():
     """wrap == periodic reference (any t); replicate == edge-clamp (t=1)."""
     code = PRELUDE + textwrap.dedent("""
