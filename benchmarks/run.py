@@ -12,12 +12,14 @@ Prints ``name,us_per_call,derived`` CSV rows per the repo convention.
 | bench_sharded (--mesh AxB)| (beyond paper) | sharded halo-exchange vs single device: per-device bandwidth + §5 scaling prediction |
 | bench_grad (--grad)       | (beyond paper) | fwd vs fwd+bwd through the adjoint plans, vs §5 fwd+adjoint cost |
 | bench_fused (--fused)     | (beyond paper) | fused plan pipelines + epilogues vs the unfused HBM-round-trip sequence (stencil chain, Whisper stem) |
+| bench_scan_chunked (--scan-chunked) | (beyond paper) | chunk-streamed engine scans vs monolithic engine vs XLA chunked: tokens/sec + peak temp memory at long T |
 | bench_lm_roofline         | (assignment)   | summary of dry-run roofline artifacts |
 
 ``--json PATH`` additionally writes every row as machine-readable JSON
 (name, µs, parsed derived fields + run metadata) — the committed
 ``BENCH_5.json`` perf-trajectory artifact comes from
-``--fused --json BENCH_5.json``.
+``--fused --json BENCH_5.json`` and ``BENCH_6.json`` from
+``--scan-chunked --json BENCH_6.json``.
 
 The container is CPU-only: wall-times are CPU XLA numbers that compare
 *schedules*, not TPU performance; TPU performance is reported by the
@@ -270,6 +272,103 @@ def bench_scan(rows: int = 64, T: int = 8192):
     xs = x[:, :1024]
     t_sat = _timeit(jax.jit(ref.sat), xs)
     _row("sat_ref_64x1024", t_sat, f"gelem_s={xs.size / t_sat / 1e3:.3f}")
+
+
+# ---------------------------------------------------------------------------
+# Chunk-streamed engine scans: O(chunk) memory at long T (--scan-chunked)
+# ---------------------------------------------------------------------------
+
+def _temp_bytes(fn, *args) -> int:
+    """Peak temp allocation of the compiled computation (XLA cost
+    analysis); -1 when the backend does not report one."""
+    try:
+        ma = jax.jit(fn).lower(*args).compile().memory_analysis()
+        return int(getattr(ma, "temp_size_in_bytes", -1))
+    except Exception:
+        return -1
+
+
+def bench_scan_chunked(rows: int = 8, T: int = 4096, chunk: int = 128):
+    """Chunk-streamed engine scans vs the monolithic engine and the XLA
+    chunked baseline (DESIGN.md §12) — the BENCH_6 artifact.
+
+    Three comparisons, each with fwd and fwd+bwd wall-time, tokens/sec
+    and the compiled computation's peak temp allocation:
+
+    * ``chunked_linear_recurrence`` on ``(rows, T)``: impl='engine'
+      (the (R, chunk)-slab ``lax.scan`` stream with checkpointed
+      backward — O(R·chunk) live state) vs 'engine_unchunked' (the
+      monolithic O(T) engine lowering) vs 'chunked' (the non-engine XLA
+      schedule).
+    * a Mamba selective-scan train step (grad of a scalar loss) over
+      increasing T — the tokens/sec + peak-memory *trajectory*;
+    * the same trajectory for the RWKV6 WKV recurrence.
+
+    Interpret-mode wall-times compare schedules, not TPU performance;
+    the memory column is the schedule property the tentpole is about.
+    """
+    from repro.kernels import ops
+    from repro.nn import ssm
+
+    rng = np.random.default_rng(0)
+    a = jnp.array(rng.uniform(0.5, 1.0, (rows, T)), jnp.float32)
+    b = jnp.array(rng.standard_normal((rows, T)), jnp.float32)
+    print(f"# §12 chunk-streamed scans: linrec ({rows}, {T}) chunk={chunk}; "
+          "Mamba/RWKV train-step trajectories (interpret-mode wall-time)")
+    for impl in ("engine", "engine_unchunked", "chunked"):
+        fwd = lambda aa, bb, _i=impl: ops.chunked_linear_recurrence(
+            aa, bb, chunk=chunk, impl=_i)
+        loss = lambda aa, bb, _i=impl: jnp.sum(fwd(aa, bb, _i=_i) ** 2)
+        grad = jax.jit(jax.grad(loss, (0, 1)))
+        t_f = _timeit(jax.jit(fwd), a, b)
+        t_g = _timeit(grad, a, b)
+        mb_f = _temp_bytes(fwd, a, b)
+        mb_g = _temp_bytes(jax.grad(loss, (0, 1)), a, b)
+        _row(f"scanchunk_linrec_{impl}_fwd", t_f,
+             f"tok_s={rows * T / max(t_f, 1e-9) * 1e6:.0f};"
+             f"temp_bytes={mb_f}")
+        _row(f"scanchunk_linrec_{impl}_fwdbwd", t_g,
+             f"tok_s={rows * T / max(t_g, 1e-9) * 1e6:.0f};"
+             f"temp_bytes={mb_g}")
+
+    # Train-step trajectories: tokens/sec + peak temp memory vs T.
+    # 'engine' is the streamed schedule; 'chunked' the non-engine
+    # baseline; the monolithic engine only at the shortest T (its O(T)
+    # state is the thing the stream removes).
+    Bsz, Di, N = 1, 4, 8
+    H, K, V = 2, 4, 4
+    for Tm in (256, 512, 1024):
+        delta = jnp.array(rng.uniform(0.1, 0.4, (Bsz, Tm, Di)), jnp.float32)
+        A_log = jnp.array(-rng.uniform(0.5, 1.5, (Di, N)), jnp.float32)
+        Bm = jnp.array(rng.standard_normal((Bsz, Tm, N)), jnp.float32)
+        Cm = jnp.array(rng.standard_normal((Bsz, Tm, N)), jnp.float32)
+        xm = jnp.array(rng.standard_normal((Bsz, Tm, Di)), jnp.float32)
+        for impl in ("engine", "chunked") + (
+                ("engine_unchunked",) if Tm == 256 else ()):
+            loss = lambda d, x_, _i=impl: jnp.sum(ssm.selective_scan(
+                d, A_log, Bm, Cm, x_, chunk=64, impl=_i)[0] ** 2)
+            grad = jax.jit(jax.grad(loss, (0, 1)))
+            t_g = _timeit(grad, delta, xm)
+            mb_g = _temp_bytes(jax.grad(loss, (0, 1)), delta, xm)
+            _row(f"scanchunk_mamba_{impl}_T{Tm}", t_g,
+                 f"tok_s={Bsz * Tm / max(t_g, 1e-9) * 1e6:.0f};"
+                 f"temp_bytes={mb_g}")
+        r = jnp.array(rng.standard_normal((Bsz, Tm, H, K)), jnp.float32)
+        k = jnp.array(rng.standard_normal((Bsz, Tm, H, K)), jnp.float32)
+        v = jnp.array(rng.standard_normal((Bsz, Tm, H, V)), jnp.float32)
+        logw = jnp.array(-rng.uniform(0.05, 0.5, (Bsz, Tm, H, K)),
+                         jnp.float32)
+        u = jnp.array(rng.standard_normal((H, K)), jnp.float32)
+        for impl in ("engine", "chunked") + (
+                ("engine_unchunked",) if Tm == 256 else ()):
+            loss = lambda rr, vv, _i=impl: jnp.sum(ssm.wkv6_chunked(
+                rr, k, vv, logw, u, chunk=64, impl=_i)[0] ** 2)
+            grad = jax.jit(jax.grad(loss, (0, 1)))
+            t_g = _timeit(grad, r, v)
+            mb_g = _temp_bytes(jax.grad(loss, (0, 1)), r, v)
+            _row(f"scanchunk_rwkv_{impl}_T{Tm}", t_g,
+                 f"tok_s={Bsz * Tm / max(t_g, 1e-9) * 1e6:.0f};"
+                 f"temp_bytes={mb_g}")
 
 
 # ---------------------------------------------------------------------------
@@ -639,6 +738,12 @@ def main(argv=None) -> None:
              "and §5 cost for a 3-deep stencil chain (ops.pipeline) and "
              "the epilogue+strided Whisper mel stem")
     p.add_argument(
+        "--scan-chunked", action="store_true",
+        help="run the chunk-streamed scan benchmark: streamed engine vs "
+             "monolithic engine vs XLA chunked linrec, plus Mamba/RWKV "
+             "train-step tokens/sec + peak-temp-memory trajectories over "
+             "increasing T (the BENCH_6.json artifact)")
+    p.add_argument(
         "--json", default=None, metavar="PATH",
         help="also write every benchmark row as machine-readable JSON "
              "(per-kernel µs, MB/s, tuned config, §5 prediction, fused vs "
@@ -655,6 +760,8 @@ def main(argv=None) -> None:
             bench_grad()
         elif args.fused:
             bench_fused()
+        elif args.scan_chunked:
+            bench_scan_chunked()
         elif args.batch is not None or args.channels is not None:
             ch = tuple(int(v) for v in (args.channels or "3,8").split(","))
             bench_conv2d_batched(args.batch if args.batch is not None else 4,

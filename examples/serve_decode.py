@@ -1,9 +1,17 @@
 """End-to-end serving driver: batched decoding with continuous batching.
 
 Serves a small RWKV6 (O(1) decode state — the long-context family) and a
-gemma3-family model through the slot-pool server: 12 requests over 4
-slots, per-slot cache indices, greedy sampling. This is the
-"serve a small model with batched requests" end-to-end driver.
+gemma3-family model through the slot-pool server: requests over 4 slots,
+per-slot cache indices, greedy sampling.
+
+RWKV6 prefill runs through the **chunked scan plans** (DESIGN.md §12):
+``DecodeServer.assign`` calls ``model.prefill``, which executes each
+layer's WKV recurrence once over the whole prompt via
+``repro.nn.ssm.wkv6_chunked`` — the chunk-streamed engine schedule on
+TPU, O(chunk) live state — so a 64-token prompt costs one batched scan
+instead of 63 serve_step calls, and only the O(1) recurrent state lands
+in the slot. gemma3 (windowed KV cache) has no whole-prompt scan and
+feeds its prompt token-by-token.
 
   PYTHONPATH=src python examples/serve_decode.py
 """
@@ -16,9 +24,10 @@ from repro.launch.serve import main as serve_main
 
 
 if __name__ == "__main__":
-    print("=== RWKV6 (recurrent state, O(1) per token) ===")
+    print("=== RWKV6 (recurrent state; prefill = one chunked scan) ===")
     serve_main(["--arch", "rwkv6-1.6b", "--smoke", "--slots", "4",
-                "--requests", "12", "--max-new", "16", "--cache-len", "128"])
-    print("=== gemma3 (windowed KV cache) ===")
+                "--requests", "12", "--max-new", "16", "--cache-len", "128",
+                "--prompt-len", "64"])
+    print("=== gemma3 (windowed KV cache; token-by-token prefill) ===")
     serve_main(["--arch", "gemma3-1b", "--smoke", "--slots", "4",
                 "--requests", "8", "--max-new", "12", "--cache-len", "128"])

@@ -285,6 +285,27 @@ def reversed_recurrence_coeffs(a):
     return jnp.concatenate([a[..., 1:], jnp.ones_like(a[..., :1])], axis=-1)
 
 
-def shifted_state(h):
-    """``h_{t−1}`` stream (zero initial state) for ``∂a_t = λ_t·h_{t−1}``."""
-    return jnp.concatenate([jnp.zeros_like(h[..., :1]), h[..., :-1]], axis=-1)
+def shifted_state(h, h0=None):
+    """``h_{t−1}`` stream for ``∂a_t = λ_t·h_{t−1}``.
+
+    ``h0`` is the carry entering the block (``(..., 1)``); ``None`` keeps
+    the monolithic zero initial state. Under the chunk-streamed schedule
+    (DESIGN.md §12) each chunk passes its carry-in so the first in-chunk
+    coefficient gradient sees the true predecessor state.
+    """
+    if h0 is None:
+        h0 = jnp.zeros_like(h[..., :1])
+    return jnp.concatenate([h0.astype(h.dtype), h[..., :-1]], axis=-1)
+
+
+def chunk_carry_cotangent(a, lam):
+    """Cotangent of the chunk's carry-in state (DESIGN.md §12).
+
+    With ``h_t = a_t·h_{t−1} + b_t`` inside a chunk seeded by carry
+    ``h₋₁``, only the first step touches the carry, so
+    ``∂L/∂h₋₁ = a₀·λ₀``. Under ``lax.scan`` over chunks this value flows
+    backward as the next-older chunk's carry-out cotangent — the λ
+    recurrence composes across chunks through the scan carry exactly as
+    the forward transfer pairs compose forward.
+    """
+    return a[..., :1] * lam[..., :1]

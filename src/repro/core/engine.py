@@ -43,7 +43,7 @@ from jax.experimental.pallas import tpu as pltpu
 from .fuse import pipeline_coeff_count
 from .halo import origin_pads
 from .plan import (EPILOGUE_OPERANDS, EpilogueStage, SystolicPlan, Tap,
-                   epilogue_operand_stages)
+                   chain_epilogue_operand_stages, epilogue_operand_stages)
 
 
 # ---------------------------------------------------------------------------
@@ -207,13 +207,14 @@ def _window_kernel(*refs, plan: SystolicPlan, block: tuple[int, ...],
     """
     nb, nr, no = plan.batch_axes, plan.reduce_axes, plan.out_axes
     n_w = pipeline_coeff_count(plan)
-    epi_entries = epilogue_operand_stages(plan.final_epilogue())
+    epi_entries = chain_epilogue_operand_stages(plan)
     x_ref = refs[0]
     w_refs = refs[1:1 + n_w]
     epi_refs = refs[1 + n_w:1 + n_w + len(epi_entries)]
     o_ref = refs[1 + n_w + len(epi_entries)]
     acc_ref = refs[-1] if nr else None
     xb = (x_ref[(0,) * (nb + nr)] if nb + nr else x_ref[...]).astype(acc_dtype)
+    ei0 = 0                 # epilogue-operand cursor, shared across the chain
     if plan.stages:
         wi = 0
         for si, stage in enumerate(plan.stages):
@@ -223,10 +224,16 @@ def _window_kernel(*refs, plan: SystolicPlan, block: tuple[int, ...],
                 wi += 1
             xb = _apply_plan_once(xb, stage, w_ref, variant, acc_dtype)
             if si < len(plan.stages) - 1:
-                # mid-chain epilogues are operand-free (fuse_plans) and
-                # fix zero, so the pad-once boundary survives the chain.
+                # mid-chain epilogues fix zero or are a scalar bias
+                # (fuse_plans); either way they apply to the whole
+                # pad-once intermediate, so the trapezoidal boundary
+                # stays shared with the unfused fallback.
                 for st in stage.epilogue:
-                    xb = _apply_epilogue_val(st, xb, None, plan, acc_dtype,
+                    ref = None
+                    if st.op in EPILOGUE_OPERANDS:
+                        ref = epi_refs[ei0]
+                        ei0 += 1
+                    xb = _apply_epilogue_val(st, xb, ref, plan, acc_dtype,
                                              None)
     else:
         w_ref = w_refs[0] if n_w else None
@@ -236,7 +243,7 @@ def _window_kernel(*refs, plan: SystolicPlan, block: tuple[int, ...],
     o_idx = (0,) * (nb + no) if nb + no else ...
 
     def epilogue_fn(val):
-        ei = 0
+        ei = ei0
         for st in plan.final_epilogue():
             ref = None
             if st.op in EPILOGUE_OPERANDS:
@@ -286,10 +293,12 @@ def run_window_plan(
       plan: the systolic schedule + geometry (lead/trail, footprint).
       block: output block size per windowed axis, lane axis last.
       time_steps: fused plan applications per block (§6.4).
-      epilogue_args: runtime operands of the final epilogue's
-        operand-bearing stages, in stage order — ``bias`` (per-C_out for
-        out-axes plans, per-lane for perlane plans, scalar otherwise)
-        and/or ``residual_add`` (shaped like the output).
+      epilogue_args: runtime operands of the chain's operand-bearing
+        epilogue stages, in application order (mid-chain ``bias``
+        entries first for fused pipelines, the final stage's last) —
+        ``bias`` (per-C_out for out-axes plans, per-lane for perlane
+        plans, scalar otherwise; always scalar mid-chain) and/or
+        ``residual_add`` (shaped like the output, final stage only).
 
     Returns:
       The plan's output, ``batch + out_axes + spatial``-shaped: per
@@ -317,10 +326,10 @@ def run_window_plan(
     if any(v > 1 for v in plan.stride_per_axis()):
         assert nd == 2 and time_steps == 1 and not plan.stages, (
             "output strides support single 2-D plan applications")
-    epi_entries = epilogue_operand_stages(plan.final_epilogue())
+    epi_entries = chain_epilogue_operand_stages(plan)
     assert len(epilogue_args) == len(epi_entries), (
-        "epilogue_args must match the final epilogue's operand-bearing "
-        "stages", [s.op for s in epi_entries])
+        "epilogue_args must match the chain's operand-bearing epilogue "
+        "stages, in application order", [s.op for s in epi_entries])
     t = time_steps
     spatial_in = x.shape[nb + nr:]
     out_sp = plan.out_shape(spatial_in, t)
@@ -593,15 +602,36 @@ def run_weight_grad_plan(
 # Scan family: cumsum / linear recurrence (§3.6, Fig. 1e)
 # ---------------------------------------------------------------------------
 
-def _scan_kernel(*refs, plan: SystolicPlan, acc_dtype):
-    """Kogge–Stone over one ``(BR, BT)`` tile, carry across grid steps."""
+def _scan_kernel(*refs, plan: SystolicPlan, acc_dtype, has_carry: bool,
+                 want_carry: bool):
+    """Kogge–Stone over one ``(BR, BT)`` tile, carry across grid steps.
+
+    Ref layout: ``(*data_ins, [c_ref], o_ref, [co_ref], scratch)`` — the
+    optional ``c_ref`` seeds the VMEM carry at the first sequential tile
+    (inter-chunk carry-in), the optional ``co_ref`` publishes the final
+    carry (its block index ignores the sequential axis, so the last grid
+    step's write wins).
+    """
     carry = refs[-1]
-    o_ref = refs[-2]
-    ins = refs[:-2]
+    idx = len(refs) - 1
+    co_ref = None
+    if want_carry:
+        idx -= 1
+        co_ref = refs[idx]
+    idx -= 1
+    o_ref = refs[idx]
+    c_ref = None
+    if has_carry:
+        idx -= 1
+        c_ref = refs[idx]
+    ins = refs[:idx]
 
     @pl.when(pl.program_id(1) == 0)
     def _reset():
-        carry[:] = jnp.zeros_like(carry)   # h₋₁ = 0 for both combines
+        if has_carry:
+            carry[:] = c_ref[:].astype(carry.dtype)   # h₋₁ = carry-in
+        else:
+            carry[:] = jnp.zeros_like(carry)   # h₋₁ = 0 for both combines
 
     def store(s):
         # The epilogue applies to the *stored* copy only (DESIGN.md §11);
@@ -636,10 +666,13 @@ def _scan_kernel(*refs, plan: SystolicPlan, acc_dtype):
         store(h)
     else:
         raise ValueError(plan.combine)
+    if want_carry:
+        co_ref[:] = carry[:].astype(co_ref.dtype)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("plan", "block_r", "interpret", "acc_dtype")
+    jax.jit, static_argnames=("plan", "block_r", "interpret", "acc_dtype",
+                              "return_carry")
 )
 def run_scan_plan(
     *operands: jax.Array,
@@ -647,7 +680,9 @@ def run_scan_plan(
     block_r: int = 8,
     interpret: bool = True,
     acc_dtype=jnp.float32,
-) -> jax.Array:
+    carry: jax.Array | None = None,
+    return_carry: bool = False,
+):
     """Lower a scan/recurrence plan over ``(R, T)`` operands.
 
     ``plan.S`` is the lane-tile width BT (a power of two); T is tiled into
@@ -656,6 +691,11 @@ def run_scan_plan(
     tail lanes are no-ops. ``plan.epilogue`` may carry *operand-free*
     elementwise stages (gelu/silu/relu/scale), applied to the stored
     output only — the carry keeps the raw scan state.
+
+    ``carry`` (``(R,)`` or ``(R, 1)``) seeds the VMEM carry — the state
+    h₋₁ entering the first tile — and ``return_carry=True`` additionally
+    returns the final raw state ``(R, 1)``; together they promote the
+    intra-kernel VMEM carry to an inter-chunk carry (DESIGN.md §12).
     """
     if epilogue_operand_stages(plan.epilogue):
         raise ValueError(
@@ -670,18 +710,109 @@ def run_scan_plan(
     if plan.combine == "linrec":
         a, b = operands
         assert a.shape == b.shape
-        padded = (jnp.pad(a, pad, constant_values=1), jnp.pad(b, pad))
+        padded = [jnp.pad(a, pad, constant_values=1), jnp.pad(b, pad)]
     else:
-        padded = (jnp.pad(operands[0], pad),)
+        padded = [jnp.pad(operands[0], pad)]
 
-    kern = functools.partial(_scan_kernel, plan=plan, acc_dtype=acc_dtype)
-    out = pl.pallas_call(
+    has_carry = carry is not None
+    if has_carry:
+        c = carry.reshape(R, 1).astype(operands[0].dtype)
+        padded.append(jnp.pad(c, ((0, gr * BR - R), (0, 0))))
+
+    kern = functools.partial(_scan_kernel, plan=plan, acc_dtype=acc_dtype,
+                             has_carry=has_carry, want_carry=return_carry)
+    in_specs = [pl.BlockSpec((BR, BT), lambda i, j: (i, j))] * (len(padded)
+                                                                - has_carry)
+    if has_carry:
+        in_specs.append(pl.BlockSpec((BR, 1), lambda i, j: (i, 0)))
+    out_specs = pl.BlockSpec((BR, BT), lambda i, j: (i, j))
+    out_shape = jax.ShapeDtypeStruct((gr * BR, gt * BT), operands[0].dtype)
+    if return_carry:
+        # carry-out block ignores j: each sequential step overwrites it,
+        # so the value left behind is the final state of the row tile.
+        out_specs = (out_specs, pl.BlockSpec((BR, 1), lambda i, j: (i, 0)))
+        out_shape = (out_shape,
+                     jax.ShapeDtypeStruct((gr * BR, 1), operands[0].dtype))
+    res = pl.pallas_call(
         kern,
         grid=(gr, gt),                    # T sequential per row-tile
-        in_specs=[pl.BlockSpec((BR, BT), lambda i, j: (i, j))] * len(padded),
-        out_specs=pl.BlockSpec((BR, BT), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((gr * BR, gt * BT), operands[0].dtype),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((BR, 1), acc_dtype)],
         interpret=interpret,
     )(*padded)
-    return out[:R, :T]
+    if return_carry:
+        out, co = res
+        return out[:R, :T], co[:R]
+    return res[:R, :T]
+
+
+def check_chunk_geometry(plan: SystolicPlan, chunk: int) -> None:
+    """Pre-pallas guards for the chunk-streamed scan schedule.
+
+    Named errors (PR 4/5 pattern) so bad geometry fails before tracing a
+    kernel: the chunk must hold a whole number of lane tiles, and the
+    streamed path keeps the raw state in the ``lax.scan`` carry — fused
+    epilogues would make the recomputed backward state disagree with the
+    stored forward copy, so they are rejected here.
+    """
+    if plan.epilogue_op_count():
+        raise ValueError(
+            f"{plan.kind}: epilogue stages are illegal under chunking — the "
+            "chunk-streamed schedule carries the raw scan state between "
+            "chunks and recomputes it on backward; apply activations to "
+            "the streamed output instead")
+    if chunk < plan.S:
+        raise ValueError(
+            f"{plan.kind}: chunk={chunk} is smaller than the lane tile "
+            f"S={plan.S}; a chunk must hold at least one Kogge–Stone tile")
+    if chunk % plan.S:
+        raise ValueError(
+            f"{plan.kind}: chunk={chunk} is not a multiple of the lane "
+            f"tile S={plan.S}; partial tiles would shift the carry "
+            "hand-off off the tile boundary")
+
+
+def run_scan_plan_chunked(
+    *operands: jax.Array,
+    plan: SystolicPlan,
+    chunk: int,
+    block_r: int = 8,
+    interpret: bool = True,
+    acc_dtype=jnp.float32,
+    carry: jax.Array | None = None,
+    return_carry: bool = False,
+):
+    """Stream a scan/recurrence plan over ``(R, chunk)`` slabs (§12).
+
+    Runs :func:`run_scan_plan` inside a ``lax.scan`` whose carry is the
+    per-row state, so peak live state is O(R·chunk) instead of O(R·T):
+    the transfer-pair algebra that already composes across lane shifts
+    composes identically across chunks. The body is ``jax.checkpoint``-
+    wrapped — reverse-mode through this runner saves only the O(T/chunk)
+    chunk-boundary carries and recomputes in-chunk state.
+    """
+    check_chunk_geometry(plan, chunk)
+    R, T = operands[0].shape
+    nc = pl.cdiv(T, chunk)
+    pad_t = ((0, 0), (0, nc * chunk - T))
+    if plan.combine == "linrec":
+        a, b = operands
+        padded = (jnp.pad(a, pad_t, constant_values=1), jnp.pad(b, pad_t))
+    else:
+        padded = (jnp.pad(operands[0], pad_t),)
+    c0 = (jnp.zeros((R, 1), operands[0].dtype) if carry is None
+          else carry.reshape(R, 1).astype(operands[0].dtype))
+
+    def body(c, i):
+        slabs = tuple(jax.lax.dynamic_slice_in_dim(o, i * chunk, chunk, 1)
+                      for o in padded)
+        out, c_new = run_scan_plan(
+            *slabs, plan=plan, block_r=block_r, interpret=interpret,
+            acc_dtype=acc_dtype, carry=c, return_carry=True)
+        return c_new, out
+
+    c_fin, outs = jax.lax.scan(jax.checkpoint(body), c0, jnp.arange(nc))
+    out = jnp.moveaxis(outs, 0, 1).reshape(R, nc * chunk)[:, :T]
+    return (out, c_fin) if return_carry else out

@@ -35,16 +35,20 @@ Legality (checked here, pre-``pallas_call``, with named errors):
 * every stage is shape-preserving per axis (``lead+trail = ext−1``) so
   intermediate shapes survive the chain and the composite stays
   shardable;
-* stage epilogues between stages must fix zero (no ``bias`` /
-  ``residual_add`` mid-chain — they would shift the pad-once zero
-  boundary); the final stage may carry any epilogue.
+* stage epilogues between stages must fix zero (gelu/silu/relu/scale)
+  or be ``bias`` — a scalar bias applies to the whole pad-once
+  intermediate, matching the unfused fallback exactly; ``residual_add``
+  stays final-only (its output-shaped operand would have to materialize
+  the intermediate it skips).
 
 Semantics are pad-once (trapezoidal), shared with temporal blocking and
 ``ref.stencil_iterate``: the domain is zero-padded once by the *summed*
-leads/trails, then the stages apply as valid windows in order. Since the
-mid-chain activations fix zero, this agrees with per-op same-shape
+leads/trails, then the stages apply as valid windows in order. Where the
+mid-chain epilogues fix zero, this agrees with per-op same-shape
 zero-boundary application on the interior at distance > Σ radius from
-the boundary.
+the boundary; a mid-chain ``bias`` (which shifts zero) keeps the
+fused/unfused/oracle agreement but diverges from per-op same-shape
+application near the boundary.
 """
 from __future__ import annotations
 
@@ -85,12 +89,16 @@ def _check_stage(i: int, p: SystolicPlan, n: int) -> None:
                 f"(lead+trail={lead[a] + trail[a]} != ext-1="
                 f"{p.exts[a] - 1}); only shape-preserving stages chain "
                 "(for conv2d use mode='same')")
-    if i < n - 1 and epilogue_operand_stages(p.epilogue):
-        raise ValueError(
-            f"{tag} carries an operand-bearing epilogue "
-            f"({[s.op for s in epilogue_operand_stages(p.epilogue)]}) "
-            "mid-chain: bias/residual_add shift the zero boundary, so they "
-            "are only legal on the final stage of a fused pipeline")
+    if i < n - 1:
+        bad = [s.op for s in epilogue_operand_stages(p.epilogue)
+               if s.op != "bias"]
+        if bad:
+            raise ValueError(
+                f"{tag} carries a residual_add epilogue ({bad}) mid-chain: "
+                "the residual operand is output-shaped and would have to "
+                "materialize the intermediate it skips, so residual_add is "
+                "only legal on the final stage of a fused pipeline (bias "
+                "may sit mid-chain)")
 
 
 def summed_lead_trail(

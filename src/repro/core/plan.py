@@ -38,10 +38,14 @@ TPU_VREG_LANES = 128
 # Closed vocabulary of fusable elementwise epilogue stages (DESIGN.md §11).
 # Applied in VMEM between the accumulator flush and the output store, so a
 # conv→activation seam stops round-tripping HBM. The activations all fix 0
-# (gelu(0) = silu(0) = relu(0) = s·0 = 0), which is what lets them sit
-# *between* fused pipeline stages without disturbing the zero-boundary
-# pad-once semantics; `bias`/`residual_add` shift zero and are therefore
-# only legal as the *final* stage of a chain.
+# (gelu(0) = silu(0) = relu(0) = s·0 = 0), so they sit *between* fused
+# pipeline stages without disturbing the zero-boundary pad-once semantics.
+# `bias` may also sit mid-chain: it applies to the whole pad-once
+# intermediate, exactly matching the unfused per-stage fallback (though
+# near the boundary both differ from per-op same-shape application, since
+# bias(0) != 0). `residual_add` stays final-only — its operand is
+# output-shaped and a mid-chain residual would have to materialize the
+# intermediate it skips.
 EPILOGUE_OPS = ("bias", "gelu", "silu", "relu", "scale", "residual_add")
 # op → number of runtime operands it consumes from ``epilogue_args``.
 EPILOGUE_OPERANDS = {"bias": 1, "residual_add": 1}
@@ -103,6 +107,21 @@ def epilogue_operand_stages(
 ) -> tuple[EpilogueStage, ...]:
     """The subsequence of stages that consume a runtime operand, in order."""
     return tuple(st for st in stages if st.op in EPILOGUE_OPERANDS)
+
+
+def chain_epilogue_operand_stages(plan) -> tuple[EpilogueStage, ...]:
+    """Operand-bearing epilogue stages across a whole plan, in
+    application order.
+
+    For a fused pipeline this walks ``plan.stages`` — mid-chain ``bias``
+    entries first, the final stage's operands last — which is the order
+    the engine consumes ``epilogue_args``. For an unfused plan it equals
+    ``epilogue_operand_stages(plan.epilogue)``.
+    """
+    if getattr(plan, "stages", ()):
+        return tuple(st for s in plan.stages
+                     for st in epilogue_operand_stages(s.epilogue))
+    return epilogue_operand_stages(plan.epilogue)
 
 
 @dataclasses.dataclass(frozen=True)

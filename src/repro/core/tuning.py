@@ -69,7 +69,11 @@ SIDECAR_ENV = "REPRO_TUNING_CACHE"
 #   v3 — fused pipelines + epilogues + output-strided grids: kernels may
 #        carry extra epilogue operands, iterate stage lists and read
 #        stride-scaled input tiles.
-ENGINE_SCHEMA_VERSION = 3
+#   v4 — chunk-streamed scans: scan winners may carry a third block
+#        dimension (the chunk length of the streamed schedule), and the
+#        scan kernel gained carry-in/-out ports; v3 scan entries priced a
+#        different lowering.
+ENGINE_SCHEMA_VERSION = 4
 
 # VMEM working-set budget per block (f32 elements): input block + psum +
 # output must fit comfortably in ~16 MB VMEM; stay conservative.
@@ -80,6 +84,7 @@ _WINDOW_BLOCK_W = (128, 256, 512)
 _WINDOW_BLOCK_Z = (4, 8, 16)
 _SCAN_BLOCK_R = (8, 16, 32)
 _SCAN_BLOCK_T = (128, 256, 512, 1024)
+_SCAN_CHUNK_TILES = (1, 2, 4)        # chunk = m × lane tile (streamed scans)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,7 +97,10 @@ class KernelConfig:
     def as_kwargs(self, plan: SystolicPlan) -> dict:
         """Render into the kwargs the thin kernel wrappers accept."""
         if plan.combine != "fma":
-            return {"block_r": self.block[0], "block_t": self.block[1]}
+            kw = {"block_r": self.block[0], "block_t": self.block[1]}
+            if len(self.block) == 3:        # chunk-streamed scan (§12)
+                kw["chunk"] = self.block[2]
+            return kw
         if plan.kind == "conv1d":
             return {"block_t": self.block[0], "block_d": self.block[1]}
         kw = {"block_h": self.block[-2], "block_w": self.block[-1]}
@@ -273,13 +281,17 @@ def candidate_configs(
     time_steps: int = 1,
     *,
     vmem_budget: int = VMEM_BUDGET_ELEMS,
+    chunked: bool = False,
 ) -> list[KernelConfig]:
     """Feasible block configs for ``plan`` on a problem of ``shape``.
 
     Blocks are clamped to the output shape, deduplicated, and filtered by
     the VMEM working-set budget (input block + halo, widened by temporal
     blocking). Scan plans tune (block_r, block_t) with power-of-two lane
-    tiles; windowed plans tune the output tile and the schedule variant.
+    tiles; ``chunked=True`` (the streamed schedule, DESIGN.md §12) grows
+    a third chunk-length dimension — whole multiples of the lane tile, so
+    every candidate passes the chunk-geometry guards; windowed plans tune
+    the output tile and the schedule variant.
     """
     if plan.combine != "fma":                       # scan family
         R, T = shape
@@ -287,9 +299,18 @@ def candidate_configs(
         for br in _SCAN_BLOCK_R:
             for bt in _SCAN_BLOCK_T:
                 bt_eff = 1 << (min(bt, T).bit_length() - 1)
-                cfg = KernelConfig((min(br, R), bt_eff))
-                if cfg.block[0] * cfg.block[1] <= vmem_budget:
-                    out.append(cfg)
+                if not chunked:
+                    cfg = KernelConfig((min(br, R), bt_eff))
+                    if cfg.block[0] * cfg.block[1] <= vmem_budget:
+                        out.append(cfg)
+                    continue
+                for mult in _SCAN_CHUNK_TILES:      # chunk = m lane tiles
+                    chunk = bt_eff * mult
+                    if chunk > max(T, bt_eff):
+                        continue
+                    cfg = KernelConfig((min(br, R), bt_eff, chunk))
+                    if cfg.block[0] * chunk <= vmem_budget:
+                        out.append(cfg)
         return sorted(set(out), key=lambda c: c.block)
 
     spatial = tuple(shape)[plan.batch_axes + plan.reduce_axes:]
@@ -349,12 +370,17 @@ def model_cost(
     """
     t = time_steps
     if plan.combine != "fma":                       # Kogge–Stone scan
-        br, bt = cfg.block
+        br, bt = cfg.block[:2]
         steps = math.log2(max(bt, 2))
         ops_per_elem = 2.0 if plan.combine == "linrec" else 1.0
         compute = steps * ops_per_elem * (hw.t_shfl + hw.t_mad + hw.t_reg)
         carry = (hw.t_smem_read + hw.t_mad) / bt    # inter-block carry
         memory = hw.t_gmem_read / plan.S
+        if len(cfg.block) == 3:                     # streamed schedule (§12)
+            # inter-chunk hand-off: the carry round-trips HBM between the
+            # lax.scan steps and the slab is re-sliced per chunk — one
+            # extra read + scratch touch amortized over chunk elements.
+            carry += (hw.t_gmem_read + hw.t_smem_read) / cfg.block[2]
         return compute + carry + memory
 
     block = cfg.block
@@ -397,6 +423,7 @@ def autotune(
     top_k: int = 3,
     context: tuple = (),
     fixed: dict | None = None,
+    chunked: bool = False,
 ) -> TuneResult:
     """Pick a block config for ``plan`` on ``shape``.
 
@@ -438,7 +465,7 @@ def autotune(
         _CACHE[key] = result
         return result
 
-    cands = candidate_configs(plan, shape, time_steps)
+    cands = candidate_configs(plan, shape, time_steps, chunked=chunked)
     if default is not None and default not in cands:
         cands.append(default)
     if fixed:

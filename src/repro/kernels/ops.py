@@ -416,6 +416,7 @@ def _pipeline_bwd(cfg, x, ws, epi, g):
     nb = plan.batch_axes
     pads = [(0, 0)] * nb + [(l, r) for l, r in zip(lead, trail)]
     h = jnp.pad(x, pads)
+    epi_splits = _pipeline_epi_splits(stages, epi)
     hs, zs, valids = [], [], []
     for i, s in enumerate(stages):
         sv = dataclasses.replace(s, lead=None, trail=None, epilogue=())
@@ -426,23 +427,19 @@ def _pipeline_bwd(cfg, x, ws, epi, g):
                             variant=cfg.variant, interpret=cfg.interpret,
                             acc_dtype=cfg.acc_dtype)
         se = dataclasses.replace(sv, epilogue=s.epilogue)
-        a = epi if i == len(stages) - 1 else ()
-        h = adj.apply_epilogue(se, z, a).astype(x.dtype)
+        h = adj.apply_epilogue(se, z, epi_splits[i]).astype(x.dtype)
         zs.append(z)
 
-    depi = ()
+    depi_parts = [()] * len(stages)
     dws = [None] * len(stages)
     for i in reversed(range(len(stages))):
         s, sv = stages[i], valids[i]
         if s.epilogue:
             se = dataclasses.replace(sv, epilogue=s.epilogue)
-            a = epi if i == len(stages) - 1 else ()
             _, epi_vjp = jax.vjp(
                 lambda zz, aa, _se=se: adj.apply_epilogue(_se, zz, aa),
-                zs[i], a)
-            g, da = epi_vjp(g.astype(zs[i].dtype))
-            if i == len(stages) - 1:
-                depi = da
+                zs[i], epi_splits[i])
+            g, depi_parts[i] = epi_vjp(g.astype(zs[i].dtype))
         if s.coeff_mode == "dense":
             adj.record_lowering("wgrad_" + sv.kind)
             dws[i] = run_weight_grad_plan(
@@ -455,7 +452,9 @@ def _pipeline_bwd(cfg, x, ws, epi, g):
             g, ws[i] if s.coeff_mode == "dense" else None, plan=ap,
             block=cfg.block, variant=cfg.variant, interpret=cfg.interpret,
             acc_dtype=cfg.acc_dtype).astype(x.dtype)
-    # transpose of the pad-once zero pad: crop the summed lead/trail
+    # transpose of the pad-once zero pad: crop the summed lead/trail;
+    # epilogue-operand cotangents reassemble in chain order
+    depi = tuple(d for part in depi_parts for d in part)
     sl = (slice(None),) * nb + tuple(
         slice(l, l + n) for l, n in zip(lead, x.shape[nb:]))
     return g[sl].astype(x.dtype), tuple(dws), depi
@@ -466,12 +465,19 @@ _window_op.defvjp(_window_op_fwd, _window_op_bwd)
 
 @dataclasses.dataclass(frozen=True)
 class _ScanCfg:
-    """Static configuration of one scan-engine call."""
+    """Static configuration of one scan-engine call.
+
+    ``chunk`` selects the chunk-streamed schedule (DESIGN.md §12): the
+    sequence axis streams through a ``lax.scan`` in ``(R, chunk)`` slabs
+    with the inter-chunk carry as the scan state — O(R·chunk) live
+    state. ``None`` keeps the monolithic O(R·T) lowering.
+    """
 
     block_r: int = 8
     block_t: int = 128
     interpret: bool = True
     acc_dtype: object = jnp.float32
+    chunk: int | None = None
 
 
 def _cumsum_run(cfg: _ScanCfg, x):
@@ -530,6 +536,93 @@ def _linrec_op_bwd(cfg, res, g):
 _linrec_op.defvjp(_linrec_op_fwd, _linrec_op_bwd)
 
 
+def _linrec_carry_run(cfg: _ScanCfg, a, b, h0):
+    return _sc.linear_recurrence(a, b, block_r=cfg.block_r,
+                                 block_t=cfg.block_t,
+                                 interpret=cfg.interpret,
+                                 acc_dtype=cfg.acc_dtype,
+                                 carry=h0, return_carry=True)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _linrec_carry_op(cfg: _ScanCfg, a, b, h0):
+    """One chunk of the streamed recurrence: ``(h, h_T)`` from carry ``h0``."""
+    return _linrec_carry_run(cfg, a, b, h0)
+
+
+def _linrec_carry_op_fwd(cfg, a, b, h0):
+    h, hT = _linrec_carry_run(cfg, a, b, h0)
+    return (h, hT), (a, h, h0)
+
+
+def _linrec_carry_op_bwd(cfg, res, cts):
+    # Chunk-local adjoint (DESIGN.md §12): the carry-out cotangent gc
+    # folds into the last in-chunk λ seed (h_T *is* h[:, -1]), the λ
+    # recurrence runs reversed through the same engine, and the carry-in
+    # cotangent a₀·λ₀ exits as this chunk's gc for the next-older chunk —
+    # lax.scan's carry cotangent streams it, no O(T) state saved.
+    a, h, h0 = res
+    g, gc = cts
+    adj.record_lowering("adj_recurrence_chunk")
+    g = g.astype(jnp.float32).at[..., -1:].add(
+        gc.astype(jnp.float32).reshape(g.shape[:-1] + (1,)))
+    abar = adj.reversed_recurrence_coeffs(a)
+    lam = adj.time_reversed(_linrec_run(
+        cfg, adj.time_reversed(abar), adj.time_reversed(g)))
+    da = (lam.astype(jnp.float32)
+          * adj.shifted_state(h, h0).astype(jnp.float32)).astype(a.dtype)
+    dh0 = adj.chunk_carry_cotangent(a, lam).astype(h0.dtype).reshape(h0.shape)
+    return da, lam.astype(a.dtype), dh0
+
+
+_linrec_carry_op.defvjp(_linrec_carry_op_fwd, _linrec_carry_op_bwd)
+
+
+def linear_recurrence_carry(a, b, h0, *, impl: str | None = None, **kw):
+    """``h_t = a_t·h_{t−1} + b_t`` over (R, T) rows with explicit carry.
+
+    Returns ``(h, h_T)`` where ``h_T`` is the final raw state ``(R, 1)``;
+    ``h0`` is ``(R,)`` or ``(R, 1)``. This is the per-chunk engine
+    primitive of the streamed schedule (DESIGN.md §12): differentiable
+    both through ``h`` and through the carry pair, so ``lax.scan`` over
+    chunks composes the λ-recurrence across chunk boundaries for free.
+    """
+    _reject_scan_kwargs("linear_recurrence_carry", kw)
+    impl = impl or default_engine_impl()
+    interpret = _interp(impl)
+    cfg = _scan_cfg(kw, interpret=interpret, op="linear_recurrence_carry")
+    return _linrec_carry_op(dataclasses.replace(cfg, chunk=None),
+                            a, b, h0.reshape(a.shape[0], 1))
+
+
+def _linrec_stream(cfg: _ScanCfg, a, b):
+    """Stream ``(R, T)`` rows through ``(R, chunk)`` engine slabs.
+
+    ``lax.scan`` carries the per-row state between chunks; the body is
+    ``jax.checkpoint``-wrapped so reverse-mode saves only the O(T/chunk)
+    chunk-boundary carries and re-runs each chunk's engine kernel to
+    recover in-chunk state — both directions engine-lowered, peak live
+    state O(R·chunk).
+    """
+    R, T = a.shape
+    chunk = cfg.chunk
+    nc = -(-T // chunk)
+    pad = ((0, 0), (0, nc * chunk - T))
+    ap = jnp.pad(a, pad, constant_values=1)   # identity transfers in the tail
+    bp = jnp.pad(b, pad)
+    inner = dataclasses.replace(cfg, chunk=None)
+
+    def body(c, i):
+        asl = jax.lax.dynamic_slice_in_dim(ap, i * chunk, chunk, 1)
+        bsl = jax.lax.dynamic_slice_in_dim(bp, i * chunk, chunk, 1)
+        h, c_new = _linrec_carry_op(inner, asl, bsl, c)
+        return c_new, h
+
+    c0 = jnp.zeros((R, 1), a.dtype)
+    _, hs = jax.lax.scan(jax.checkpoint(body), c0, jnp.arange(nc))
+    return jnp.moveaxis(hs, 0, 1).reshape(R, nc * chunk)[:, :T]
+
+
 def _shard_tuning_call(plan, x, mesh, in_specs, time_steps, boundary):
     """(shape, context) the sharded autotune must target: the per-device
     halo-extended block, keyed so winners never leak across meshes or
@@ -551,20 +644,24 @@ def _shard_tuning_call(plan, x, mesh, in_specs, time_steps, boundary):
 
 
 def _tuned_kwargs(plan, shape, call, user_kw, *, time_steps: int = 1,
-                  context: tuple = ()) -> dict:
+                  context: tuple = (), chunked: bool = False,
+                  default=None) -> dict:
     """Autotune block kwargs for ``call``; explicit user kwargs win.
 
     The cache context carries everything that changes what the runner
     measures beyond (plan, shape): op mode/impl and any caller-forced
     kwargs — without it a winner measured under one context would be
-    silently replayed under another.
+    silently replayed under another. ``chunked=True`` tunes the streamed
+    scan schedule: candidates grow the chunk-length dimension
+    (``(BR, BT, chunk)``, DESIGN.md §12).
     """
     runner = lambda cfg: tuning.measure_us(
         lambda: call(**{**cfg.as_kwargs(plan), **user_kw}))
     res = tuning.autotune(plan, shape, time_steps=time_steps,
-                          default=_default_cfg(plan), runner=runner,
+                          default=default or _default_cfg(plan),
+                          runner=runner,
                           context=context + tuple(sorted(user_kw.items())),
-                          fixed=user_kw)
+                          fixed=user_kw, chunked=chunked)
     return {**res.config.as_kwargs(plan), **user_kw}
 
 
@@ -878,6 +975,17 @@ def _pipeline_stage_plan(x, desc, idx: int):
     return plan, w
 
 
+def _pipeline_epi_splits(plans, epi_args):
+    """Split chain-ordered ``epilogue_args`` into per-stage tuples, one
+    per plan, in application order (DESIGN.md §11)."""
+    out, off = [], 0
+    for p in plans:
+        k = len(epilogue_operand_stages(p.epilogue))
+        out.append(tuple(epi_args[off:off + k]))
+        off += k
+    return out
+
+
 def _pipeline_ref(x, plans, ws, epi_args):
     """Pure-jnp oracle of a pipeline: pad-once, then valid stage
     applications (each stage's dense filter materialized from its taps)
@@ -886,6 +994,7 @@ def _pipeline_ref(x, plans, ws, epi_args):
     import numpy as np
     from repro.core.fuse import summed_lead_trail
     lead, trail = summed_lead_trail(plans)
+    splits = _pipeline_epi_splits(plans, epi_args)
     h = jnp.pad(x, list(zip(lead, trail))).astype(jnp.float32)
     for i, p in enumerate(plans):
         if p.coeff_mode == "dense":
@@ -902,8 +1011,7 @@ def _pipeline_ref(x, plans, ws, epi_args):
             h = jax.lax.conv_general_dilated(
                 h[None, None], f[None, None], (1, 1, 1), "VALID",
                 dimension_numbers=("NCDHW", "OIDHW", "NCDHW"))[0, 0]
-        a = epi_args if i == len(plans) - 1 else ()
-        h = adj.apply_epilogue(p, h, a)
+        h = adj.apply_epilogue(p, h, splits[i])
     return h.astype(x.dtype)
 
 
@@ -917,9 +1025,11 @@ def pipeline(x, stages, *, impl: str | None = None, autotune: bool = False,
     ``stages`` is a list of stage descriptors applied left to right:
     Table-3 stencil names / :class:`StencilDef`\\ s, 2-D 'same'-mode
     conv filters, each optionally paired with an epilogue as
-    ``(stage, "gelu")``. Mid-chain epilogues must be operand-free (they
-    fix zero, preserving the pad-once boundary); the final stage may
-    also take ``bias``/``residual_add`` via ``epilogue_args``.
+    ``(stage, "gelu")``. Mid-chain epilogues must fix zero (preserving
+    the pad-once boundary) or be a *scalar* ``bias``; the final stage
+    may also take ``residual_add``. ``epilogue_args`` carries the
+    operands of every operand-bearing stage in application (chain)
+    order — mid-chain biases first, the final stage's operands last.
 
     Semantics are pad-once (trapezoidal), shared with temporal blocking:
     zero-pad once by the summed stage leads/trails, then apply the
@@ -945,23 +1055,34 @@ def pipeline(x, stages, *, impl: str | None = None, autotune: bool = False,
     resolved = [_pipeline_stage_plan(x, d, i) for i, d in enumerate(stages)]
     plans = [p for p, _ in resolved]
     ws = tuple(w for _, w in resolved)
-    need = [s.op for s in epilogue_operand_stages(plans[-1].epilogue)]
+    need = [s.op for p in plans for s in epilogue_operand_stages(p.epilogue)]
     if len(tuple(epilogue_args)) != len(need):
         raise ValueError(
-            f"ops.pipeline: the final stage's epilogue needs {len(need)} "
-            f"runtime operand(s) ({need}) in epilogue_args, got "
+            f"ops.pipeline: the chain's epilogues need {len(need)} runtime "
+            f"operand(s) ({need}, application order) in epilogue_args, got "
             f"{len(tuple(epilogue_args))}")
     epi_args = tuple(epilogue_args)
+    epi_splits = _pipeline_epi_splits(plans, epi_args)
     for i, p in enumerate(plans[:-1]):
-        if epilogue_operand_stages(p.epilogue):
+        bad = [s.op for s in epilogue_operand_stages(p.epilogue)
+               if s.op != "bias"]
+        if bad:
             raise ValueError(
-                f"ops.pipeline: stage {i} carries an operand-bearing "
-                "epilogue mid-chain; bias/residual_add shift the zero "
-                "boundary and are only legal on the final stage")
+                f"ops.pipeline: stage {i} carries a residual_add epilogue "
+                "mid-chain; the residual operand is output-shaped and "
+                "would materialize the intermediate it skips — only bias "
+                "may sit mid-chain, residual_add goes on the final stage")
+        for arr in epi_splits[i]:
+            if _shape_size(tuple(getattr(arr, "shape", ()))) != 1:
+                raise ValueError(
+                    f"ops.pipeline: stage {i}'s mid-chain bias must be a "
+                    "scalar (it applies to the whole pad-once "
+                    "intermediate), got shape "
+                    f"{tuple(getattr(arr, 'shape', ()))}")
     if plans[-1].epilogue:
         # pipeline stages are shape-preserving, so the final stage's own
-        # layout validates the chain's epilogue operands (named errors)
-        _check_epilogue_operands(plans[-1], epi_args, "pipeline", x)
+        # layout validates its epilogue operands (named errors)
+        _check_epilogue_operands(plans[-1], epi_splits[-1], "pipeline", x)
     if impl == "xla":
         if mesh is not None:
             raise ValueError("mesh= needs the engine path; the 'xla' oracle "
@@ -989,7 +1110,7 @@ def pipeline(x, stages, *, impl: str | None = None, autotune: bool = False,
         h = jnp.pad(x, list(zip(lead, trail)))
         for i, p in enumerate(plans):
             pv = dataclasses.replace(p, lead=None, trail=None)
-            a = epi_args if i == len(plans) - 1 else ()
+            a = epi_splits[i]
             skw = dict(kw)
             if autotune:
                 skw = _tuned_kwargs(
@@ -1051,10 +1172,12 @@ _reject_scan_mesh = _reject_scan_kwargs
 
 
 def _scan_cfg(kw: dict, *, interpret: bool, op: str) -> _ScanCfg:
-    cfg = _ScanCfg(block_r=kw.pop("block_r", 8),
-                   block_t=kw.pop("block_t", 128),
+    d = _DEFAULTS["scan"].block
+    cfg = _ScanCfg(block_r=kw.pop("block_r", d[0]),
+                   block_t=kw.pop("block_t", d[1]),
                    interpret=interpret,
-                   acc_dtype=kw.pop("acc_dtype", jnp.float32))
+                   acc_dtype=kw.pop("acc_dtype", jnp.float32),
+                   chunk=kw.pop("chunk", None))
     if kw:
         raise TypeError(f"unexpected kwargs for ops.{op}: {sorted(kw)}")
     return cfg
@@ -1112,24 +1235,29 @@ def linear_recurrence(a, b, *, impl: str | None = None,
 # chunks under lax.scan state-passing across chunks — O(T·log L) work,
 # O(B·L·C) live memory, shardable over batch/channel axes under pjit.
 #
-# ``impl="engine"`` routes the same math through ``run_scan_plan``
-# blocks instead: leading axes flatten to the engine's row axis, T tiles
-# into Kogge–Stone lane blocks of width ``chunk`` with the inter-block
-# carry in VMEM scratch — the production LM path exercising the exact
-# kernel the benchmarks measure.
+# ``impl="engine"`` routes the same math through the chunk-streamed
+# engine schedule (DESIGN.md §12): leading axes flatten to the engine's
+# row axis and the sequence streams through ``(R, chunk)`` ``run_scan_plan``
+# slabs inside a ``lax.scan`` whose carry is the per-row state — O(R·chunk)
+# live state forward AND backward (chunk-boundary checkpointing), the
+# production LM path exercising the exact kernel the benchmarks measure.
+# ``impl="engine_unchunked"`` keeps the monolithic O(R·T) lowering as the
+# validation reference.
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("chunk", "impl"))
-def chunked_linear_recurrence(a: jax.Array, b: jax.Array, *,
-                              chunk: int = 128, impl: str = "chunked"):
-    """Same math as :func:`linear_recurrence`; a, b shaped (..., T)."""
-    if impl == "engine":
-        T = a.shape[-1]
-        cfg = _ScanCfg(block_t=chunk, interpret=engine_interpret())
-        out = _linrec_op(cfg, a.reshape((-1, T)), b.reshape((-1, T)))
-        return out.reshape(a.shape)
-    if impl != "chunked":
-        raise ValueError(impl)
+def default_scan_impl() -> str:
+    """Per-backend default for the production scan surfaces
+    (:func:`chunked_linear_recurrence`, ``nn/ssm.selective_scan``,
+    ``nn/ssm.wkv6_chunked``): the chunk-streamed engine schedule on real
+    TPU, the pjit-shardable XLA chunk form elsewhere (the Pallas
+    interpreter is far too slow to be anyone's training default)."""
+    return "engine" if jax.default_backend() == "tpu" else "chunked"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def _chunked_linrec_xla(a: jax.Array, b: jax.Array, *, chunk: int):
+    """Non-engine chunk form: associative scan within chunks, lax.scan
+    state-passing across chunks — O(T·log L) work, shardable under pjit."""
     T = a.shape[-1]
     pad = (-T) % chunk
     if pad:
@@ -1156,3 +1284,72 @@ def chunked_linear_recurrence(a: jax.Array, b: jax.Array, *,
     _, hs = jax.lax.scan(chunk_step, h0, (ac, bc))
     out = jnp.moveaxis(hs, 0, -2).reshape(a.shape[:-1] + (nc * chunk,))
     return out[..., :T]
+
+
+def chunked_linear_recurrence(a: jax.Array, b: jax.Array, *,
+                              chunk: int = 128, impl: str | None = None,
+                              autotune: bool = False, **kw):
+    """Same math as :func:`linear_recurrence`; a, b shaped (..., T).
+
+    ``impl``: ``None`` resolves per backend (:func:`default_scan_impl`);
+    ``"engine"`` streams ``(R, chunk)`` slabs through the scan engine
+    with the inter-chunk carry in the ``lax.scan`` state (O(R·chunk)
+    live state, checkpointed backward); ``"engine_unchunked"`` is the
+    monolithic O(R·T) engine lowering; ``"chunked"`` is the non-engine
+    XLA associative-scan form. ``autotune=True`` tunes
+    ``(block_r, block_t, chunk)`` through the §5 model + sidecar for the
+    streamed path (``(block_r, block_t)`` for the monolithic one).
+    """
+    impl = impl or default_scan_impl()
+    if impl not in ("engine", "engine_unchunked", "chunked"):
+        raise ValueError(impl)
+    T = a.shape[-1]
+    if impl == "chunked":
+        if kw:
+            raise TypeError(
+                f"unexpected kwargs for ops.chunked_linear_recurrence"
+                f"(impl='chunked'): {sorted(kw)}")
+        return _chunked_linrec_xla(a, b, chunk=chunk)
+
+    rows_a, rows_b = a.reshape(-1, T), b.reshape(-1, T)
+    interpret = engine_interpret()
+    streamed = impl == "engine"
+    if autotune:
+        from repro.core.plan import linear_recurrence_plan
+        plan = linear_recurrence_plan(128)   # schedule signature (cache key)
+
+        def call(**k):
+            ck = k.pop("chunk", chunk)
+            cfg = _ScanCfg(interpret=interpret,
+                           chunk=ck if streamed else None, **k)
+            return (_linrec_stream(cfg, rows_a, rows_b) if streamed
+                    else _linrec_op(cfg, rows_a, rows_b))
+
+        kw = _tuned_kwargs(
+            plan, rows_a.shape, call, kw,
+            context=("linrec_stream" if streamed else "linrec", impl),
+            chunked=streamed,
+            default=tuning.KernelConfig((8, 128, chunk)) if streamed
+            else None)
+    chunk = kw.pop("chunk", chunk)
+    if streamed:
+        cfg = _scan_cfg(kw, interpret=interpret,
+                        op="chunked_linear_recurrence")
+        cfg = dataclasses.replace(cfg, chunk=chunk,
+                                  block_t=min(cfg.block_t, chunk))
+        from repro.core import engine as _eng
+        from repro.core.plan import linear_recurrence_plan
+        _eng.check_chunk_geometry(
+            linear_recurrence_plan(_sc._lane_tile(cfg.block_t, chunk)), chunk)
+        out = _linrec_stream(cfg, rows_a, rows_b)
+    else:
+        cfg = _ScanCfg(block_r=kw.pop("block_r", 8),
+                       block_t=kw.pop("block_t", chunk),
+                       interpret=interpret,
+                       acc_dtype=kw.pop("acc_dtype", jnp.float32))
+        if kw:
+            raise TypeError(
+                f"unexpected kwargs for ops.chunked_linear_recurrence: "
+                f"{sorted(kw)}")
+        out = _linrec_op(cfg, rows_a, rows_b)
+    return out.reshape(a.shape)

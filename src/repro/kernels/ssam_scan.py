@@ -39,11 +39,17 @@ def cumsum(
     block_t: int = 128,
     interpret: bool = True,
     acc_dtype=jnp.float32,
-) -> jax.Array:
-    """Inclusive prefix sum along the last axis of ``(R, T)``."""
+    carry: jax.Array | None = None,
+    return_carry: bool = False,
+):
+    """Inclusive prefix sum along the last axis of ``(R, T)``.
+
+    ``carry``/``return_carry`` thread the running total across chunks
+    (DESIGN.md §12)."""
     plan = scan_plan(_lane_tile(block_t, x.shape[-1]))
     return run_scan_plan(x, plan=plan, block_r=block_r, interpret=interpret,
-                         acc_dtype=acc_dtype)
+                         acc_dtype=acc_dtype, carry=carry,
+                         return_carry=return_carry)
 
 
 def linear_recurrence(
@@ -54,8 +60,14 @@ def linear_recurrence(
     block_t: int = 128,
     interpret: bool = True,
     acc_dtype=jnp.float32,
-) -> jax.Array:
-    """Solve ``h_t = a_t · h_{t−1} + b_t`` (h₋₁=0) along the last axis of (R, T).
+    carry: jax.Array | None = None,
+    return_carry: bool = False,
+):
+    """Solve ``h_t = a_t · h_{t−1} + b_t`` along the last axis of (R, T).
+
+    ``carry`` seeds h₋₁ (default 0); ``return_carry=True`` additionally
+    returns the final state ``(R, 1)`` — together they let the caller
+    stream chunks through the inter-chunk carry (DESIGN.md §12).
 
     Padding note (engine): ``a`` pads with ones and ``b`` with zeros so
     padded tail steps are identity transfers.
@@ -63,4 +75,5 @@ def linear_recurrence(
     assert a.shape == b.shape
     plan = linear_recurrence_plan(_lane_tile(block_t, a.shape[-1]))
     return run_scan_plan(a, b, plan=plan, block_r=block_r,
-                         interpret=interpret, acc_dtype=acc_dtype)
+                         interpret=interpret, acc_dtype=acc_dtype,
+                         carry=carry, return_carry=return_carry)

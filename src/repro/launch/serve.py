@@ -7,6 +7,11 @@ other slots keep decoding (continuous batching — no batch-wide drain).
 Per-slot indices flow through the whole cache machinery
 (:func:`repro.nn.attention._cache_write` vmaps the cache write).
 
+Prefill: recurrent archs (RWKV6) expose ``model.prefill`` — the whole
+prompt runs through the chunk-streamed scan plans in one call
+(DESIGN.md §12) and only the resulting O(1) state lands in the slot;
+KV-cache archs feed the prompt token-by-token through ``serve_step``.
+
 Greedy sampling by default; temperature optional. This driver doubles as
 the end-to-end serving example (examples/serve_decode.py wraps it).
 
@@ -52,20 +57,39 @@ class DecodeServer:
         self.slot_req: list[Request | None] = [None] * slots
         self.prompt_left: list[np.ndarray] = [np.zeros((0,), np.int32)] * slots
         self.step_fn = jax.jit(model.serve_step)
+        # recurrent archs expose whole-prompt prefill through the chunked
+        # scan plans (DESIGN.md §12); KV-cache archs fall back to feeding
+        # the prompt token-by-token through serve_step.
+        self.prefill_fn = (jax.jit(model.prefill)
+                           if hasattr(model, "prefill") else None)
         self.tokens = np.zeros((slots, 1), np.int32)
         self.active_mask = np.zeros((slots,), bool)
         self.steps = 0
 
     def assign(self, req: Request, slot: int):
         self.slot_req[slot] = req
-        self.prompt_left[slot] = req.prompt.copy()
         self.index[slot] = 0
-        self.tokens[slot, 0] = req.prompt[0]
-        self.prompt_left[slot] = req.prompt[1:]
         self.active_mask[slot] = True
         # zero this slot's state so a stale cache cannot leak across requests
         self.state = jax.tree.map(
             lambda s: s.at[:, slot].set(0) if s.ndim >= 2 else s, self.state)
+        if self.prefill_fn is not None and len(req.prompt) > 1:
+            # one batched scan over prompt[:-1] replaces L−1 serve_step
+            # calls; the last prompt token then rides the normal decode
+            # step, so the slot's state trajectory is identical to the
+            # token-by-token path (greedy outputs match exactly).
+            _, st = self.prefill_fn(
+                self.params, jnp.asarray(req.prompt[None, :-1]))
+            self.state = jax.tree.map(
+                lambda s, n: (s.at[:, slot].set(n[:, 0].astype(s.dtype))
+                              if s.ndim >= 2 else s),
+                self.state, st)
+            self.index[slot] = len(req.prompt) - 1
+            self.tokens[slot, 0] = req.prompt[-1]
+            self.prompt_left[slot] = np.zeros((0,), np.int32)
+        else:
+            self.tokens[slot, 0] = req.prompt[0]
+            self.prompt_left[slot] = req.prompt[1:]
 
     def step(self):
         """One lock-step decode across all slots."""
@@ -123,6 +147,11 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--scan-impl", default=None,
+                    choices=("engine", "engine_unchunked", "chunked"),
+                    help="recurrence schedule for scan-family archs: "
+                         "chunk-streamed engine / monolithic engine / XLA "
+                         "chunked scan (default: backend pick, DESIGN.md §12)")
     args = ap.parse_args(argv)
 
     from repro.config import get_config
@@ -130,6 +159,8 @@ def main(argv=None):
     from repro.nn.spec import init_params
 
     cfg = get_config(args.arch, smoke=args.smoke)
+    if args.scan_impl:
+        cfg = dataclasses.replace(cfg, scan_impl=args.scan_impl)
     model = build_model(cfg)
     params = init_params(model.specs(), jax.random.PRNGKey(0))
     server = DecodeServer(model, params, slots=args.slots,

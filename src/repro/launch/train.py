@@ -52,6 +52,12 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--fail-at-step", type=int, default=-1,
                     help="inject a crash after this step (fault-tolerance tests)")
+    ap.add_argument("--scan-impl", default=None,
+                    choices=("engine", "engine_unchunked", "chunked"),
+                    help="recurrence schedule for ssm/rwkv archs: "
+                         "'engine' streams (R, chunk) slabs through the "
+                         "chunk-streamed engine scan (O(chunk) memory, "
+                         "DESIGN.md §12); default picks per backend")
     ap.add_argument("--metrics-file", default="")
     args = ap.parse_args(argv)
 
@@ -71,6 +77,8 @@ def main(argv=None):
             ap.error(f"--conv-frontend is for audio archs, not {cfg.family}")
         n_mels = cfg.n_mels or (8 if args.smoke else 80)
         cfg = dataclasses.replace(cfg, conv_frontend=True, n_mels=n_mels)
+    if args.scan_impl:
+        cfg = dataclasses.replace(cfg, scan_impl=args.scan_impl)
     mesh = make_host_mesh(args.model_axis)
     shape = ShapeConfig("custom_train", "train", args.seq, args.batch)
     cell = build_cell(cfg, shape, mesh, dtype=args.dtype, lr=args.lr,

@@ -87,6 +87,10 @@ class ArchConfig:
     constrain_cache: bool = True    # re-pin decode-cache sharding in-scan
     decode_write_outside: bool = True   # one stacked cache write/step
     scan_dtype: str = "float32"     # §Perf: recurrence-chunk intermediate dtype
+    # recurrence schedule: None → backend default (chunk-streamed engine
+    # on TPU, XLA chunked scan elsewhere); or one of 'engine',
+    # 'engine_unchunked', 'chunked' (DESIGN.md §12)
+    scan_impl: str | None = None
     loss_chunk: int = 512
     aux_loss_weight: float = 0.01
 

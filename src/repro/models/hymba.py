@@ -68,7 +68,8 @@ class Hymba:
                                       write_through=write_through)
         m, new_mstate = ssm.mamba_apply(p["mamba"], h, ssm_state=c.ssm_state,
                                         conv_k=c.conv_k, state=mamba_state,
-                                        work_dtype=jnp.dtype(c.scan_dtype))
+                                        work_dtype=jnp.dtype(c.scan_dtype),
+                                        scan_impl=c.scan_impl)
         # per-branch rescale then mean-combine (hybrid-head fusion)
         mix = 0.5 * (a * p["beta_attn"].astype(x.dtype)
                      + m * p["beta_mamba"].astype(x.dtype))

@@ -55,7 +55,7 @@ class RWKV6:
             p["tm"], nnl.rmsnorm_apply(p["norm_tm"], x),
             n_heads=c.n_heads, head_k=c.head_k, head_v=c.head_v,
             chunk=c.wkv_chunk, state=tm_state,
-            work_dtype=jnp.dtype(c.scan_dtype))
+            work_dtype=jnp.dtype(c.scan_dtype), wkv_impl=c.scan_impl)
         x = x + h
         h, cm_new = ssm.rwkv6_channelmix_apply(
             p["cm"], nnl.rmsnorm_apply(p["norm_cm"], x), state=cm_state)
@@ -88,6 +88,29 @@ class RWKV6:
         return (x[:, -1] @ params["embed"]["table"].T.astype(x.dtype)).astype(jnp.float32)
 
     # ---- decode: O(1) recurrent state -------------------------------------
+    def prefill(self, params, tokens):
+        """Whole-prompt prefill through the chunked scan plans.
+
+        ``tokens`` is ``(B, L)`` int32 for fresh (zero-state) streams. Each
+        layer's WKV recurrence runs once over the full prompt via
+        :func:`repro.nn.ssm.wkv6_chunked` — the chunk-streamed engine
+        schedule on TPU (DESIGN.md §12) — instead of L ``serve_step``
+        calls. Returns ``(last-token logits, decode state)``; the state
+        stacks layer-first, matching :meth:`decode_state_specs`.
+        """
+        c = self.cfg
+        x = nnl.embedding_apply(params["embed"], tokens).astype(c.param_dtype)
+        x = nnl.rmsnorm_apply(params["norm_in"], x)
+
+        def body(xx, p_i):
+            y, st = self._layer(p_i, xx)
+            return y, st
+
+        x, new_state = jax.lax.scan(body, x, params["layers"])
+        x = nnl.rmsnorm_apply(params["norm_f"], x)
+        logits = (x[:, -1] @ params["embed"]["table"].T.astype(x.dtype)).astype(jnp.float32)
+        return logits, new_state
+
     def decode_state_specs(self, batch: int, cache_len: int) -> dict:
         """cache_len is irrelevant — state is O(1) (the long-context story)."""
         c = self.cfg

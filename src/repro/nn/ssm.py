@@ -4,11 +4,19 @@ Both are driven by the SSAM linear-recurrence plan (DESIGN.md §3): the
 elementwise recurrence ``h_t = a_t·h_{t−1} + b_t`` *is* the paper's Eq. 1
 with the Kogge–Stone dependency graph. Execution paths:
 
-* smoke/small  → :func:`repro.kernels.ops.linear_recurrence` (the SSAM
-  Pallas kernel, interpret-validated) — paper-faithful.
-* production   → chunked matmul forms below (MXU-friendly, O(L²) intra-
-  chunk attention-like matmuls + state passing across chunks), the
-  beyond-paper optimized path recorded in EXPERIMENTS.md §Perf.
+* ``impl='engine'`` (TPU default) → the chunk-streamed SSAM schedule
+  (DESIGN.md §12): per-chunk transfer pairs run through the engine's
+  carry op inside a ``lax.scan``, contracted against C/r immediately, so
+  peak live state is O(B·chunk·rows) at any context length — forward and
+  backward (chunk-boundary checkpointing).
+* ``impl='engine_unchunked'`` → the monolithic O(T) engine lowering,
+  kept as the validation reference.
+* ``impl='chunked'`` (non-TPU default) → chunked matmul forms below
+  (MXU-friendly, O(L²) intra-chunk attention-like matmuls + state
+  passing across chunks), the beyond-paper optimized path recorded in
+  EXPERIMENTS.md §Perf.
+* ``impl=None`` resolves per backend via
+  :func:`repro.kernels.ops.default_scan_impl`.
 """
 from __future__ import annotations
 
@@ -45,12 +53,13 @@ def _engine_scan_rows(a, b):
     """Run ``h_t = a_t·h_{t−1} + b_t`` through the SSAM engine.
 
     a, b: (..., T) fp32 transfer pairs, time last. Delegates to
-    :func:`repro.kernels.ops.chunked_linear_recurrence`'s engine path —
-    one flatten-to-rows wrapper for both the ops surface and the
-    model-side validation paths.
+    :func:`repro.kernels.ops.chunked_linear_recurrence`'s monolithic
+    engine path — one flatten-to-rows wrapper for the model-side
+    validation paths (the streamed schedules below never materialize
+    the full-T pairs in the first place).
     """
     from repro.kernels import ops as kops
-    return kops.chunked_linear_recurrence(a, b, impl="engine")
+    return kops.chunked_linear_recurrence(a, b, impl="engine_unchunked")
 
 
 def _selective_scan_engine(delta, A_log, Bmat, Cmat, x):
@@ -75,20 +84,77 @@ def _selective_scan_engine(delta, A_log, Bmat, Cmat, x):
     return y.astype(x.dtype), hs[:, -1]
 
 
+def _selective_scan_engine_stream(delta, A_log, Bmat, Cmat, x, *, chunk):
+    """Chunk-streamed engine selective scan (DESIGN.md §12).
+
+    Streams the sequence through ``(B, L, Di, N)`` slabs: each chunk's
+    transfer pairs run as ``B·Di·N`` rows through the engine's carry op
+    and are contracted against ``C`` before the next chunk starts, so
+    peak live state is O(B·L·Di·N) at any T. The ``lax.scan`` carry is
+    the per-row state; the body is ``jax.checkpoint``-wrapped, so the
+    backward saves only chunk-boundary carries and re-runs the engine
+    kernel per chunk — both directions engine-lowered.
+    """
+    from repro.kernels import ops as kops
+
+    Bsz, T, Di = x.shape
+    N = A_log.shape[1]
+    L = min(chunk, T)
+    pad = (-T) % L
+    if pad:
+        # Δ pads with zeros: a = exp(0·A) = 1, b = 0 — identity transfers.
+        delta = jnp.pad(delta, ((0, 0), (0, pad), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    nc = (T + pad) // L
+    A = -jnp.exp(A_log.astype(jnp.float32))                       # (Di, N)
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape(Bsz, nc, L, *t.shape[2:]), 1, 0)
+
+    dc, Bc, Cc, xc = map(to_chunks, (delta, Bmat, Cmat, x))
+
+    def chunk_step(h, args):
+        d_k, B_k, C_k, x_k = args                                  # (B, L, …)
+        d32 = d_k.astype(jnp.float32)
+        a = jnp.exp(d32[..., None] * A)                            # (B,L,Di,N)
+        b = (d32 * x_k.astype(jnp.float32))[..., None] \
+            * B_k.astype(jnp.float32)[:, :, None, :]
+        rows_a = jnp.moveaxis(a, 1, -1).reshape(-1, L)             # (B·Di·N, L)
+        rows_b = jnp.moveaxis(b, 1, -1).reshape(-1, L)
+        hs, h_new = kops.linear_recurrence_carry(rows_a, rows_b, h)
+        hs = jnp.moveaxis(hs.reshape(Bsz, Di, N, L), -1, 1)        # (B,L,Di,N)
+        y = jnp.einsum("blin,bln->bli", hs, C_k.astype(jnp.float32))
+        return h_new, y
+
+    h0 = jnp.zeros((Bsz * Di * N, 1), jnp.float32)
+    h_last, ys = jax.lax.scan(jax.checkpoint(chunk_step), h0, (dc, Bc, Cc, xc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, T + pad, Di)[:, :T]
+    return y.astype(x.dtype), h_last.reshape(Bsz, Di, N)
+
+
 def selective_scan(delta, A_log, Bmat, Cmat, x, *, chunk: int = 128,
-                   work_dtype=jnp.float32, impl: str = "chunked"):
+                   work_dtype=jnp.float32, impl: str | None = None):
     """Chunked selective scan.
 
     delta, x: (B, T, Di); Bmat, Cmat: (B, T, N); A_log: (Di, N).
     h[t] = exp(Δ_t·A)⊙h[t−1] + (Δ_t·x_t)·B_t ;  y[t] = C_t·h[t] + D-term (caller).
     Only one chunk of the (B, L, Di, N) tensor is ever live.
 
-    ``impl``: 'chunked' (default, MXU-friendly production schedule) or
-    'engine' (the same recurrence through ``run_scan_plan`` blocks —
-    the SSAM kernel the benchmarks measure; outputs agree to fp32
-    tolerance).
+    ``impl``: ``None`` resolves per backend
+    (:func:`repro.kernels.ops.default_scan_impl` — the streamed engine
+    on TPU); 'chunked' is the MXU-friendly matmul schedule; 'engine' the
+    chunk-streamed SSAM schedule (O(chunk) live state, the production
+    engine path); 'engine_unchunked' the monolithic O(T) engine
+    validation lowering. All agree to fp32 tolerance.
     """
+    from repro.kernels import ops as kops
+    impl = impl or kops.default_scan_impl()
     if impl == "engine":
+        return _selective_scan_engine_stream(delta, A_log, Bmat, Cmat, x,
+                                             chunk=chunk)
+    if impl == "engine_unchunked":
         return _selective_scan_engine(delta, A_log, Bmat, Cmat, x)
     if impl != "chunked":
         raise ValueError(impl)
@@ -132,7 +198,7 @@ def selective_scan(delta, A_log, Bmat, Cmat, x, *, chunk: int = 128,
 
 def mamba_apply(p, x, *, ssm_state: int, conv_k: int = 4, chunk: int = 128,
                 state=None, work_dtype=jnp.float32, conv_impl: str | None = None,
-                scan_impl: str = "chunked"):
+                scan_impl: str | None = None):
     """Mamba block. Train/prefill: state=None. Decode: state dict with
     {"h": (B, Di, N), "conv": (B, K−1, Di)} — O(1) per-token step.
 
@@ -141,8 +207,8 @@ def mamba_apply(p, x, *, ssm_state: int, conv_k: int = 4, chunk: int = 128,
     on TPU, Pallas interpret elsewhere; differentiable via its adjoint
     plan, so training runs on the engine by default);
     'interpret'/'pallas'/'xla' force a path. ``scan_impl``
-    ('chunked' | 'engine') selects the selective-scan execution, see
-    :func:`selective_scan`.
+    (None | 'chunked' | 'engine' | 'engine_unchunked') selects the
+    selective-scan execution, see :func:`selective_scan`.
     """
     from repro.kernels import ops as kops
 
@@ -248,8 +314,60 @@ def _wkv6_engine(r, k, v, logw, u):
     return y.astype(r.dtype), S[:, -1]
 
 
+def _wkv6_engine_stream(r, k, v, logw, u, *, chunk):
+    """Chunk-streamed engine WKV6 (DESIGN.md §12).
+
+    Streams the sequence through ``(B, L, H, K, V)`` slabs: each chunk's
+    diagonal state recurrence runs as ``B·H·K·V`` rows through the
+    engine's carry op, the output contraction
+    ``y_t = r_t·S_{t−1} + (r⊙u⊙k)·v`` happens before the next chunk, and
+    the ``lax.scan`` carry is the flattened state matrix — peak live
+    state O(B·L·H·K·V) at any T, checkpointed backward.
+    """
+    from repro.kernels import ops as kops
+
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    L = min(chunk, T)
+    pad = (-T) % L
+    if pad:
+        # logw pads with zeros: a = exp(0) = 1; k·v = 0 — identity steps.
+        z = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, logw = z(r), z(k), z(v), z(logw)
+    nc = (T + pad) // L
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape(B, nc, L, H, -1), 1, 0)
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, logw))
+    u32 = u[None, None].astype(jnp.float32)
+
+    def chunk_step(S, args):
+        r_k, k_k, v_k, w_k = args                                  # (B, L, H, ·)
+        k32 = k_k.astype(jnp.float32)
+        a = jnp.broadcast_to(
+            jnp.exp(w_k.astype(jnp.float32))[..., None], (B, L, H, K, V))
+        b = k32[..., None] * v_k.astype(jnp.float32)[..., None, :]
+        rows_a = jnp.moveaxis(a, 1, -1).reshape(-1, L)             # (B·H·K·V, L)
+        rows_b = jnp.moveaxis(b, 1, -1).reshape(-1, L)
+        Ss, S_new = kops.linear_recurrence_carry(rows_a, rows_b, S)
+        Ss = jnp.moveaxis(Ss.reshape(B, H, K, V, L), -1, 1)        # (B,L,H,K,V)
+        S_prev = jnp.concatenate(
+            [S.reshape(B, 1, H, K, V), Ss[:, :-1]], axis=1)
+        r32 = r_k.astype(jnp.float32)
+        diag = (r32 * u32 * k32).sum(-1)
+        y = jnp.einsum("blhk,blhkv->blhv", r32, S_prev) \
+            + diag[..., None] * v_k.astype(jnp.float32)
+        return S_new, y
+
+    S0 = jnp.zeros((B * H * K * V, 1), jnp.float32)
+    S_last, ys = jax.lax.scan(jax.checkpoint(chunk_step), S0, (rc, kc, vc, wc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T + pad, H, V)[:, :T]
+    return y.astype(r.dtype), S_last.reshape(B, H, K, V)
+
+
 def wkv6_chunked(r, k, v, logw, u, *, chunk: int = 64,
-                 work_dtype=jnp.float32, impl: str = "chunked"):
+                 work_dtype=jnp.float32, impl: str | None = None):
     """Chunked WKV6: y_t = r_t·S_{t−1} + (r_t⊙u⊙k_t)·v_t,
     S_t = diag(exp(logw_t))·S_{t−1} + k_tᵀv_t.
 
@@ -259,10 +377,18 @@ def wkv6_chunked(r, k, v, logw, u, *, chunk: int = 64,
     operator as the SSAM linear-recurrence plan.
     Returns (y, S_last) with S_last (B, H, K, V).
 
-    ``impl``: 'chunked' (default) or 'engine' — the identical recurrence
-    through ``run_scan_plan`` Kogge–Stone blocks (fp32-tolerance equal).
+    ``impl``: ``None`` resolves per backend
+    (:func:`repro.kernels.ops.default_scan_impl` — the streamed engine
+    on TPU); 'chunked' the matmul schedule; 'engine' the chunk-streamed
+    engine recurrence (O(chunk) live state); 'engine_unchunked' the
+    monolithic O(T) engine validation lowering (fp32-tolerance equal).
     """
+    if impl is None:
+        from repro.kernels import ops as kops
+        impl = kops.default_scan_impl()
     if impl == "engine":
+        return _wkv6_engine_stream(r, k, v, logw, u, chunk=chunk)
+    if impl == "engine_unchunked":
         return _wkv6_engine(r, k, v, logw, u)
     if impl != "chunked":
         raise ValueError(impl)
@@ -341,11 +467,11 @@ def _token_shift(x, shifted=None):
 
 def rwkv6_timemix_apply(p, x, *, n_heads: int, head_k: int, head_v: int,
                         chunk: int = 64, state=None,
-                        work_dtype=jnp.float32, wkv_impl: str = "chunked"):
+                        work_dtype=jnp.float32, wkv_impl: str | None = None):
     """RWKV6 time-mix. state (decode): {"S": (B,H,K,V), "prev": (B,1,d)}.
 
-    ``wkv_impl`` selects the WKV execution ('chunked' | 'engine'), see
-    :func:`wkv6_chunked`.
+    ``wkv_impl`` selects the WKV execution (None | 'chunked' | 'engine' |
+    'engine_unchunked'), see :func:`wkv6_chunked`.
     """
     B, T, d = x.shape
     H, K, V = n_heads, head_k, head_v

@@ -100,11 +100,19 @@ class TestFusePlans:
         with pytest.raises(ValueError, match="per-lane"):
             fuse_plans(depthwise_conv1d_plan(4), depthwise_conv1d_plan(4))
         with pytest.raises(ValueError, match="mid-chain"):
-            biased = dataclasses.replace(
-                p5, epilogue=normalize_epilogue("bias"))
-            fuse_plans(biased, p5)
+            res = dataclasses.replace(
+                p5, epilogue=normalize_epilogue("residual_add"))
+            fuse_plans(res, p5)
         with pytest.raises(ValueError, match="already a fused chain"):
             fuse_plans(fuse_plans(p5, p5), p5)
+
+    def test_fuse_accepts_mid_chain_bias(self):
+        """bias is chain-legal anywhere since it applies to the whole
+        pad-once intermediate (residual_add stays final-only)."""
+        p5 = _plan("2d5pt")
+        biased = dataclasses.replace(p5, epilogue=normalize_epilogue("bias"))
+        fused = fuse_plans(biased, p5)
+        assert fused.stages[0].epilogue[0].op == "bias"
 
 
 # ---------------------------------------------------------------------------
@@ -161,6 +169,41 @@ class TestPipelineEquivalence:
                            epilogue_args=(b, res))
         want = ops.pipeline(x, chain, impl="xla", epilogue_args=(b, res))
         assert_close(got, want)
+
+    def test_mid_chain_bias(self, rng):
+        """Scalar bias mid-chain: fused == unfused == oracle — it adds
+        to the whole pad-once intermediate, so the trapezoidal boundary
+        stays shared across the three paths."""
+        x = jnp.array(rng.standard_normal((24, 48)), jnp.float32)
+        b0, b1 = jnp.float32(0.37), jnp.float32(-1.2)
+        chain = [("2d5pt", ("bias", "gelu")), ("2d9pt", "bias")]
+        epi = (b0, b1)
+        fused = ops.pipeline(x, chain, impl="interpret", fuse=True,
+                             epilogue_args=epi)
+        unfused = ops.pipeline(x, chain, impl="interpret", fuse=False,
+                               epilogue_args=epi)
+        oracle = ops.pipeline(x, chain, impl="xla", epilogue_args=epi)
+        assert_close(fused, unfused)
+        assert_close(fused, oracle)
+
+    def test_mid_chain_bias_grads(self, rng):
+        """Fused backward threads the mid-chain bias cotangent: dx and
+        both dbias match jax AD on the xla oracle."""
+        x = jnp.array(rng.standard_normal((20, 40)), jnp.float32)
+        chain = [("2d5pt", "bias"), ("2d9pt", ("bias", "gelu"))]
+
+        def loss(impl, xx, b0, b1):
+            y = ops.pipeline(xx, chain, impl=impl, fuse=(impl != "xla"),
+                             epilogue_args=(b0, b1))
+            return jnp.sum(y ** 2)
+
+        b0, b1 = jnp.float32(0.5), jnp.float32(-0.25)
+        ge = jax.grad(lambda *a: loss("interpret", *a),
+                      argnums=(0, 1, 2))(x, b0, b1)
+        gr = jax.grad(lambda *a: loss("xla", *a),
+                      argnums=(0, 1, 2))(x, b0, b1)
+        for a, b in zip(ge, gr):
+            assert_close(a, b, tol=1e-3)
 
     def test_pipeline_interior_matches_per_op_loop(self, rng):
         """Pad-once chain semantics agree with the naive per-op loop on
@@ -408,7 +451,11 @@ class TestRejections:
         with pytest.raises(ValueError, match="unknown stencil"):
             ops.pipeline(x, ["nope"], impl="interpret")
         with pytest.raises(ValueError, match="mid-chain"):
-            ops.pipeline(x, [("2d5pt", "bias"), "2d9pt"], impl="interpret")
+            ops.pipeline(x, [("2d5pt", "residual_add"), "2d9pt"],
+                         impl="interpret", epilogue_args=(x,))
+        with pytest.raises(ValueError, match="scalar"):
+            ops.pipeline(x, [("2d5pt", "bias"), "2d9pt"], impl="interpret",
+                         epilogue_args=(jnp.ones((32,)),))
         with pytest.raises(ValueError, match="is 3-D"):
             ops.pipeline(x, ["3d7pt"], impl="interpret")
         with pytest.raises(ValueError, match="at least one stage"):
