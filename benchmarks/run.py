@@ -13,13 +13,15 @@ Prints ``name,us_per_call,derived`` CSV rows per the repo convention.
 | bench_grad (--grad)       | (beyond paper) | fwd vs fwd+bwd through the adjoint plans, vs §5 fwd+adjoint cost |
 | bench_fused (--fused)     | (beyond paper) | fused plan pipelines + epilogues vs the unfused HBM-round-trip sequence (stencil chain, Whisper stem) |
 | bench_scan_chunked (--scan-chunked) | (beyond paper) | chunk-streamed engine scans vs monolithic engine vs XLA chunked: tokens/sec + peak temp memory at long T |
+| bench_strategy (--strategy) | §5 + (beyond paper) | lanes (VPU shift-fma) vs mxu (im2row matmul) lowering per shape class: MB/s both ways, the tuner's pick, and §5 predicted-vs-measured ranking agreement |
 | bench_lm_roofline         | (assignment)   | summary of dry-run roofline artifacts |
 
 ``--json PATH`` additionally writes every row as machine-readable JSON
 (name, µs, parsed derived fields + run metadata) — the committed
 ``BENCH_5.json`` perf-trajectory artifact comes from
-``--fused --json BENCH_5.json`` and ``BENCH_6.json`` from
-``--scan-chunked --json BENCH_6.json``.
+``--fused --json BENCH_5.json``, ``BENCH_6.json`` from
+``--scan-chunked --json BENCH_6.json`` and ``BENCH_7.json`` from
+``--strategy auto --json BENCH_7.json``.
 
 The container is CPU-only: wall-times are CPU XLA numbers that compare
 *schedules*, not TPU performance; TPU performance is reported by the
@@ -685,6 +687,111 @@ def bench_fused(size2d: int = 192, B: int = 1, n_mels: int = 8,
 
 
 # ---------------------------------------------------------------------------
+# Lowering strategy: VPU lanes vs MXU im2row matmul (--strategy)
+# ---------------------------------------------------------------------------
+
+def bench_strategy(strategy: str = "auto", size2d: int = 160,
+                   size3d: int = 24, batch: int = 2,
+                   channels: tuple[int, int] = (4, 8), img: int = 48):
+    """Lanes vs MXU lowering per shape class — the BENCH_7 artifact.
+
+    For a tap-count sweep of Table-3 stencils plus an NCHW conv (whose
+    ``C_in·taps`` contraction is the MXU's best case), measures the same
+    plan through both lowerings (``strategy='lanes'`` shift-fma vs
+    ``strategy='mxu'`` im2row matmul), then lets the §5+MXU cost model
+    and the measuring tuner each pick — reporting, per shape:
+
+    * MB/s of useful traffic under each strategy,
+    * the model's predicted winner and the measured winner (their
+      agreement fraction across shapes is the §5 validation number),
+    * the tuner's recorded choice and its speedup over the fixed
+      pre-v5 default (always-lanes).
+
+    With ``strategy='lanes'`` or ``'mxu'`` only that lowering is
+    measured (a pinned-strategy smoke run). Interpret-mode wall-times
+    compare schedules, not TPU performance — but the *algorithm choice*
+    is real work either way (taps·rolls vs one gathered contraction).
+    """
+    from repro.core import tuning
+    from repro.kernels import ops
+    from repro.kernels import ssam_conv2d, ssam_stencil2d, ssam_stencil3d
+    from repro.kernels.stencils import BENCHMARKS
+
+    rng = np.random.default_rng(0)
+    strategies = ("lanes", "mxu") if strategy == "auto" else (strategy,)
+    names = ["2d5pt", "2d9pt", "2d13pt", "2d25pt", "2d121pt",
+             "3d7pt", "3d27pt"]
+    print(f"# Strategy: lanes vs mxu lowering (2D {size2d}^2, 3D {size3d}^3, "
+          f"NCHW {batch}x{channels[0]}->{channels[1]}x{img}^2; "
+          "interpret-mode wall-time)")
+    agree = total = 0
+
+    def _report(tag, plan, shape, run_fixed, run_cfg):
+        """Measure every strategy, then model-pick, measure-pick and
+        tuner-pick; returns 1 if model and measurement agree."""
+        nonlocal agree, total
+        times, model = {}, {}
+        bytes_useful = int(np.prod(shape)) * 8
+        for s in strategies:
+            t = tuning.measure_us(lambda: run_fixed(s))
+            cands = [c for c in tuning.candidate_configs(plan, shape)
+                     if c.strategy == s]
+            cyc = min(tuning.model_cost(plan, c) for c in cands)
+            times[s], model[s] = t, cyc
+            _row(f"strategy_{tag}_{s}", t,
+                 f"mb_s={bytes_useful / max(t, 1e-9):.2f};"
+                 f"model_cyc={cyc:.1f}")
+        if strategy != "auto":
+            return
+        predicted = min(model, key=model.get)
+        measured = min(times, key=times.get)
+        tuning.clear_cache()
+        runner = lambda cfg: tuning.measure_us(lambda: run_cfg(cfg))
+        tuned = tuning.autotune(plan, shape, runner=runner)
+        choice = tuned.config.strategy or "lanes"
+        t_choice = tuning.measure_us(lambda: run_cfg(tuned.config))
+        total += 1
+        agree += int(predicted == measured)
+        # speedup vs the fixed pre-v5 default: always-lanes at the
+        # family default block — the thing the strategy dimension (plus
+        # per-strategy shortlists) exists to beat.
+        _row(f"strategy_{tag}_choice", t_choice,
+             f"tuner={choice};cfg={'x'.join(map(str, tuned.config.block))};"
+             f"predicted={predicted};measured={measured};"
+             f"agree={int(predicted == measured)};"
+             f"speedup_vs_default={times['lanes'] / max(t_choice, 1e-9):.2f}x")
+
+    for name in names:
+        sdef = BENCHMARKS[name]
+        if sdef.ndim == 2:
+            x = jnp.array(rng.standard_normal((size2d, size2d)), jnp.float32)
+            mod = ssam_stencil2d
+        else:
+            x = jnp.array(rng.standard_normal((size3d,) * 3), jnp.float32)
+            mod = ssam_stencil3d
+        plan = mod.plan_for(sdef)
+        _report(name, plan, x.shape,
+                lambda s, x=x, sdef=sdef: ops.stencil(
+                    x, sdef, impl="interpret", strategy=s),
+                lambda cfg, x=x, sdef=sdef, plan=plan: ops.stencil(
+                    x, sdef, impl="interpret", **cfg.as_kwargs(plan)))
+
+    C_in, C_out = channels
+    xn = jnp.array(rng.standard_normal((batch, C_in, img, img)), jnp.float32)
+    w = jnp.array(rng.standard_normal((C_out, C_in, 3, 3)), jnp.float32)
+    plan = ssam_conv2d.plan_for_nchw(xn.shape, w.shape, "same")
+    _report(f"conv2d_nchw_{C_in}x{C_out}", plan, xn.shape,
+            lambda s: ops.conv2d(xn, w, mode="same", impl="interpret",
+                                 strategy=s),
+            lambda cfg: ops.conv2d(xn, w, mode="same", impl="interpret",
+                                   **cfg.as_kwargs(plan)))
+
+    if strategy == "auto" and total:
+        _row("strategy_model_agreement", 0.0,
+             f"agree_frac={agree / total:.2f};n={total}")
+
+
+# ---------------------------------------------------------------------------
 # LM roofline summary (assignment §Roofline)
 # ---------------------------------------------------------------------------
 
@@ -744,6 +851,13 @@ def main(argv=None) -> None:
              "train-step tokens/sec + peak-temp-memory trajectories over "
              "increasing T (the BENCH_6.json artifact)")
     p.add_argument(
+        "--strategy", default=None, choices=("lanes", "mxu", "auto"),
+        help="run the lowering-strategy benchmark: lanes (VPU shift-fma) "
+             "vs mxu (im2row matmul) MB/s per Table-3 shape class + NCHW "
+             "conv, the tuner's per-shape pick and the §5 predicted-vs-"
+             "measured ranking agreement (the BENCH_7.json artifact uses "
+             "'auto'; 'lanes'/'mxu' measure only that lowering)")
+    p.add_argument(
         "--json", default=None, metavar="PATH",
         help="also write every benchmark row as machine-readable JSON "
              "(per-kernel µs, MB/s, tuned config, §5 prediction, fused vs "
@@ -762,6 +876,8 @@ def main(argv=None) -> None:
             bench_fused()
         elif args.scan_chunked:
             bench_scan_chunked()
+        elif args.strategy:
+            bench_strategy(args.strategy)
         elif args.batch is not None or args.channels is not None:
             ch = tuple(int(v) for v in (args.channels or "3,8").split(","))
             bench_conv2d_batched(args.batch if args.batch is not None else 4,

@@ -4,6 +4,11 @@ Format: one directory per step, ``step_<n>/``:
   * ``tree.msgpack.zst``  — flattened {path: tensor-bytes} + dtype/shape
     metadata, zstd-compressed msgpack (both libs are local; no orbax).
   * ``META.json``         — step, timestamp, logical shapes, config digest.
+  * ``TUNING.json``       — the autotuner's sidecar entries at save time
+    (schema-stamped, see ``repro.core.tuning``); restoring a checkpoint
+    merges them into the live sidecar so tuned kernel winners survive a
+    host move along with the weights. Merge never clobbers: an entry the
+    new host has already re-measured wins over the shipped one.
   * ``COMMIT``            — written last; a directory without it is an
     incomplete (crashed) save and is ignored by ``latest_step`` —
     atomicity without rename tricks on network filesystems.
@@ -34,6 +39,10 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
+
+from ..core import tuning as _tuning
+
+_TUNING = "TUNING.json"
 
 try:  # zstd compression is optional: bare environments fall back to raw
     import zstandard
@@ -91,6 +100,10 @@ def save_checkpoint(directory: str, step: int, tree, *, meta: dict | None = None
         os.remove(stale_path)
     with open(os.path.join(d, "META.json"), "w") as f:
         json.dump({"step": step, "time": time.time(), **(meta or {})}, f)
+    entries = _tuning.sidecar_entries()
+    if entries:
+        with open(os.path.join(d, _TUNING), "w") as f:
+            json.dump({"version": 1, "entries": entries}, f)
     with open(os.path.join(d, "COMMIT"), "w") as f:
         f.write("ok")
     return d
@@ -117,6 +130,14 @@ def load_checkpoint(directory: str, step: int, template, *, shardings=None):
         for k, v in payload.items()
     }
     tree = _unflatten_into(template, flat)
+    tuning_path = os.path.join(d, _TUNING)
+    if os.path.exists(tuning_path):
+        with open(tuning_path) as f:
+            doc = json.load(f)
+        # Never clobber: entries this host already tuned (possibly under a
+        # newer schema) win over the shipped ones; stale-schema shipped
+        # entries are dropped by merge_sidecar_entries itself.
+        _tuning.merge_sidecar_entries(doc.get("entries", {}))
     if shardings is not None:
         tree = jax.tree.map(
             lambda x, s: jax.device_put(x, s), tree, shardings)

@@ -23,3 +23,8 @@ SMOKE = dataclasses.replace(
 # Smoke config with the real mel conv stem through the SSAM engine's
 # reduce-axes plan (whisper-base uses n_mels=80; scaled with the rest).
 SMOKE_CONV = dataclasses.replace(SMOKE, conv_frontend=True, n_mels=8)
+
+# Same stem pinned to the MXU (im2row matmul) lowering — the stem's
+# C_in·taps contraction is exactly the shape class where the tensor-core
+# path wins (DESIGN.md §13); the tuner would pick it, this pins it.
+SMOKE_CONV_MXU = dataclasses.replace(SMOKE_CONV, conv_strategy="mxu")

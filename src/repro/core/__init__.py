@@ -48,7 +48,8 @@ from .executor import (
     execute_linear_recurrence,
     execute_scan,
 )
-from .engine import run_scan_plan, run_weight_grad_plan, run_window_plan
+from .engine import (run_scan_plan, run_weight_grad_plan, run_window_plan,
+                     run_window_plan_mxu)
 from .fuse import fuse_plans
 from .adjoint import (
     adjoint_coeff_array,
@@ -91,6 +92,7 @@ __all__ = [
     "run_scan_plan",
     "run_weight_grad_plan",
     "run_window_plan",
+    "run_window_plan_mxu",
     "adjoint_coeff_array",
     "input_adjoint_plan",
     "reversed_recurrence_coeffs",

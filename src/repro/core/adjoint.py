@@ -159,9 +159,14 @@ def input_adjoint_plan(plan: SystolicPlan) -> SystolicPlan:
             "which is not a windowed plan; the ops layer dilates the "
             "cotangent and transposes the stride-free plan instead")
     if plan.stages:
+        # stage strategies ride the replace below unchanged; a strategy
+        # pinned only on the composite pushes down so the transposed
+        # chain stays on the same lowering (an mxu forward transposes to
+        # an mxu backward, DESIGN.md §13)
         from .fuse import fuse_plans
         return fuse_plans(*[
-            input_adjoint_plan(dataclasses.replace(s, epilogue=()))
+            input_adjoint_plan(dataclasses.replace(
+                s, epilogue=(), strategy=s.strategy or plan.strategy))
             for s in reversed(plan.stages)])
     exts = plan.exts
     reflected = [

@@ -33,6 +33,7 @@ is a new plan builder, not a new kernel body.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -112,15 +113,129 @@ def _tap_read(xb: jnp.ndarray, tap: Tap, valid: tuple[int, ...]) -> jnp.ndarray:
     return xb[tap.row_offset : tap.row_offset + valid[0], :]
 
 
-def _apply_plan_once(xb, stage: SystolicPlan, w_ref, variant: str, acc_dtype):
+MXU_TAP_ALIGN = 8       # fp32 sublane tiling: taps pad to (8·k, lanes)
+
+
+def _flat_taps(stage: SystolicPlan) -> list[tuple[int, Tap]]:
+    """The tap set flattened to ``(cumulative_shift, tap)`` pairs.
+
+    The cumulative lane shift is the tap's horizontal offset in
+    shift_data coordinates: output lane ``l`` reads input lane
+    ``l + cum`` (strided plans: ``l·stride + cum``).
+    """
+    out, cum = [], 0
+    for step in stage.steps:
+        cum += step.shift
+        for tap in step.taps:
+            out.append((cum, tap))
+    return out
+
+
+def _apply_plan_mxu(xb, stage: SystolicPlan, w_ref, acc_dtype):
+    """One application of ``stage`` as an im2row matmul on the MXU.
+
+    Instead of walking the tap set with per-tap FMAs (the VPU 'lanes'
+    schedule), gather every tap's shifted view of the block into a
+    ``(taps, out_elems)`` operand **in VMEM** — im2row over the tap set,
+    never materialized in HBM — pad the tap dimension to the fp32
+    sublane tile (``8·k`` rows, zero rows contribute nothing) and
+    contract it with the coefficient vector in ONE
+    ``jax.lax.dot_general`` with ``preferred_element_type=f32``, which
+    Mosaic routes to the MXU (DESIGN.md §13). The per-lane sums equal
+    the shift_data association, so both strategies agree to fp32
+    tolerance. For NCHW reduce plans this runs once per ``C_in``
+    iterate of the reduce sweep into the same fp32 accumulator: the
+    effective contraction dimension is ``C_in·taps``.
+
+    Per-lane coefficient rows ('perlane', depthwise conv1d) have no
+    shared coefficient vector; they contract the tap dimension under a
+    lane-axis *batch* dimension instead — a batched mat-vec, still a
+    single MXU-shaped ``dot_general``.
+    """
+    exts = stage.exts
+    stride = stage.stride_per_axis()
+    strided = any(v > 1 for v in stride)
+    taps = _flat_taps(stage)
+    if strided:
+        sh, sw = stride
+        out_sp = tuple((n - e) // v + 1
+                       for n, e, v in zip(xb.shape, exts, stride))
+    else:
+        # shift_data coordinates: out lane l ← in lane l + cum, so the
+        # tap view is a static crop — no roll, no valid-lane shuffle.
+        out_sp = tuple(n - (e - 1) for n, e in zip(xb.shape, exts))
+    views = []
+    for cum, tap in taps:
+        if strided:
+            views.append(xb[
+                tap.row_offset : tap.row_offset + out_sp[0] * sh : sh,
+                cum : cum + out_sp[1] * sw : sw,
+            ])
+        elif xb.ndim == 3:
+            views.append(xb[
+                tap.z_offset : tap.z_offset + out_sp[0],
+                tap.row_offset : tap.row_offset + out_sp[1],
+                cum : cum + out_sp[2],
+            ])
+        else:
+            views.append(xb[
+                tap.row_offset : tap.row_offset + out_sp[0],
+                cum : cum + out_sp[1],
+            ])
+    T = len(views)
+    Tp = -(-T // MXU_TAP_ALIGN) * MXU_TAP_ALIGN
+    if stage.coeff_mode == "perlane":
+        # (T, R, L) taps × (T, L) per-lane rows: contract T, batch L.
+        A = jnp.stack(views)
+        Wm = jnp.stack([w_ref[tap.coeff_id[-1], :].astype(acc_dtype)
+                        for _, tap in taps])
+        if Tp != T:
+            A = jnp.pad(A, ((0, Tp - T),) + ((0, 0),) * (A.ndim - 1))
+            Wm = jnp.pad(Wm, ((0, Tp - T), (0, 0)))
+        out = jax.lax.dot_general(
+            Wm, A, dimension_numbers=(((0,), (0,)), ((1,), (2,))),
+            preferred_element_type=jnp.float32)
+        return out.T.astype(acc_dtype)      # (L, R) → (R, L)
+    # (1, 8·k) coefficient row × (8·k, out_elems) im2row operand.
+    if stage.coeff_mode == "table":
+        # Compile-time immediates cannot ride a materialized coefficient
+        # vector (a Pallas kernel may not capture array constants): fold
+        # each scalar into its im2row row and contract with a broadcast
+        # ones row — the same single dot_general over the tap dimension.
+        A = jnp.stack([v.reshape(-1) * stage.coeffs[tap.coeff_id[-1]]
+                       for v, (_, tap) in zip(views, taps)])
+        if Tp != T:
+            A = jnp.pad(A, ((0, Tp - T), (0, 0)))
+        c = jnp.ones((Tp,), acc_dtype)      # splat; zero rows contribute 0
+    else:                                   # dense runtime filter
+        pre = (0,) * (stage.out_axes + stage.reduce_axes)
+        A = jnp.stack([v.reshape(-1) for v in views])
+        c = jnp.stack([w_ref[pre + tap.coeff_id].astype(acc_dtype)
+                       for _, tap in taps])
+        if Tp != T:
+            A = jnp.pad(A, ((0, Tp - T), (0, 0)))
+            c = jnp.pad(c, (0, Tp - T))
+    out = jax.lax.dot_general(
+        c.reshape(1, Tp), A, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    return out.reshape(out_sp).astype(acc_dtype)
+
+
+def _apply_plan_once(xb, stage: SystolicPlan, w_ref, variant: str, acc_dtype,
+                     strategy: str = "lanes"):
     """One valid application of ``stage``'s schedule on the block ``xb``.
 
     Dense (stride-1) plans run either schedule variant (DESIGN.md §2).
     Output-strided plans use the data-stationary strided read directly —
     output lane ``l`` gathers input lane ``l·stride + cum`` per column
     step, so the kernel computes only the lanes the stride keeps instead
-    of the dense result it would subsample.
+    of the dense result it would subsample. ``strategy='mxu'`` replaces
+    the whole tap walk with the im2row matmul of
+    :func:`_apply_plan_mxu`; the ``variant`` knob is then moot (there
+    are no rolls to re-associate).
     """
+    if strategy == "mxu":
+        return _apply_plan_mxu(xb, stage, w_ref, acc_dtype)
     exts = stage.exts
     M = stage.M
     stride = stage.stride_per_axis()
@@ -222,7 +337,11 @@ def _window_kernel(*refs, plan: SystolicPlan, block: tuple[int, ...],
             if stage.coeff_mode == "dense":
                 w_ref = w_refs[wi]
                 wi += 1
-            xb = _apply_plan_once(xb, stage, w_ref, variant, acc_dtype)
+            # A stage's own pinned strategy wins; otherwise it inherits
+            # the chain's (the tuner pins the chain as ONE kernel).
+            xb = _apply_plan_once(xb, stage, w_ref, variant, acc_dtype,
+                                  strategy=stage.strategy or plan.strategy
+                                  or "lanes")
             if si < len(plan.stages) - 1:
                 # mid-chain epilogues fix zero or are a scalar bias
                 # (fuse_plans); either way they apply to the whole
@@ -238,7 +357,8 @@ def _window_kernel(*refs, plan: SystolicPlan, block: tuple[int, ...],
     else:
         w_ref = w_refs[0] if n_w else None
         for _ in range(time_steps):
-            xb = _apply_plan_once(xb, plan, w_ref, variant, acc_dtype)
+            xb = _apply_plan_once(xb, plan, w_ref, variant, acc_dtype,
+                                  strategy=plan.strategy or "lanes")
     res = xb[tuple(slice(0, b) for b in block)]
     o_idx = (0,) * (nb + no) if nb + no else ...
 
@@ -266,7 +386,7 @@ def _window_kernel(*refs, plan: SystolicPlan, block: tuple[int, ...],
 @functools.partial(
     jax.jit,
     static_argnames=("plan", "block", "time_steps", "variant", "interpret",
-                     "acc_dtype"),
+                     "acc_dtype", "strategy"),
 )
 def run_window_plan(
     x: jax.Array,
@@ -279,6 +399,7 @@ def run_window_plan(
     interpret: bool = True,
     acc_dtype=jnp.float32,
     epilogue_args: tuple = (),
+    strategy: str | None = None,
 ) -> jax.Array:
     """Lower a windowed plan to a Pallas call and run it.
 
@@ -299,6 +420,8 @@ def run_window_plan(
         ``bias`` (per-C_out for out-axes plans, per-lane for perlane
         plans, scalar otherwise; always scalar mid-chain) and/or
         ``residual_add`` (shaped like the output, final stage only).
+      strategy: pin the lowering strategy for this call ('lanes' or
+        'mxu', DESIGN.md §13); None keeps whatever the plan carries.
 
     Returns:
       The plan's output, ``batch + out_axes + spatial``-shaped: per
@@ -306,10 +429,21 @@ def run_window_plan(
       stride + 1``; reduce axes are contracted away (fp32 grid
       accumulator).
     """
+    if strategy is not None:
+        # kwarg convenience for the thin family wrappers + tuner replay:
+        # the strategy still lives on the plan IR (adjoints/fusion
+        # inherit it from there), this just pins it at the call site.
+        plan = dataclasses.replace(plan, strategy=strategy)
     nb, nr, no, nd = (plan.batch_axes, plan.reduce_axes, plan.out_axes,
                       plan.ndim_spatial)
     assert x.ndim == nb + nr + nd, (x.shape, nb, nr, nd)
     assert len(block) == nd, (block, nd)
+    for p in (plan,) + plan.stages:
+        if p.strategy not in (None, "lanes", "mxu"):
+            raise ValueError(
+                f"unknown lowering strategy {p.strategy!r} on {p.kind!r}: "
+                "expected None (auto), 'lanes' (VPU shift schedule) or "
+                "'mxu' (im2row dot_general, DESIGN.md §13)")
     if nr or no:
         assert plan.coeff_mode == "dense" and w is not None, (
             "reduce/out axes need a dense runtime coefficient array")
@@ -438,6 +572,18 @@ def run_window_plan(
     )(*operands)
     return out[(slice(None),) * (nb + no)
                + tuple(slice(0, o) for o in out_sp)]
+
+
+def run_window_plan_mxu(x: jax.Array, w=None, *, plan: SystolicPlan, **kw):
+    """:func:`run_window_plan` with the tap-set contraction forced onto
+    the MXU: im2row over the tap set in VMEM + one ``dot_general`` per
+    block application (DESIGN.md §13). Equivalent to pinning
+    ``strategy='mxu'`` on the plan (and on every fused stage, via
+    inheritance); same signature, same output to fp32 tolerance as the
+    lanes schedule.
+    """
+    return run_window_plan(
+        x, w, plan=dataclasses.replace(plan, strategy="mxu"), **kw)
 
 
 # ---------------------------------------------------------------------------

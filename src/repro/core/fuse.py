@@ -59,6 +59,10 @@ from .plan import SystolicPlan, epilogue_operand_stages
 
 def _check_stage(i: int, p: SystolicPlan, n: int) -> None:
     tag = f"fuse_plans: stage {i} ({p.kind!r})"
+    if p.strategy not in (None, "lanes", "mxu"):
+        raise ValueError(
+            f"{tag} has unknown lowering strategy {p.strategy!r}: expected "
+            "None (auto), 'lanes' or 'mxu' (DESIGN.md §13)")
     if p.combine != "fma":
         raise ValueError(
             f"{tag} is a scan plan (combine={p.combine!r}); only windowed "
@@ -146,6 +150,14 @@ def fuse_plans(*plans: SystolicPlan) -> SystolicPlan:
                 f"fuse_plans: stage {i} has batch_axes={p.batch_axes} != "
                 f"{head.batch_axes}; every stage must see the same batch")
 
+    strategies = {p.strategy for p in plans if p.strategy is not None}
+    if len(strategies) > 1:
+        raise ValueError(
+            "fuse_plans: stages pin conflicting lowering strategies "
+            f"{sorted(strategies)}: the chain lowers as ONE kernel over a "
+            "shared VMEM tile, so every stage must agree (pin one strategy "
+            "for the whole chain, or leave stages on auto — DESIGN.md §13)")
+
     exts = tuple(
         1 + sum(p.exts[a] - 1 for p in plans)
         for a in range(head.ndim_spatial))
@@ -167,6 +179,9 @@ def fuse_plans(*plans: SystolicPlan) -> SystolicPlan:
         coeff_mode="dense" if any(p.coeff_mode == "dense" for p in plans)
         else "table",
         epilogue=(),                    # stage epilogues live on the stages
+        # one pinned stage pins the chain (single kernel); else auto —
+        # the engine resolves each stage as stage.strategy or composite's
+        strategy=strategies.pop() if strategies else None,
     )
 
 

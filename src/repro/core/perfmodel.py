@@ -22,7 +22,17 @@ from .plan import SystolicPlan
 
 @dataclasses.dataclass(frozen=True)
 class HardwareLatencies:
-    """Per-warp (GPU) / per-VREG (TPU) op latencies in cycles."""
+    """Per-warp (GPU) / per-VREG (TPU) op latencies in cycles.
+
+    The two ``t_mxu_*`` terms price the DESIGN.md §13 im2row lowering:
+    a matmul unit (MXU / tensor core) retires MACs far faster than the
+    vector unit (``t_mxu_mac ≪ t_mad``), but every tap row of the
+    im2row operand must first be *staged* — gathered as a shifted view
+    into the matmul operand — at roughly a vector-copy per element
+    (``t_mxu_stage``, overlappable with MXU issue). Defaults of 0
+    mean "no matmul unit modeled" (the paper's P100/V100 rows predate
+    the tensor-core formulation of arxiv 2603.00477).
+    """
 
     name: str
     t_shfl: float        # partial-sum interconnect (shuffle / lane roll)
@@ -30,6 +40,8 @@ class HardwareLatencies:
     t_smem_read: float   # scratchpad read (shared memory / VMEM load)
     t_reg: float         # register file access
     t_gmem_read: float   # global/HBM read (coalesced, per warp-equivalent)
+    t_mxu_mac: float = 0.0    # matmul-unit MAC, per VREG-row-normalized elem
+    t_mxu_stage: float = 0.0  # im2row operand staging per tap row element
 
 
 # Paper Table 2 (measured by the authors' micro-benchmarks).
@@ -37,7 +49,15 @@ P100 = HardwareLatencies("P100", t_shfl=33, t_mad=6, t_smem_read=33, t_reg=1, t_
 V100 = HardwareLatencies("V100", t_shfl=22, t_mad=4, t_smem_read=27, t_reg=1, t_gmem_read=300)
 # TPU v5e estimates (DESIGN.md §2): VPU lane roll ≈ 2 cyc, VPU FMA ≈ 1 cyc/VREG,
 # VMEM load ≈ 8 cyc (deep-pipelined), VREG ≈ 0-cost operand, HBM ≈ 100s of cyc.
-TPU_V5E = HardwareLatencies("TPUv5e", t_shfl=2, t_mad=1, t_smem_read=8, t_reg=0, t_gmem_read=200)
+# MXU (§13): a 128×128 systolic MAC per cycle vs the VPU's 8×128 → ~1/16
+# cyc per VREG-row-normalized MAC; staging a tap row into the im2row
+# operand is a VPU copy, largely overlappable with MXU issue → ~0.7.
+# With the 8-row alignment floor these put the lanes/mxu crossover
+# around ~20 taps: 5/9-point stars stay on the VPU, 25/27-point boxes
+# flip to the MXU — the shape dependence of arxiv 2406.08923.
+TPU_V5E = HardwareLatencies("TPUv5e", t_shfl=2, t_mad=1, t_smem_read=8,
+                            t_reg=0, t_gmem_read=200,
+                            t_mxu_mac=1 / 16, t_mxu_stage=0.7)
 
 
 def l_smem(hw: HardwareLatencies, M: int, N: int) -> float:
@@ -77,3 +97,28 @@ def plan_cycles_per_window(hw: HardwareLatencies, plan: SystolicPlan) -> float:
     epi = plan.epilogue_op_count() * hw.t_mad
     return (plan.P * (mads * (hw.t_mad + hw.t_reg))
             + plan.P * shifts * hw.t_shfl + plan.P * epi)
+
+
+def mxu_tap_rows(taps: int, align: int = 8) -> int:
+    """Tap rows of the §13 im2row operand after fp32 sublane alignment:
+    the engine zero-pads the tap dimension to ``8·k`` so the matmul
+    operand is ``(8·k, lanes)``-tiled — padding is priced like real
+    rows (the MXU retires them either way)."""
+    return -(-taps // align) * align
+
+
+def mxu_cycles_per_window(hw: HardwareLatencies, plan: SystolicPlan) -> float:
+    """Price a windowed plan under the §13 MXU strategy.
+
+    Per window step, each (alignment-padded) tap row costs one staged
+    gather (``t_mxu_stage``) plus one MXU MAC (``t_mxu_mac``); there are
+    no lane shifts (the shifted views are static crops) and epilogues
+    stay on the VPU. Small footprints lose to padding (a 5-tap star
+    pays for 8 rows); big tap sets amortize it — exactly the shape
+    dependence arxiv 2406.08923 observes, and the flip the autotuner
+    exists to catch. Fused chains stage each stage's own tap set.
+    """
+    stages = plan.stages or (plan,)
+    rows = sum(mxu_tap_rows(s.mads_per_output_window()) for s in stages)
+    epi = plan.epilogue_op_count() * hw.t_mad
+    return plan.P * (rows * (hw.t_mxu_stage + hw.t_mxu_mac) + epi)

@@ -218,6 +218,16 @@ class SystolicPlan:
     stride: tuple[int, ...] | None = None  # output stride per windowed axis
     stages: tuple["SystolicPlan", ...] = ()  # fused chain (core.fuse); the
     #   top-level fields then carry the *composite* footprint/lead/trail
+    # ---- lowering strategy (DESIGN.md §13) --------------------------------
+    # How the engine executes the tap-set contraction per block:
+    #   None     — auto: lanes unless the autotuner picks otherwise
+    #   'lanes'  — the paper's VPU schedule (lane shifts + per-tap FMA)
+    #   'mxu'    — im2row over the tap set in VMEM + one dot_general on
+    #              the MXU (arxiv 2603.00477's answer to "do we need
+    #              tensor cores for stencils?")
+    # Adjoints and fused chains derive plans with dataclasses.replace, so
+    # the strategy rides the plan IR unchanged through both.
+    strategy: str | None = None
 
     # ---- X geometry: what the engine lowers from --------------------------
     @property
@@ -396,6 +406,7 @@ def conv2d_batched_plan(
 def conv2d_nchw_plan(
     B: int, C_in: int, C_out: int, M: int, N: int,
     *, S: int = TPU_VREG_LANES, P: int = 4, mode: str = "valid",
+    groups: int = 1,
 ) -> SystolicPlan:
     """Batched multi-channel NCHW convolution — the paper's headline
     convolution workload (2.5× over NPP for general 2-D filters),
@@ -416,10 +427,23 @@ def conv2d_nchw_plan(
     shapes, so one plan signature covers every batch/channel count and
     the tuning sidecar's nearest-shape seeding keeps working across
     them (shapes carry B/C; the schedule does not need to).
+
+    ``groups`` validates a grouped convolution (``lax``'s
+    ``feature_group_count``): both channel counts must divide evenly.
+    The returned plan describes ONE group's reduce sweep — its
+    ``reduce_axes`` contraction covers the group's ``C_in/groups``
+    slice; :func:`repro.kernels.ops.conv2d` slices operands per group
+    and runs this same plan over each (depthwise-2d is
+    ``groups == C_in``).
     """
-    for nm, v in (("B", B), ("C_in", C_in), ("C_out", C_out)):
+    for nm, v in (("B", B), ("C_in", C_in), ("C_out", C_out),
+                  ("groups", groups)):
         if v < 1:
             raise ValueError(f"conv2d_nchw_plan: {nm} must be >= 1, got {v}")
+    if C_in % groups or C_out % groups:
+        raise ValueError(
+            f"conv2d_nchw_plan: groups={groups} must divide both "
+            f"C_in={C_in} and C_out={C_out} (per-group reduce slices)")
     base = conv2d_same_plan(M, N, S=S, P=P) if mode == "same" \
         else conv2d_plan(M, N, S=S, P=P)
     return dataclasses.replace(

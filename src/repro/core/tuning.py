@@ -52,7 +52,7 @@ from typing import Callable, Sequence
 
 import jax
 
-from .perfmodel import TPU_V5E, HardwareLatencies
+from .perfmodel import TPU_V5E, HardwareLatencies, mxu_tap_rows
 from .plan import SystolicPlan
 
 SIDECAR_ENV = "REPRO_TUNING_CACHE"
@@ -73,7 +73,12 @@ SIDECAR_ENV = "REPRO_TUNING_CACHE"
 #        dimension (the chunk length of the streamed schedule), and the
 #        scan kernel gained carry-in/-out ports; v3 scan entries priced a
 #        different lowering.
-ENGINE_SCHEMA_VERSION = 4
+#   v5 — lowering strategy: windowed winners carry a ``strategy`` field
+#        ('lanes' VPU schedule vs 'mxu' im2row dot_general, DESIGN.md
+#        §13) and sidecar keys gain a sixth component (the plan's pinned
+#        strategy, or 'auto') so nearest-shape seeding never crosses
+#        strategies; v4 entries never tuned over the algorithm choice.
+ENGINE_SCHEMA_VERSION = 5
 
 # VMEM working-set budget per block (f32 elements): input block + psum +
 # output must fit comfortably in ~16 MB VMEM; stay conservative.
@@ -89,10 +94,14 @@ _SCAN_CHUNK_TILES = (1, 2, 4)        # chunk = m × lane tile (streamed scans)
 
 @dataclasses.dataclass(frozen=True)
 class KernelConfig:
-    """One candidate schedule: output block per windowed axis + variant."""
+    """One candidate schedule: output block per windowed axis + variant
+    + (since schema v5) the lowering strategy — the tuner's first choice
+    between *algorithms* rather than block geometries (DESIGN.md §13).
+    ``strategy=None`` means "whatever the plan says" (auto → lanes)."""
 
     block: tuple[int, ...]          # lane axis last
     variant: str = "shift_psum"
+    strategy: str | None = None     # None | 'lanes' | 'mxu'
 
     def as_kwargs(self, plan: SystolicPlan) -> dict:
         """Render into the kwargs the thin kernel wrappers accept."""
@@ -102,12 +111,17 @@ class KernelConfig:
                 kw["chunk"] = self.block[2]
             return kw
         if plan.kind == "conv1d":
-            return {"block_t": self.block[0], "block_d": self.block[1]}
+            kw = {"block_t": self.block[0], "block_d": self.block[1]}
+            if self.strategy is not None:
+                kw["strategy"] = self.strategy
+            return kw
         kw = {"block_h": self.block[-2], "block_w": self.block[-1]}
         if plan.ndim_spatial == 3:
             kw["block_z"] = self.block[0]
         if plan.M > 1:
             kw["variant"] = self.variant
+        if self.strategy is not None:
+            kw["strategy"] = self.strategy
         return kw
 
 
@@ -157,9 +171,13 @@ def _jsonable(obj):
     return repr(obj)
 
 
-def _sidecar_key(sig: str, shape, time_steps: int, context: tuple) -> str:
+def _sidecar_key(sig: str, shape, time_steps: int, context: tuple,
+                 strategy: str = "auto") -> str:
+    # strategy is the *plan's* pinned strategy (or 'auto'): a plan pinned
+    # to 'mxu' must never replay — or seed from — winners tuned while the
+    # tuner was free to pick, and vice versa.
     return json.dumps([sig, list(shape), time_steps, jax.default_backend(),
-                       _jsonable(context)])
+                       _jsonable(context), strategy])
 
 
 # sidecar key → (KernelConfig, model_cost, measured_us)
@@ -184,7 +202,8 @@ def load_sidecar(path: str) -> int:
     for key, val in doc.get("entries", {}).items():
         if val.get("schema", 1) != ENGINE_SCHEMA_VERSION:
             continue
-        cfg = KernelConfig(tuple(val["block"]), val.get("variant", "shift_psum"))
+        cfg = KernelConfig(tuple(val["block"]), val.get("variant", "shift_psum"),
+                           val.get("strategy"))
         _SIDECAR[key] = (cfg, val.get("model_cost", 0.0), val.get("measured_us"))
         n += 1
     return n
@@ -210,12 +229,14 @@ def save_sidecar(path: str | None = None) -> str | None:
                 if key not in _SIDECAR:
                     _SIDECAR[key] = (
                         KernelConfig(tuple(val["block"]),
-                                     val.get("variant", "shift_psum")),
+                                     val.get("variant", "shift_psum"),
+                                     val.get("strategy")),
                         val.get("model_cost", 0.0), val.get("measured_us"))
         except Exception:
             pass      # unreadable file: overwrite with our entries
     entries = {
         key: {"block": list(cfg.block), "variant": cfg.variant,
+              "strategy": cfg.strategy,
               "model_cost": cost, "measured_us": us,
               "schema": ENGINE_SCHEMA_VERSION}
         for key, (cfg, cost, us) in sorted(_SIDECAR.items())
@@ -239,20 +260,25 @@ def _sidecar_store(skey: str, result: TuneResult) -> None:
         save_sidecar()
 
 
-def _nearest_sidecar(sig: str, shape, time_steps: int,
-                     context: tuple) -> KernelConfig | None:
+def _nearest_sidecar(sig: str, shape, time_steps: int, context: tuple,
+                     strategy: str = "auto") -> KernelConfig | None:
     """The winner of the closest already-tuned shape of the same plan.
 
-    Same plan signature, time_steps, backend and context; closest by
-    summed |log| ratio of extents. Seeding replays that winner with no
-    measurement — the engine clamps blocks to the output shape, so the
-    neighbor's config is always runnable on the new shape.
+    Same plan signature, time_steps, backend, context **and pinned
+    strategy** — a neighbor tuned under a different strategy pin ran a
+    different algorithm, so its winner must never seed this one (the v5
+    key carries the strategy component precisely to enforce that).
+    Closest by summed |log| ratio of extents. Seeding replays that
+    winner with no measurement — the engine clamps blocks to the output
+    shape, so the neighbor's config is always runnable on the new shape.
     """
-    want = [sig, time_steps, jax.default_backend(), _jsonable(context)]
+    want = [sig, time_steps, jax.default_backend(), _jsonable(context),
+            strategy]
     best, best_d = None, None
     for key, (cfg, _, _) in _SIDECAR.items():
-        ksig, kshape, kt, kbackend, kctx = json.loads(key)
-        if [ksig, kt, kbackend, kctx] != want or len(kshape) != len(shape):
+        ksig, kshape, kt, kbackend, kctx, kstrat = json.loads(key)
+        if ([ksig, kt, kbackend, kctx, kstrat] != want
+                or len(kshape) != len(shape)):
             continue
         d = sum(abs(math.log(k / s)) for k, s in zip(kshape, shape))
         if best_d is None or d < best_d:
@@ -262,6 +288,39 @@ def _nearest_sidecar(sig: str, shape, time_steps: int,
 
 def clear_sidecar() -> None:
     _SIDECAR.clear()
+
+
+def sidecar_entries() -> dict:
+    """The persistent store as a JSON-ready entries dict (schema-stamped,
+    same wire format as :func:`save_sidecar`). Checkpoints embed this so
+    tuned winners survive host moves (DESIGN.md §13)."""
+    return {
+        key: {"block": list(cfg.block), "variant": cfg.variant,
+              "strategy": cfg.strategy,
+              "model_cost": cost, "measured_us": us,
+              "schema": ENGINE_SCHEMA_VERSION}
+        for key, (cfg, cost, us) in sorted(_SIDECAR.items())
+    }
+
+
+def merge_sidecar_entries(entries: dict) -> int:
+    """Merge checkpoint-shipped entries into the store; returns #merged.
+
+    Mirrors :func:`load_sidecar`'s staleness rule (wrong-schema entries
+    are skipped) but **never clobbers** an existing key: the live
+    process's winners — possibly measured on *this* host — outrank
+    whatever the checkpoint carried. Does not write through to the env
+    sidecar; the next measured winner does, via the usual path.
+    """
+    n = 0
+    for key, val in (entries or {}).items():
+        if val.get("schema", 1) != ENGINE_SCHEMA_VERSION or key in _SIDECAR:
+            continue
+        cfg = KernelConfig(tuple(val["block"]), val.get("variant", "shift_psum"),
+                           val.get("strategy"))
+        _SIDECAR[key] = (cfg, val.get("model_cost", 0.0), val.get("measured_us"))
+        n += 1
+    return n
 
 
 if sidecar_path() and os.path.exists(sidecar_path()):
@@ -291,7 +350,12 @@ def candidate_configs(
     tiles; ``chunked=True`` (the streamed schedule, DESIGN.md §12) grows
     a third chunk-length dimension — whole multiples of the lane tile, so
     every candidate passes the chunk-geometry guards; windowed plans tune
-    the output tile and the schedule variant.
+    the output tile, the schedule variant, and — when the plan leaves
+    ``strategy`` unpinned — the lowering *algorithm* ('lanes' vs 'mxu',
+    DESIGN.md §13). MXU candidates carry one canonical variant: the
+    im2row views are static crops, so the psum/data-stationary knob is
+    moot under that strategy and enumerating both would make the runner
+    time the identical kernel twice.
     """
     if plan.combine != "fma":                       # scan family
         R, T = shape
@@ -328,18 +392,33 @@ def candidate_configs(
         variants = (("shift_psum", "shift_data") if plan.shift_count()
                     else ("shift_psum",))
 
+    if plan.strategy is None:
+        # Auto: the tuner owns the algorithm choice. Strategies are
+        # explicit on the candidates so a sidecar replay of the winner
+        # pins the same lowering on a later, untuned process.
+        strat_opts = [("lanes", variants), ("mxu", variants[:1])]
+    elif plan.strategy == "mxu":
+        # Pinned: candidates restate the pin (so measurement closures
+        # that rebuild the plan from kwargs lower the pinned kernel);
+        # only the variant knob remains, and under 'mxu' that too
+        # collapses to one canonical value.
+        strat_opts = [("mxu", variants[:1])]
+    else:
+        strat_opts = [("lanes", variants)]
+
     configs: set[KernelConfig] = set()
     def rec(i: int, acc: tuple[int, ...]):
         if i == len(axes):
             if math.prod(plan.block_in_shape(acc, time_steps)) > vmem_budget:
                 return
-            for v in variants:
-                configs.add(KernelConfig(acc, v))
+            for s, svariants in strat_opts:
+                for v in svariants:
+                    configs.add(KernelConfig(acc, v, s))
             return
         for b in axes[i]:
             rec(i + 1, acc + (min(b, out_sp[i]),))
     rec(0, ())
-    return sorted(configs, key=lambda c: (c.block, c.variant))
+    return sorted(configs, key=lambda c: (c.block, c.variant, c.strategy or ""))
 
 
 # ---------------------------------------------------------------------------
@@ -386,13 +465,24 @@ def model_cost(
     block = cfg.block
     useful = math.prod(block)
     loaded = math.prod(plan.block_in_shape(block, t))
+    memory = (loaded / useful) * hw.t_gmem_read / plan.S
+    if (cfg.strategy or plan.strategy) == "mxu":
+        # §13 im2row pricing: each alignment-padded tap row costs one
+        # staged gather + one MXU MAC; no lane shifts (the views are
+        # static crops). Padding is priced like real rows, so small
+        # footprints lose to the 8-row floor and wide tap sets win —
+        # the shape-dependent flip the strategy dimension exists for.
+        stages = plan.stages or (plan,)
+        rows = sum(mxu_tap_rows(s.mads_per_output_window()) for s in stages)
+        compute = t * rows * (hw.t_mxu_stage + hw.t_mxu_mac)
+        compute += plan.epilogue_op_count() * hw.t_mad
+        return compute + memory
     mads = plan.mads_per_output_window()
     shifts = plan.shift_count()
     P = block[-2]                                   # rows one roll amortizes
     shfl = hw.t_shfl * (0.5 if cfg.variant == "shift_data" else 1.0)
     compute = t * mads * (hw.t_mad + hw.t_reg) + t * shifts * shfl / max(P, 1)
     compute += plan.epilogue_op_count() * hw.t_mad  # fused output stages
-    memory = (loaded / useful) * hw.t_gmem_read / plan.S
     return compute + memory
 
 
@@ -451,14 +541,23 @@ def autotune(
         return not fixed or all(
             cfg.as_kwargs(plan).get(k, v) == v for k, v in fixed.items())
 
+    if (default is not None and default.strategy is None
+            and plan.combine == "fma" and plan.strategy is not None):
+        # Under a pinned plan every measured config runs the pinned
+        # lowering anyway — restate the pin on the default (as
+        # candidate_configs does) so a default win records a config
+        # whose strategy matches its sidecar key.
+        default = dataclasses.replace(default, strategy=plan.strategy)
+
     sig = plan_signature(plan)
-    skey = _sidecar_key(sig, shape, time_steps, context)
+    pstrat = (plan.strategy or "auto") if plan.combine == "fma" else "auto"
+    skey = _sidecar_key(sig, shape, time_steps, context, pstrat)
     hit = _SIDECAR.get(skey)
     if hit is not None and _agrees(hit[0]):
         result = TuneResult(hit[0], hit[1], hit[2], "sidecar")
         _CACHE[key] = result
         return result
-    seed = _nearest_sidecar(sig, shape, time_steps, context)
+    seed = _nearest_sidecar(sig, shape, time_steps, context, pstrat)
     if seed is not None and _agrees(seed):
         result = TuneResult(seed, model_cost(plan, seed, time_steps, hw),
                             None, "seeded")
@@ -489,7 +588,20 @@ def autotune(
         result = TuneResult(best, model_cost(plan, best, time_steps, hw),
                             None, "model")
     else:
-        to_measure = list(ranked[:top_k])
+        if plan.combine == "fma" and plan.strategy is None:
+            # Open algorithm choice (DESIGN.md §13): measure the model's
+            # top-k of EACH strategy present, not the global top-k — the
+            # model proposes a per-strategy shortlist, measurement gets
+            # the final say *across* algorithms. A global top-k could be
+            # one strategy wall-to-wall and silently never time the
+            # other lowering on this hardware.
+            by_strat: dict[str | None, list[KernelConfig]] = {}
+            for c in ranked:
+                by_strat.setdefault(c.strategy, []).append(c)
+            to_measure = [c for group in by_strat.values()
+                          for c in group[:top_k]]
+        else:
+            to_measure = list(ranked[:top_k])
         if default is not None and default not in to_measure:
             to_measure.append(default)
         timed = [(runner(c), c) for c in to_measure]

@@ -132,6 +132,24 @@ def _default_cfg(plan) -> tuning.KernelConfig:
                                else (8, 128))
 
 
+def _strategy_plan(plan, strategy, op: str):
+    """Pin a lowering strategy onto the plan IR (named pre-pallas check).
+
+    The strategy lives on the *plan*, not on the call: adjoints and
+    fused chains derive their plans with ``dataclasses.replace``, so an
+    mxu forward transposes to an mxu backward with no extra plumbing
+    (DESIGN.md §13). ``None``/'auto' leave the plan as-is — the
+    autotuner then owns the algorithm choice.
+    """
+    if strategy in (None, "auto"):
+        return plan
+    if strategy not in ("lanes", "mxu"):
+        raise ValueError(
+            f"ops.{op}: strategy must be 'lanes', 'mxu', 'auto' or None, "
+            f"got {strategy!r}")
+    return dataclasses.replace(plan, strategy=strategy)
+
+
 def _engine_block(plan, kw: dict) -> tuple[tuple[int, ...], str, dict]:
     """Split family kwargs into (engine block tuple, variant, rest)."""
     kw = dict(kw)
@@ -156,12 +174,14 @@ def _engine_runner(plan, x, w, interpret, *, epi_args=(), time_steps=1):
         blk, variant, rest = _engine_block(plan, dict(k))
         t = rest.pop("time_steps", time_steps)
         acc = rest.pop("acc_dtype", jnp.float32)
+        strat = rest.pop("strategy", None)
         if rest:
             raise TypeError(f"unexpected kwargs for {plan.kind!r}: "
                             f"{sorted(rest)}")
         return run_window_plan(x, w, plan=plan, block=blk, variant=variant,
                                time_steps=t, interpret=interpret,
-                               acc_dtype=acc, epilogue_args=epi_args)
+                               acc_dtype=acc, epilogue_args=epi_args,
+                               strategy=strat)
     return call
 
 
@@ -298,12 +318,13 @@ def _tuned_adjoint_config(aplan, g_shape, g_dtype, w, cfg: _WindowCfg):
         cfg.plan, jnp.zeros(w.shape, w.dtype))
     runner = lambda c: tuning.measure_us(lambda: run_window_plan(
         zeros, wa, plan=aplan, block=c.block, time_steps=cfg.time_steps,
-        variant=c.variant, interpret=cfg.interpret, acc_dtype=cfg.acc_dtype))
+        variant=c.variant, interpret=cfg.interpret, acc_dtype=cfg.acc_dtype,
+        strategy=c.strategy))
     res = tuning.autotune(
         aplan, g_shape, time_steps=cfg.time_steps,
         default=tuning.KernelConfig(cfg.block, cfg.variant), runner=runner,
         context=cfg.bwd_tune)
-    return res.config.block, res.config.variant
+    return res.config.block, res.config.variant, res.config.strategy
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
@@ -360,8 +381,14 @@ def _window_op_bwd(cfg, res, g):
     aplan = adj.input_adjoint_plan(plan)
     block, variant = cfg.block, cfg.variant
     if cfg.bwd_tune is not None and cfg.mesh is None:
-        block, variant = _tuned_adjoint_config(aplan, g.shape, g.dtype, w,
-                                               cfg)
+        block, variant, astrat = _tuned_adjoint_config(
+            aplan, g.shape, g.dtype, w, cfg)
+        if astrat is not None:
+            # the adjoint is its own kernel: when the forward was auto,
+            # the backward tuner picks the adjoint's strategy on the
+            # adjoint's own signature (a pinned forward stays pinned —
+            # input_adjoint_plan carried the strategy over already)
+            aplan = dataclasses.replace(aplan, strategy=astrat)
     acfg = dataclasses.replace(cfg, plan=aplan, block=block, variant=variant,
                                bwd_tune=None)
     adj.record_lowering(aplan.kind)
@@ -665,10 +692,65 @@ def _tuned_kwargs(plan, shape, call, user_kw, *, time_steps: int = 1,
     return {**res.config.as_kwargs(plan), **user_kw}
 
 
+def _conv2d_grouped(x, w, *, groups, mode, impl, autotune, mesh, stride,
+                    epi_stages, epi_args, strategy, kw):
+    """Grouped NCHW conv as per-group reduce slices (ISSUE 7 satellite).
+
+    Each group is an ordinary reduce-axes conv on its
+    ``(C_in/groups, C_out/groups)`` operand slice — every group lowers
+    the *same* plan signature, so the tuner measures group 0 and replays
+    the winner for the rest — and the group outputs concatenate along
+    C_out. Per-C_out epilogue operands (a bias row, a residual) slice
+    along the same axis. ``groups == C_in`` is depthwise-2d.
+    """
+    if x.ndim != 4:
+        raise ValueError(
+            f"conv2d: groups={groups} needs a 4-D NCHW input against an "
+            f"OIHW filter (grouped channels), got a {x.ndim}-D input")
+    if w.ndim != 4:
+        raise ValueError(
+            f"conv2d: groups={groups} needs an OIHW "
+            f"(C_out, C_in/groups, N, M) filter, got w shape "
+            f"{tuple(w.shape)}")
+    if mesh is not None:
+        raise ValueError(
+            "sharded grouped conv2d is not supported: each group is its "
+            "own engine call and would need its own halo exchange; run "
+            "groups under pjit with impl='xla', or shard with groups=1")
+    # the plan builder owns the named divisibility checks (pre-pallas)
+    plan = _c2.plan_for_nchw(x.shape, w.shape, mode, groups)
+    if impl == "xla":
+        y = ref.conv2d_nchw(x, w, mode, groups)
+        if stride is not None:
+            y = y[..., ::stride[0], ::stride[1]]
+        if epi_stages:
+            y = adj.apply_epilogue(
+                dataclasses.replace(plan, epilogue=epi_stages), y, epi_args)
+        return y
+    Cg = x.shape[1] // groups
+    Og = w.shape[0] // groups
+    op_stages = epilogue_operand_stages(epi_stages)
+    outs = []
+    for g in range(groups):
+        args_g = tuple(
+            arr[g * Og:(g + 1) * Og]
+            if (st.op == "bias" and getattr(arr, "ndim", 0) == 1)
+            else (arr[:, g * Og:(g + 1) * Og] if st.op == "residual_add"
+                  else arr)
+            for st, arr in zip(op_stages, epi_args))
+        outs.append(conv2d(
+            x[:, g * Cg:(g + 1) * Cg], w[g * Og:(g + 1) * Og], mode=mode,
+            impl=impl, autotune=autotune, stride=stride,
+            epilogue=epi_stages, epilogue_args=args_g, strategy=strategy,
+            **kw))
+    return jnp.concatenate(outs, axis=1)
+
+
 def conv2d(x, w, *, mode: str = "same", impl: str | None = None,
            autotune: bool = False, mesh=None, in_specs=None,
            boundary: str = "zero", stride=None, epilogue=None,
-           epilogue_args=(), **kw):
+           epilogue_args=(), strategy: str | None = None, groups: int = 1,
+           **kw):
     """2-D convolution, dispatched on input rank:
 
     * ``(H, W)``            — single image, single channel (the paper's
@@ -690,6 +772,15 @@ def conv2d(x, w, *, mode: str = "same", impl: str | None = None,
     a residual) ride in ``epilogue_args``. Both key the tuner cache
     apart automatically (the plan signature carries them).
 
+    ``strategy=`` pins the engine's lowering for the tap-set contraction
+    ('lanes' — the paper's VPU shift schedule — or 'mxu', the im2row
+    dot_general of DESIGN.md §13); the default/'auto' leaves the choice
+    to the autotuner (falling back to 'lanes' untuned). ``groups=``
+    (4-D NCHW only) runs a grouped convolution as per-group reduce
+    slices — ``groups == C_in`` is depthwise-2d — with an OIHW filter of
+    shape ``(C_out, C_in/groups, N, M)``, matching ``lax``'s
+    ``feature_group_count``.
+
     Tuner contexts carry the rank tag and the full operand shape, so
     batched/NCHW winners never collide with single-image winners in the
     cache or the JSON sidecar.
@@ -710,6 +801,14 @@ def conv2d(x, w, *, mode: str = "same", impl: str | None = None,
             "breaks shape preservation, so shards would not own equal "
             "input and output slices; subsample after the sharded call")
     _reject_sharded_residual(epi_stages, mesh)
+    if int(groups) != groups or groups < 1:
+        raise ValueError(f"conv2d: groups must be an int >= 1, got {groups}")
+    if groups != 1:
+        return _conv2d_grouped(
+            x, w, groups=int(groups), mode=mode, impl=impl,
+            autotune=autotune, mesh=mesh, stride=stride,
+            epi_stages=epi_stages, epi_args=epi_args, strategy=strategy,
+            kw=kw)
     if x.ndim == 4:
         if w.ndim != 4:
             raise ValueError(
@@ -737,7 +836,7 @@ def conv2d(x, w, *, mode: str = "same", impl: str | None = None,
         kernel = lambda xs, **k: (
             _c2.conv2d_same(xs, w, **k) if mode == "same"
             else _c2.conv2d_valid(xs, w, **k))
-    plan = plan_fn()
+    plan = _strategy_plan(plan_fn(), strategy, "conv2d")
     if stride is not None or epi_stages:
         plan = dataclasses.replace(plan, stride=stride, epilogue=epi_stages)
         _check_epilogue_operands(plan, epi_args, "conv2d", x, w)
@@ -761,6 +860,9 @@ def _window_cfg(plan, kw, *, interpret, time_steps=1, mesh=None,
                 in_specs=None, boundary="zero", bwd_tune=None) -> _WindowCfg:
     """Resolve family kwargs into the static config of one engine call."""
     block, variant, rest = _engine_block(plan, kw)
+    # a tuned winner (or an explicit caller) may carry the lowering
+    # strategy as a kwarg — it pins the plan IR, like ``stride=`` does
+    plan = _strategy_plan(plan, rest.pop("strategy", None), plan.kind)
     cfg = _WindowCfg(
         plan=plan, block=block, variant=variant, interpret=interpret,
         time_steps=rest.pop("time_steps", time_steps),
@@ -788,6 +890,10 @@ def _conv2d_engine(x, w, *, plan, kernel, tag, mode, impl, autotune, mesh,
     """
     interpret = _interp(impl)
     plain = not plan.epilogue and plan.stride is None
+    # a pinned strategy must reach the thin measurement wrappers too —
+    # they rebuild the plan from kwargs (candidates restate the pin, but
+    # the family *default* config carries none)
+    pin = {"strategy": plan.strategy} if plan.strategy else {}
     if mesh is not None:
         if mode != "same":
             raise ValueError(
@@ -798,7 +904,8 @@ def _conv2d_engine(x, w, *, plan, kernel, tag, mode, impl, autotune, mesh,
                                              boundary)
             zeros = jnp.zeros(shape, x.dtype)
             sharded_kw = {k: kw.pop(k) for k in ("overlap",) if k in kw}
-            call = (lambda **k: kernel(zeros, interpret=interpret, **k)) \
+            call = (lambda **k: kernel(zeros, interpret=interpret,
+                                       **{**pin, **k})) \
                 if plain else _engine_runner(plan, zeros, w, interpret,
                                              epi_args=epi_args)
             kw = _tuned_kwargs(plan, shape, call, kw,
@@ -809,7 +916,7 @@ def _conv2d_engine(x, w, *, plan, kernel, tag, mode, impl, autotune, mesh,
         return _window_op(cfg, x, w, epi_args)
     bwd_tune = None
     if autotune:
-        call = (lambda **k: kernel(x, interpret=interpret, **k)) \
+        call = (lambda **k: kernel(x, interpret=interpret, **{**pin, **k})) \
             if plain else _engine_runner(plan, x, w, interpret,
                                          epi_args=epi_args)
         kw = _tuned_kwargs(plan, x.shape, call, kw, context=(tag, mode, impl))
@@ -819,7 +926,8 @@ def _conv2d_engine(x, w, *, plan, kernel, tag, mode, impl, autotune, mesh,
 
 
 def conv1d_causal(x, w, *, impl: str | None = None, autotune: bool = False,
-                  epilogue=None, epilogue_args=(), **kw):
+                  epilogue=None, epilogue_args=(), strategy: str | None = None,
+                  **kw):
     """Depthwise causal conv through the D-optimal plan (§5.4).
 
     ``epilogue=`` fuses elementwise output stages into the kernel —
@@ -835,7 +943,8 @@ def conv1d_causal(x, w, *, impl: str | None = None, autotune: bool = False,
                          f"match input channels {x.shape}")
     epi_stages, epi_args = _epilogue_spec(epilogue, epilogue_args,
                                           "conv1d_causal")
-    plan = _c1.plan_for(w.shape[0])
+    plan = _strategy_plan(_c1.plan_for(w.shape[0]), strategy,
+                          "conv1d_causal")
     if epi_stages:
         plan = dataclasses.replace(plan, epilogue=epi_stages)
         _check_epilogue_operands(plan, epi_args, "conv1d_causal", x)
@@ -845,12 +954,14 @@ def conv1d_causal(x, w, *, impl: str | None = None, autotune: bool = False,
     interpret = _interp(impl)
     bwd_tune = None
     if autotune:
+        pin = {"strategy": plan.strategy} if plan.strategy else {}
         call = (lambda **k: _c1.conv1d_causal(x, w, interpret=interpret,
-                                              **k)) \
+                                              **{**pin, **k})) \
             if not epi_stages else _engine_runner(plan, x, w, interpret,
                                                   epi_args=epi_args)
         kw = _tuned_kwargs(plan, x.shape, call, kw, context=("conv1d", impl))
         bwd_tune = ("adjoint", "conv1d", impl)
+    plan = _strategy_plan(plan, kw.pop("strategy", None), "conv1d_causal")
     d = _DEFAULTS["conv1d"].block
     cfg = _WindowCfg(
         plan=plan, block=(kw.pop("block_t", d[0]), kw.pop("block_d", d[1])),
@@ -864,7 +975,7 @@ def conv1d_causal(x, w, *, impl: str | None = None, autotune: bool = False,
 def stencil(x, sdef: StencilDef | str, *, time_steps: int = 1,
             impl: str | None = None, autotune: bool = False, mesh=None,
             in_specs=None, boundary: str = "zero", epilogue=None,
-            epilogue_args=(), **kw):
+            epilogue_args=(), strategy: str | None = None, **kw):
     impl = impl or default_impl()
     if isinstance(sdef, str):
         sdef = BENCHMARKS[sdef]
@@ -872,7 +983,7 @@ def stencil(x, sdef: StencilDef | str, *, time_steps: int = 1,
     _reject_sharded_residual(epi_stages, mesh)
     mod = _s2 if sdef.ndim == 2 else _s3
     fn = mod.stencil2d if sdef.ndim == 2 else mod.stencil3d
-    plan = mod.plan_for(sdef)
+    plan = _strategy_plan(mod.plan_for(sdef), strategy, "stencil")
     if epi_stages:
         plan = dataclasses.replace(plan, epilogue=epi_stages)
         _check_epilogue_operands(plan, epi_args, "stencil", x,
@@ -884,6 +995,7 @@ def stencil(x, sdef: StencilDef | str, *, time_steps: int = 1,
         y = ref.stencil_iterate(x, sdef, time_steps)
         return adj.apply_epilogue(plan, y, epi_args) if epi_stages else y
     interpret = _interp(impl)
+    pin = {"strategy": plan.strategy} if plan.strategy else {}
     if mesh is not None:
         if autotune:
             shape, sctx = _shard_tuning_call(plan, x, mesh, in_specs,
@@ -893,7 +1005,7 @@ def stencil(x, sdef: StencilDef | str, *, time_steps: int = 1,
             # sharded-layer-only kwargs stay out of the measured closure
             sharded_kw = {k: kw.pop(k) for k in ("overlap",) if k in kw}
             call = (lambda **k: fn(zeros, sdef, time_steps=time_steps,
-                                   interpret=interpret, **k)) \
+                                   interpret=interpret, **{**pin, **k})) \
                 if not epi_stages else _engine_runner(
                     plan, zeros, None, interpret, epi_args=epi_args,
                     time_steps=time_steps)
@@ -907,7 +1019,7 @@ def stencil(x, sdef: StencilDef | str, *, time_steps: int = 1,
     bwd_tune = None
     if autotune:
         call = (lambda **k: fn(x, sdef, time_steps=time_steps,
-                               interpret=interpret, **k)) \
+                               interpret=interpret, **{**pin, **k})) \
             if not epi_stages else _engine_runner(
                 plan, x, None, interpret, epi_args=epi_args,
                 time_steps=time_steps)
@@ -1017,7 +1129,7 @@ def _pipeline_ref(x, plans, ws, epi_args):
 
 def pipeline(x, stages, *, impl: str | None = None, autotune: bool = False,
              fuse="auto", epilogue_args=(), mesh=None, in_specs=None,
-             boundary: str = "zero", **kw):
+             boundary: str = "zero", strategy: str | None = None, **kw):
     """Run a chain of shape-preserving windowed ops as ONE fused engine
     kernel — partial activations between stages never leave VMEM
     (DESIGN.md §11).
@@ -1053,7 +1165,10 @@ def pipeline(x, stages, *, impl: str | None = None, autotune: bool = False,
     if not stages:
         raise ValueError("ops.pipeline needs at least one stage")
     resolved = [_pipeline_stage_plan(x, d, i) for i, d in enumerate(stages)]
-    plans = [p for p, _ in resolved]
+    # one strategy for the whole chain: every stage shares the VMEM tile,
+    # so the pin rides each stage plan and fuse_plans carries it onto
+    # the composite (stages keep their own copy for the unfused path)
+    plans = [_strategy_plan(p, strategy, "pipeline") for p, _ in resolved]
     ws = tuple(w for _, w in resolved)
     need = [s.op for p in plans for s in epilogue_operand_stages(p.epilogue)]
     if len(tuple(epilogue_args)) != len(need):
@@ -1156,13 +1271,15 @@ def _reject_scan_kwargs(op: str, kw: dict) -> None:
             "sequential inter-block carry along the lane axis, so the "
             "halo-exchange layer cannot shard them; shard the row axis "
             "under pjit with impl='xla' instead")
-    bad = sorted(k for k in ("epilogue", "epilogue_args", "stride") if k in kw)
+    bad = sorted(k for k in ("epilogue", "epilogue_args", "stride",
+                             "strategy") if k in kw)
     if bad:
         raise ValueError(
             f"ops.{op} does not take {', '.join(bad)}: fused epilogues, "
-            "output strides and chain fusion are windowed-plan features "
-            "(DESIGN.md §11) — a scan's output is also its inter-block "
-            "carry, so a fused activation would corrupt the recurrence; "
+            "output strides, chain fusion and the lanes/mxu lowering "
+            "strategy are windowed-plan features (DESIGN.md §11/§13) — a "
+            "scan's tap contraction is a carried recurrence, not a "
+            "matmul, and a fused activation would corrupt the carry; "
             "apply the elementwise stage in XLA after the scan, or fuse "
             "windowed stages with ops.pipeline")
 

@@ -41,12 +41,15 @@ def conv2d_batched(x: jax.Array, w: jax.Array, mode: str = "valid") -> jax.Array
     return jax.vmap(lambda xi: fn(xi, w))(x)
 
 
-def conv2d_nchw(x: jax.Array, w: jax.Array, mode: str = "valid") -> jax.Array:
+def conv2d_nchw(x: jax.Array, w: jax.Array, mode: str = "valid",
+                groups: int = 1) -> jax.Array:
     """Batched multi-channel cross-correlation.
 
-    x: (B, C_in, H, W); w: (C_out, C_in, N, M) → (B, C_out, H', W').
+    x: (B, C_in, H, W); w: (C_out, C_in/groups, N, M) → (B, C_out, H', W').
     'same' mode anchors at the filter centre (top = (N−1)//2), matching
-    :func:`conv2d_same` per channel.
+    :func:`conv2d_same` per channel. ``groups`` maps straight to
+    ``feature_group_count`` — the oracle the grouped engine path
+    validates against.
     """
     N, M = w.shape[2:]
     if mode == "same":
@@ -56,7 +59,8 @@ def conv2d_nchw(x: jax.Array, w: jax.Array, mode: str = "valid") -> jax.Array:
         padding = "VALID"
     return jax.lax.conv_general_dilated(
         x.astype(jnp.float32), w.astype(jnp.float32), (1, 1), padding,
-        dimension_numbers=("NCHW", "OIHW", "NCHW")).astype(x.dtype)
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=groups).astype(x.dtype)
 
 
 def conv1d_causal(x: jax.Array, w: jax.Array) -> jax.Array:

@@ -32,6 +32,7 @@ def conv1d_causal(
     block_d: int = 128,
     interpret: bool = True,
     acc_dtype=jnp.float32,
+    strategy: str | None = None,
 ) -> jax.Array:
     """Depthwise causal conv: ``y[b,t,d] = Σ_k x[b, t−K+1+k, d] · w[k, d]``.
 
@@ -43,5 +44,5 @@ def conv1d_causal(
     assert Dw == x.shape[-1], (w.shape, x.shape)
     return run_window_plan(
         x, w, plan=plan_for(K), block=(block_t, block_d),
-        interpret=interpret, acc_dtype=acc_dtype,
+        interpret=interpret, acc_dtype=acc_dtype, strategy=strategy,
     )

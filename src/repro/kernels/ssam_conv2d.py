@@ -40,15 +40,21 @@ def plan_for_batched(w_shape: tuple[int, int], mode: str = "valid"):
     return conv2d_batched_plan(M, N, mode=mode)
 
 
-def plan_for_nchw(x_shape, w_shape, mode: str = "valid"):
-    """Reduce-axes plan for an NCHW minibatch against an OIHW filter."""
+def plan_for_nchw(x_shape, w_shape, mode: str = "valid", groups: int = 1):
+    """Reduce-axes plan for an NCHW minibatch against an OIHW filter.
+
+    ``groups > 1`` describes ONE group's reduce sweep (``C_in/groups``
+    channels against ``C_out/groups`` filters): grouped conv slices the
+    operands per group and runs this plan once per slice (ops.conv2d).
+    """
     B, C_in = x_shape[:2]
     C_out, C_in_w, N, M = w_shape
-    if C_in_w != C_in:
+    if C_in_w * groups != C_in:
         raise ValueError(
-            f"conv2d: filter expects C_in={C_in_w} but input has C_in={C_in} "
+            f"conv2d: filter expects C_in={C_in_w * groups} "
+            f"({C_in_w} per group × {groups}) but input has C_in={C_in} "
             f"(x {tuple(x_shape)}, w {tuple(w_shape)})")
-    return conv2d_nchw_plan(B, C_in, C_out, M, N, mode=mode)
+    return conv2d_nchw_plan(B, C_in, C_out, M, N, mode=mode, groups=groups)
 
 
 def conv2d_valid(
@@ -60,11 +66,13 @@ def conv2d_valid(
     variant: str = "shift_psum",
     interpret: bool = True,
     acc_dtype=jnp.float32,
+    strategy: str | None = None,
 ) -> jax.Array:
     """Valid-mode 2-D cross-correlation ``(H, W) ⋆ (N, M) → (H−N+1, W−M+1)``."""
     return run_window_plan(
         x, w, plan=plan_for(w.shape), block=(block_h, block_w),
         variant=variant, interpret=interpret, acc_dtype=acc_dtype,
+        strategy=strategy,
     )
 
 
@@ -77,6 +85,7 @@ def conv2d_same(
     variant: str = "shift_psum",
     interpret: bool = True,
     acc_dtype=jnp.float32,
+    strategy: str | None = None,
 ) -> jax.Array:
     """'Same'-mode convolution (zero boundary), anchor at the filter centre.
 
@@ -87,6 +96,7 @@ def conv2d_same(
     return run_window_plan(
         x, w, plan=plan_for(w.shape, "same"), block=(block_h, block_w),
         variant=variant, interpret=interpret, acc_dtype=acc_dtype,
+        strategy=strategy,
     )
 
 
@@ -101,13 +111,14 @@ def conv2d_batched(
     variant: str = "shift_psum",
     interpret: bool = True,
     acc_dtype=jnp.float32,
+    strategy: str | None = None,
 ) -> jax.Array:
     """A ``(B, H, W)`` image stack against one ``(N, M)`` filter — the
     minibatch rides the grid's block-1 batch axis, no Python loop."""
     return run_window_plan(
         x, w, plan=plan_for_batched(w.shape, mode), block=(block_h, block_w),
         time_steps=time_steps, variant=variant, interpret=interpret,
-        acc_dtype=acc_dtype,
+        acc_dtype=acc_dtype, strategy=strategy,
     )
 
 
@@ -121,6 +132,7 @@ def conv2d_nchw(
     variant: str = "shift_psum",
     interpret: bool = True,
     acc_dtype=jnp.float32,
+    strategy: str | None = None,
 ) -> jax.Array:
     """Batched multi-channel NCHW convolution through the reduce-axes
     engine: ``(B, C_in, H, W) ⋆ (C_out, C_in, N, M) → (B, C_out, H', W')``.
@@ -132,5 +144,5 @@ def conv2d_nchw(
     return run_window_plan(
         x, w, plan=plan_for_nchw(x.shape, w.shape, mode),
         block=(block_h, block_w), variant=variant, interpret=interpret,
-        acc_dtype=acc_dtype,
+        acc_dtype=acc_dtype, strategy=strategy,
     )

@@ -74,6 +74,8 @@ class ArchConfig:
     n_frames: int = 0            # whisper encoder frames (stub embeds)
     conv_frontend: bool = False  # whisper: real mel conv stem through the
     n_mels: int = 0              #   SSAM engine (2×conv k=3, stride 1/2)
+    conv_strategy: str | None = None  # frontend lowering: None (auto) |
+    #   "lanes" (VPU shift-fma) | "mxu" (im2row matmul, DESIGN.md §13)
     pos_emb: str = "rope"        # rope | learned
     # numerics / runtime
     tie_embeddings: bool = True

@@ -122,9 +122,10 @@ class Whisper:
         """
         c = self.cfg
         x = mel[:, :, None, :]                       # (B, n_mels, 1, T)
-        x = nnl.conv2d_apply(p["conv1"], x, impl=impl, activation="gelu")
+        x = nnl.conv2d_apply(p["conv1"], x, impl=impl, activation="gelu",
+                             strategy=c.conv_strategy)
         x = nnl.conv2d_apply(p["conv2"], x, stride=(1, 2), impl=impl,
-                             activation="gelu")
+                             activation="gelu", strategy=c.conv_strategy)
         return x[:, :, 0, :].transpose(0, 2, 1).astype(c.param_dtype)
 
     # ---- attention helpers --------------------------------------------------

@@ -246,6 +246,90 @@ class TestGradcheck:
 
 
 # ---------------------------------------------------------------------------
+# Gradcheck through the MXU lowering (DESIGN.md §13): adjoints transpose
+# mxu→mxu, and the backward provably lowers through the engine
+# ---------------------------------------------------------------------------
+
+class TestMxuGradcheck:
+    def setup_method(self):
+        adjoint_mod.reset_lowering_counts()
+
+    def test_adjoint_plan_inherits_strategy(self):
+        """input/weight adjoints of a pinned plan stay pinned: the
+        transpose of an im2row matmul is an im2row matmul over the
+        reflected tap set, never a silent fall-back to lanes."""
+        import dataclasses
+        for p in (conv2d_plan(5, 3), conv2d_same_plan(3, 3),
+                  conv2d_nchw_plan(2, 3, 4, 3, 3, mode="same"),
+                  depthwise_conv1d_plan(4)):
+            pinned = dataclasses.replace(p, strategy="mxu")
+            assert input_adjoint_plan(pinned).strategy == "mxu"
+            assert input_adjoint_plan(p).strategy is None
+
+    @pytest.mark.parametrize("mode", ["valid", "same"])
+    def test_conv2d_single_mxu(self, rng, mode):
+        x = jnp.array(rng.standard_normal((14, 40)), jnp.float32)
+        w = jnp.array(rng.standard_normal((3, 5)), jnp.float32)
+        gx, gw = grads(lambda a, b: ops.conv2d(
+            a, b, mode=mode, impl="interpret", strategy="mxu",
+            block_h=8, block_w=16), x, w)
+        rx, rw = grads(lambda a, b: ops.conv2d(a, b, mode=mode, impl="xla"),
+                       x, w)
+        assert_close(gx, rx)
+        assert_close(gw, rw, 1e-3)
+        assert adjoint_mod.BACKWARD_LOWERINGS["adj_conv2d"] >= 1
+        assert adjoint_mod.BACKWARD_LOWERINGS["wgrad_conv2d"] >= 1
+
+    def test_conv2d_nchw_mxu(self, rng):
+        x = jnp.array(rng.standard_normal((2, 3, 10, 24)), jnp.float32)
+        w = jnp.array(rng.standard_normal((4, 3, 3, 3)), jnp.float32)
+        gx, gw = grads(lambda a, b: ops.conv2d(
+            a, b, mode="same", impl="interpret", strategy="mxu",
+            block_h=8, block_w=16), x, w)
+        rx, rw = grads(lambda a, b: ops.conv2d(a, b, mode="same", impl="xla"),
+                       x, w)
+        assert_close(gx, rx)
+        assert_close(gw, rw, 1e-3)
+        assert adjoint_mod.BACKWARD_LOWERINGS["adj_conv2d_nchw"] >= 1
+        assert adjoint_mod.BACKWARD_LOWERINGS["wgrad_conv2d_nchw"] >= 1
+
+    def test_grouped_conv_grads(self, rng):
+        x = jnp.array(rng.standard_normal((2, 6, 8, 20)), jnp.float32)
+        w = jnp.array(rng.standard_normal((4, 3, 3, 3)), jnp.float32)
+        gx, gw = grads(lambda a, b: ops.conv2d(
+            a, b, mode="same", impl="interpret", groups=2, strategy="mxu"),
+            x, w)
+        rx, rw = grads(lambda a, b: ops.conv2d(
+            a, b, mode="same", impl="xla", groups=2), x, w)
+        assert_close(gx, rx)
+        assert_close(gw, rw, 1e-3)
+
+    @pytest.mark.parametrize("name", ["2d25pt", "3d27pt"])
+    def test_stencil_mxu(self, rng, name):
+        sdef = BENCHMARKS[name]
+        shape = (20, 40) if sdef.ndim == 2 else (8, 10, 24)
+        x = jnp.array(rng.standard_normal(shape), jnp.float32)
+        g1 = grads(lambda a: ops.stencil(a, name, impl="interpret",
+                                         strategy="mxu"), x)[0]
+        g2 = grads(lambda a: ops.stencil(a, name, impl="xla"), x)[0]
+        assert_close(g1, g2)
+        kind = "adj_stencil2d" if sdef.ndim == 2 else "adj_stencil3d"
+        assert adjoint_mod.BACKWARD_LOWERINGS[kind] >= 1
+
+    def test_conv1d_causal_mxu(self, rng):
+        x = jnp.array(rng.standard_normal((2, 17, 8)), jnp.float32)
+        w = jnp.array(rng.standard_normal((4, 8)), jnp.float32)
+        gx, gw = grads(lambda a, b: ops.conv1d_causal(
+            a, b, impl="interpret", strategy="mxu", block_t=8, block_d=8),
+            x, w)
+        rx, rw = grads(lambda a, b: ops.conv1d_causal(a, b, impl="xla"), x, w)
+        assert_close(gx, rx)
+        assert_close(gw, rw, 1e-3)
+        assert adjoint_mod.BACKWARD_LOWERINGS["adj_conv1d"] >= 1
+        assert adjoint_mod.BACKWARD_LOWERINGS["wgrad_conv1d"] >= 1
+
+
+# ---------------------------------------------------------------------------
 # Scan-op sharding rejection (satellite: no silently ignored kwargs)
 # ---------------------------------------------------------------------------
 

@@ -63,6 +63,61 @@ class TestBasics:
             load_checkpoint(str(tmp_path), 1, bad)
 
 
+class TestTuningSidecarShipsWithCheckpoint:
+    """Tuned kernel winners ride the checkpoint (TUNING.json) so a host
+    move does not silently retune — or worse, replay stale defaults."""
+
+    def setup_method(self):
+        from repro.core import tuning
+        tuning.clear_sidecar()
+
+    teardown_method = setup_method
+
+    @staticmethod
+    def _entry(block=(8, 64), strategy="mxu"):
+        from repro.core import tuning
+        cfg = tuning.KernelConfig(tuple(block), "shift_psum", strategy)
+        key = tuning._sidecar_key("sig-ship", (128, 128), 1, (), "mxu")
+        return key, cfg
+
+    def test_save_embeds_and_restore_merges(self, tmp_path):
+        from repro.core import tuning
+        key, cfg = self._entry()
+        tuning._SIDECAR[key] = (cfg, 1.5, 42.0)
+        save_checkpoint(str(tmp_path), 2, tree())
+        tpath = tmp_path / "step_00000002" / "TUNING.json"
+        assert tpath.exists()
+        doc = json.loads(tpath.read_text())
+        assert doc["entries"][key]["strategy"] == "mxu"
+        assert doc["entries"][key]["schema"] == tuning.ENGINE_SCHEMA_VERSION
+
+        tuning.clear_sidecar()              # simulated fresh host
+        t = tree()
+        load_checkpoint(str(tmp_path), 2, jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t))
+        assert tuning._SIDECAR[key][0] == cfg
+
+    def test_restore_never_clobbers_local_winner(self, tmp_path):
+        from repro.core import tuning
+        key, shipped = self._entry(block=(8, 64))
+        tuning._SIDECAR[key] = (shipped, 1.5, 42.0)
+        save_checkpoint(str(tmp_path), 3, tree())
+
+        tuning.clear_sidecar()
+        _, local = self._entry(block=(16, 128))   # re-measured on this host
+        tuning._SIDECAR[key] = (local, 0.5, 7.0)
+        load_checkpoint(str(tmp_path), 3, jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree()))
+        assert tuning._SIDECAR[key][0] == local   # shipped entry lost
+
+    def test_empty_sidecar_writes_no_file(self, tmp_path):
+        save_checkpoint(str(tmp_path), 1, tree())
+        assert not (tmp_path / "step_00000001" / "TUNING.json").exists()
+        # and restoring a checkpoint without TUNING.json is fine
+        load_checkpoint(str(tmp_path), 1, jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree()))
+
+
 class TestElastic:
     def test_reshard_8_to_4_devices(self, tmp_path):
         """Save under an 8-device (4,2) mesh, restore under 4-device (2,2):

@@ -218,8 +218,9 @@ class TestChunkGeometryErrors:
 
 
 class TestTunerChunkDimension:
-    def test_schema_v4_and_chunked_candidates(self):
-        assert tuning.ENGINE_SCHEMA_VERSION == 4
+    def test_schema_bump_and_chunked_candidates(self):
+        # v4 added the chunk dimension; v5 (strategy) must not drop it.
+        assert tuning.ENGINE_SCHEMA_VERSION >= 4
         plan = linear_recurrence_plan(128)
         cands = tuning.candidate_configs(plan, (64, 4096), chunked=True)
         three = [c for c in cands if len(c.block) == 3]

@@ -16,8 +16,8 @@ import pytest
 from repro.core import (conv2d_batched_plan, conv2d_nchw_plan, conv2d_plan,
                         conv2d_same_plan, depthwise_conv1d_plan,
                         execute_conv_global, linear_recurrence_plan,
-                        run_scan_plan, run_window_plan, scan_plan,
-                        stencil2d_plan, stencil3d_plan)
+                        run_scan_plan, run_window_plan, run_window_plan_mxu,
+                        scan_plan, stencil2d_plan, stencil3d_plan)
 from repro.core import tuning
 from repro.kernels import ref
 from repro.kernels.stencils import BENCHMARKS
@@ -404,3 +404,254 @@ class TestEngineLoweredRecurrences:
         o2, _ = ssm.mamba_apply(p, x, ssm_state=4, conv_impl="interpret",
                                 scan_impl="engine")
         assert_close(o2, o1, 2e-4)
+
+
+# ---------------------------------------------------------------------------
+# MXU lowering strategy (DESIGN.md §13): im2row matmul vs VPU shift-fma
+# ---------------------------------------------------------------------------
+
+class TestMxuStrategy:
+    """Strategy equivalence matrix: for every windowed plan the MXU
+    (im2row-over-the-tap-set matmul) lowering must match the lanes
+    (shift-fma) lowering to fp32 tolerance, forward and under temporal
+    blocking — so the §5 tuner may choose between them on cost alone."""
+
+    @pytest.mark.parametrize("variant", VARIANTS)
+    @pytest.mark.parametrize("t", [1, 2])
+    @pytest.mark.parametrize("name", sorted(BENCHMARKS))
+    def test_table_matrix(self, rng, name, t, variant):
+        sdef = BENCHMARKS[name]
+        if sdef.ndim == 2:
+            x = jnp.array(rng.standard_normal((22, 48)), jnp.float32)
+            plan = stencil2d_plan(sdef.offsets, coeffs=sdef.coeffs)
+            block = (8, 16)
+        else:
+            x = jnp.array(rng.standard_normal((8, 10, 24)), jnp.float32)
+            plan = stencil3d_plan(sdef.offsets, coeffs=sdef.coeffs)
+            block = (4, 4, 8)
+        lanes = run_window_plan(x, plan=plan, block=block, time_steps=t,
+                                variant=variant, strategy="lanes")
+        mxu = run_window_plan(x, plan=plan, block=block, time_steps=t,
+                              variant=variant, strategy="mxu")
+        assert_close(mxu, lanes, 1e-4)
+        if t == 1:
+            assert_close(mxu, ref.stencil_iterate(x, sdef, 1), 1e-4)
+
+    def test_run_window_plan_mxu_wrapper(self, rng):
+        x = jnp.array(rng.standard_normal((20, 48)), jnp.float32)
+        w = jnp.array(rng.standard_normal((3, 5)), jnp.float32)
+        plan = conv2d_plan(5, 3)
+        a = run_window_plan_mxu(x, w, plan=plan, block=(8, 16))
+        b = run_window_plan(x, w, plan=plan, block=(8, 16), strategy="mxu")
+        assert_close(a, b, 1e-6)
+        assert_close(a, ref.conv2d_valid(x, w), 1e-4)
+
+    @pytest.mark.parametrize("bcc", [(1, 1, 1), (2, 3, 4), (3, 4, 2)])
+    @pytest.mark.parametrize("fshape", [(3, 3), (1, 7), (5, 2)])
+    def test_nchw_matrix(self, rng, bcc, fshape):
+        """NCHW reduce plans fold C_in·taps into one contraction — the
+        MXU path must agree with lanes and lax across B/C/filters."""
+        from repro.kernels import ops
+        B, C_in, C_out = bcc
+        N, M = fshape
+        x = jnp.array(rng.standard_normal((B, C_in, 12, 40)), jnp.float32)
+        w = jnp.array(rng.standard_normal((C_out, C_in, N, M)), jnp.float32)
+        lanes = ops.conv2d(x, w, mode="same", impl="interpret",
+                           strategy="lanes")
+        mxu = ops.conv2d(x, w, mode="same", impl="interpret", strategy="mxu")
+        assert_close(mxu, lanes, 1e-4)
+        assert_close(mxu, ref.conv2d_nchw(x, w, "same"), 1e-4)
+
+    def test_strided_conv_mxu(self, rng):
+        from repro.kernels import ops
+        x = jnp.array(rng.standard_normal((1, 3, 12, 40)), jnp.float32)
+        w = jnp.array(rng.standard_normal((2, 3, 3, 3)), jnp.float32)
+        want = ops.conv2d(x, w, mode="same", impl="xla", stride=(1, 2))
+        for s in ("lanes", "mxu"):
+            got = ops.conv2d(x, w, mode="same", impl="interpret",
+                             stride=(1, 2), strategy=s)
+            assert_close(got, want, 1e-4)
+
+    def test_conv1d_causal_strategies_agree(self, rng):
+        """Per-lane (depthwise) coefficients lower on the MXU as a
+        lane-batched contraction — same output as the shift-fma path."""
+        from repro.kernels import ops
+        x = jnp.array(rng.standard_normal((2, 37, 24)), jnp.float32)
+        w = jnp.array(rng.standard_normal((4, 24)), jnp.float32)
+        lanes = ops.conv1d_causal(x, w, impl="interpret", strategy="lanes")
+        mxu = ops.conv1d_causal(x, w, impl="interpret", strategy="mxu")
+        assert_close(mxu, lanes, 1e-4)
+        assert_close(mxu, ref.conv1d_causal(x, w), 1e-4)
+
+    def test_fused_pipeline_strategies_agree(self, rng):
+        from repro.kernels import ops
+        x = jnp.array(rng.standard_normal((40, 72)), jnp.float32)
+        chain = ["2d5pt", ("2d9pt", "gelu"), "2d5pt"]
+        lanes = ops.pipeline(x, chain, impl="interpret", fuse=True,
+                             strategy="lanes")
+        mxu = ops.pipeline(x, chain, impl="interpret", fuse=True,
+                           strategy="mxu")
+        assert_close(mxu, lanes, 1e-4)
+        assert_close(mxu, ops.pipeline(x, chain, impl="xla"), 1e-4)
+
+    @pytest.mark.parametrize("strategy", ["lanes", "mxu"])
+    def test_grouped_conv_vs_lax(self, rng, strategy):
+        """groups= slices the reduce axis per group: validated against
+        lax.conv_general_dilated's feature_group_count."""
+        from repro.kernels import ops
+        x = jnp.array(rng.standard_normal((2, 6, 10, 32)), jnp.float32)
+        w = jnp.array(rng.standard_normal((4, 3, 3, 3)), jnp.float32)
+        want = jax.lax.conv_general_dilated(
+            x, w, (1, 1), [(1, 1), (1, 1)],
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+            feature_group_count=2)
+        got = ops.conv2d(x, w, mode="same", impl="interpret", groups=2,
+                         strategy=strategy)
+        assert_close(got, want, 1e-4)
+        assert_close(ops.conv2d(x, w, mode="same", impl="xla", groups=2),
+                     want, 1e-4)
+
+    def test_depthwise_conv2d_groups(self, rng):
+        """groups == C_in == C_out/1-per-group: the depthwise-2d case."""
+        from repro.kernels import ops
+        C = 6
+        x = jnp.array(rng.standard_normal((2, C, 8, 24)), jnp.float32)
+        w = jnp.array(rng.standard_normal((C, 1, 3, 3)), jnp.float32)
+        want = jax.lax.conv_general_dilated(
+            x, w, (1, 1), [(1, 1), (1, 1)],
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+            feature_group_count=C)
+        got = ops.conv2d(x, w, mode="same", impl="interpret", groups=C,
+                         strategy="mxu")
+        assert_close(got, want, 1e-4)
+
+    def test_groups_validation_errors(self):
+        from repro.kernels import ops
+        x = jnp.zeros((1, 6, 8, 16), jnp.float32)
+        with pytest.raises(ValueError, match="group"):
+            ops.conv2d(x, jnp.zeros((4, 2, 3, 3), jnp.float32),
+                       impl="interpret", groups=4)   # 2*4 != 6
+        with pytest.raises(ValueError, match="group"):
+            ops.conv2d(x, jnp.zeros((3, 3, 3, 3), jnp.float32),
+                       impl="interpret", groups=2)   # C_out 3 % 2 != 0
+
+    def test_invalid_strategy_named_error(self):
+        from repro.kernels import ops
+        x = jnp.zeros((16, 32), jnp.float32)
+        with pytest.raises(ValueError, match="ops.stencil"):
+            ops.stencil(x, "2d5pt", impl="interpret", strategy="tensor")
+
+    def test_scan_plans_reject_strategy(self, rng):
+        from repro.kernels import ops
+        x = jnp.array(rng.standard_normal((4, 64)), jnp.float32)
+        with pytest.raises(ValueError, match="strategy"):
+            ops.cumsum(x, impl="interpret", strategy="mxu")
+
+    def test_fuse_rejects_conflicting_pins(self):
+        import dataclasses
+        from repro.core.fuse import fuse_plans
+        sdef = BENCHMARKS["2d5pt"]
+        mk = lambda s: dataclasses.replace(
+            stencil2d_plan(sdef.offsets, coeffs=sdef.coeffs), strategy=s)
+        with pytest.raises(ValueError, match="conflicting lowering"):
+            fuse_plans(mk("lanes"), mk("mxu"))
+        fused = fuse_plans(mk("mxu"), mk(None))   # one pin pins the chain
+        assert fused.strategy == "mxu"
+        assert fuse_plans(mk(None), mk(None)).strategy is None
+
+    # ---- tuner integration (schema v5) ------------------------------------
+
+    def test_candidates_enumerate_strategy(self):
+        import dataclasses
+        sdef = BENCHMARKS["2d25pt"]
+        plan = stencil2d_plan(sdef.offsets, coeffs=sdef.coeffs)
+        cands = tuning.candidate_configs(plan, (64, 96))
+        assert {"lanes", "mxu"} <= {c.strategy for c in cands}
+        pinned = dataclasses.replace(plan, strategy="mxu")
+        pcands = tuning.candidate_configs(pinned, (64, 96))
+        assert pcands and all(c.strategy == "mxu" for c in pcands)
+
+    def test_model_crossover_by_tap_count(self):
+        """§5 + MXU terms: narrow stencils stay on the VPU lanes, wide
+        tap sets flip to the matmul path — the shape-dependent choice
+        the strategy dimension exists to expose."""
+        def best(name):
+            sdef = BENCHMARKS[name]
+            plan = stencil2d_plan(sdef.offsets, coeffs=sdef.coeffs) \
+                if sdef.ndim == 2 else \
+                stencil3d_plan(sdef.offsets, coeffs=sdef.coeffs)
+            cands = tuning.candidate_configs(plan, (512, 512) if
+                                             sdef.ndim == 2 else (64, 64, 64))
+            return min(cands, key=lambda c: tuning.model_cost(plan, c))
+        assert best("2d5pt").strategy == "lanes"
+        assert best("2d9pt").strategy == "lanes"
+        assert best("2d25pt").strategy == "mxu"
+        assert best("2d121pt").strategy == "mxu"
+        assert best("3d27pt").strategy == "mxu"
+
+    def test_autotune_records_strategy_v5(self, rng, tmp_path, monkeypatch):
+        """Measured winners land in the sidecar with the strategy field
+        and the 6-component (strategy-keyed) v5 key."""
+        import json
+        from repro.kernels import ops
+        tuning.clear_cache()
+        tuning.clear_sidecar()
+        monkeypatch.setenv(tuning.SIDECAR_ENV, str(tmp_path / "side.json"))
+        try:
+            x = jnp.array(rng.standard_normal((48, 96)), jnp.float32)
+            out = ops.stencil(x, "2d25pt", impl="interpret", autotune=True,
+                              strategy="mxu")
+            assert_close(out, ref.stencil_iterate(x, BENCHMARKS["2d25pt"], 1),
+                         1e-4)
+            assert tuning._SIDECAR
+            key, (cfg, _, _) = next(iter(tuning._SIDECAR.items()))
+            parts = json.loads(key)
+            assert len(parts) == 6 and parts[-1] == "mxu"
+            assert cfg.strategy == "mxu"
+            entries = tuning.sidecar_entries()
+            assert all(v["schema"] == tuning.ENGINE_SCHEMA_VERSION
+                       and v["strategy"] == "mxu" for v in entries.values())
+        finally:
+            tuning.clear_sidecar()
+            tuning.clear_cache()
+
+    def test_nearest_seed_never_crosses_strategy(self):
+        """Satellite regression: nearest-shape seeding requires the
+        strategy key component to match — a winner tuned under an 'mxu'
+        pin must never seed an auto or 'lanes' tune."""
+        sdef = BENCHMARKS["2d9pt"]
+        plan = stencil2d_plan(sdef.offsets, coeffs=sdef.coeffs)
+        sig = tuning.plan_signature(plan)
+        tuning.clear_sidecar()
+        try:
+            cfg = tuning.KernelConfig((8, 64), "shift_psum", "mxu")
+            key = tuning._sidecar_key(sig, (128, 128), 1, (), "mxu")
+            tuning._SIDECAR[key] = (cfg, 1.0, 2.0)
+            assert tuning._nearest_sidecar(sig, (96, 96), 1, (), "mxu") == cfg
+            assert tuning._nearest_sidecar(sig, (96, 96), 1, (), "auto") \
+                is None
+            assert tuning._nearest_sidecar(sig, (96, 96), 1, (), "lanes") \
+                is None
+        finally:
+            tuning.clear_sidecar()
+
+    def test_stale_v4_sidecar_entries_ignored(self, tmp_path):
+        """v4 sidecars predate the strategy dimension (no strategy field,
+        5-component keys): both the file loader and the checkpoint merge
+        path must drop every entry — a v4 winner was never tuned over
+        the algorithm choice."""
+        import json
+        v4_key = json.dumps(["conv2d:5x3", [64, 64], 1, "cpu", []])
+        entries = {v4_key: {"block": [8, 128], "variant": "shift_psum",
+                            "model_cost": 1.0, "measured_us": 5.0,
+                            "schema": 4}}
+        path = tmp_path / "v4.json"
+        path.write_text(json.dumps({"version": 1, "entries": entries}))
+        tuning.clear_sidecar()
+        try:
+            assert tuning.load_sidecar(str(path)) == 0
+            assert not tuning._SIDECAR
+            assert tuning.merge_sidecar_entries(entries) == 0
+            assert not tuning._SIDECAR
+        finally:
+            tuning.clear_sidecar()
