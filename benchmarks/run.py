@@ -14,14 +14,16 @@ Prints ``name,us_per_call,derived`` CSV rows per the repo convention.
 | bench_fused (--fused)     | (beyond paper) | fused plan pipelines + epilogues vs the unfused HBM-round-trip sequence (stencil chain, Whisper stem) |
 | bench_scan_chunked (--scan-chunked) | (beyond paper) | chunk-streamed engine scans vs monolithic engine vs XLA chunked: tokens/sec + peak temp memory at long T |
 | bench_strategy (--strategy) | §5 + (beyond paper) | lanes (VPU shift-fma) vs mxu (im2row matmul) lowering per shape class: MB/s both ways, the tuner's pick, and §5 predicted-vs-measured ranking agreement |
+| bench_backend (--backend) | §4 + (beyond paper) | TPU lane-roll vs GPU warp-shift lowering of the same plans: per-backend MB/s + each backend's machine-model prediction |
 | bench_lm_roofline         | (assignment)   | summary of dry-run roofline artifacts |
 
 ``--json PATH`` additionally writes every row as machine-readable JSON
 (name, µs, parsed derived fields + run metadata) — the committed
 ``BENCH_5.json`` perf-trajectory artifact comes from
 ``--fused --json BENCH_5.json``, ``BENCH_6.json`` from
-``--scan-chunked --json BENCH_6.json`` and ``BENCH_7.json`` from
-``--strategy auto --json BENCH_7.json``.
+``--scan-chunked --json BENCH_6.json``, ``BENCH_7.json`` from
+``--strategy auto --json BENCH_7.json`` and ``BENCH_8.json`` from
+``--backend auto --json BENCH_8.json``.
 
 The container is CPU-only: wall-times are CPU XLA numbers that compare
 *schedules*, not TPU performance; TPU performance is reported by the
@@ -792,6 +794,96 @@ def bench_strategy(strategy: str = "auto", size2d: int = 160,
 
 
 # ---------------------------------------------------------------------------
+# Engine backends: TPU lane rolls vs GPU warp shifts (--backend)
+# ---------------------------------------------------------------------------
+
+def bench_backend(backend: str = "auto", size2d: int = 160, size3d: int = 24,
+                  rows: int = 8, T: int = 1024):
+    """TPU vs GPU engine lowering of the same plans — the BENCH_8 artifact.
+
+    The plan IR is backend-neutral; ``backend='tpu'`` lowers shifts as
+    whole-lane ``jnp.roll`` (the VREG lattice), ``backend='gpu'`` as
+    ``engine_gpu.warp_shift`` (intra-warp lane roll + SMEM-staged
+    inter-warp hand-off, the ``__shfl_up_sync`` emulation). For a
+    tap-count sweep of Table-3 stencils, a 5x5 conv and the scan pair,
+    measures each requested backend and reports MB/s of useful traffic
+    next to that backend's *own* machine-model prediction
+    (``perfmodel.machine_for``: TPUv5e lane geometry vs A100 warp
+    geometry — different latency tables, different best blocks).
+
+    With ``--backend auto`` both lowerings run on every shape, their
+    outputs are asserted fp32-identical, and each row carries the
+    model's predicted winner next to the measured one. Interpret-mode
+    wall-times compare schedules, not device performance: both backends
+    execute on the CPU interpreter here, so the wall-time gap measures
+    schedule overhead (warp staging vs whole-lane rolls) while the
+    model columns carry the per-device forecasts.
+    """
+    from repro.core import tuning
+    from repro.core.perfmodel import machine_for
+    from repro.kernels import ops
+    from repro.kernels import ssam_conv2d, ssam_stencil2d, ssam_stencil3d
+    from repro.kernels.stencils import BENCHMARKS
+
+    rng = np.random.default_rng(0)
+    backends = ("tpu", "gpu") if backend == "auto" else (backend,)
+    for b in backends:
+        m = machine_for(b)
+        _row(f"backend_machine_{b}", 0.0,
+             f"model={m.name};warp={m.warp};lanes={m.lanes};"
+             f"hbm_gbps={m.hbm_gbps}")
+    names = ["2d5pt", "2d9pt", "2d25pt", "2d121pt", "3d7pt", "3d27pt"]
+    print(f"# Backends {'+'.join(backends)}: stencils (2D {size2d}^2, "
+          f"3D {size3d}^3), conv2d 5x5, scans ({rows}, {T}); "
+          "interpret-mode wall-time")
+
+    def _report(tag, plan, shape, nbytes, run):
+        times, model = {}, {}
+        for b in backends:
+            t = tuning.measure_us(lambda: run(b))
+            cyc = min(tuning.model_cost(plan, c, backend=b) for c in
+                      tuning.candidate_configs(plan, shape, backend=b))
+            times[b], model[b] = t, cyc
+            _row(f"backend_{tag}_{b}", t,
+                 f"mb_s={nbytes / max(t, 1e-9):.2f};model_cyc={cyc:.2f}")
+        if len(backends) == 2:
+            np.testing.assert_allclose(
+                np.asarray(run("tpu")), np.asarray(run("gpu")),
+                rtol=1e-5, atol=1e-5, err_msg=tag)
+            _row(f"backend_{tag}_pick", 0.0,
+                 f"predicted={min(model, key=model.get)};"
+                 f"measured={min(times, key=times.get)}")
+
+    for name in names:
+        sdef = BENCHMARKS[name]
+        if sdef.ndim == 2:
+            x = jnp.array(rng.standard_normal((size2d, size2d)), jnp.float32)
+            mod = ssam_stencil2d
+        else:
+            x = jnp.array(rng.standard_normal((size3d,) * 3), jnp.float32)
+            mod = ssam_stencil3d
+        plan = mod.plan_for(sdef)
+        _report(name, plan, x.shape, x.size * 8,
+                lambda b, x=x, sdef=sdef: ops.stencil(
+                    x, sdef, impl="interpret", backend=b))
+
+    w = jnp.array(rng.standard_normal((5, 5)), jnp.float32)
+    x = jnp.array(rng.standard_normal((size2d, size2d)), jnp.float32)
+    plan = ssam_conv2d.plan_for(w.shape, "same")
+    _report("conv2d_5x5", plan, x.shape, x.size * 8,
+            lambda b: ops.conv2d(x, w, impl="interpret", backend=b))
+
+    a = jnp.array(rng.uniform(0.5, 1.0, (rows, T)), jnp.float32)
+    bb = jnp.array(rng.standard_normal((rows, T)), jnp.float32)
+    from repro.core.plan import linear_recurrence_plan, scan_plan
+    _report("cumsum", scan_plan(T), bb.shape, bb.size * 8,
+            lambda k: ops.cumsum(bb, impl="interpret", backend=k))
+    _report("linrec", linear_recurrence_plan(T), bb.shape, bb.size * 12,
+            lambda k: ops.linear_recurrence(a, bb, impl="interpret",
+                                            backend=k))
+
+
+# ---------------------------------------------------------------------------
 # LM roofline summary (assignment §Roofline)
 # ---------------------------------------------------------------------------
 
@@ -858,6 +950,13 @@ def main(argv=None) -> None:
              "measured ranking agreement (the BENCH_7.json artifact uses "
              "'auto'; 'lanes'/'mxu' measure only that lowering)")
     p.add_argument(
+        "--backend", default=None, choices=("tpu", "gpu", "auto"),
+        help="run the per-backend engine benchmark: TPU lane-roll vs GPU "
+             "warp-shift lowering of the same plans, MB/s per backend next "
+             "to each backend's machine-model prediction "
+             "(perfmodel.machine_for); 'auto' measures both and asserts "
+             "equivalence (the BENCH_8.json artifact uses 'auto')")
+    p.add_argument(
         "--json", default=None, metavar="PATH",
         help="also write every benchmark row as machine-readable JSON "
              "(per-kernel µs, MB/s, tuned config, §5 prediction, fused vs "
@@ -878,6 +977,8 @@ def main(argv=None) -> None:
             bench_scan_chunked()
         elif args.strategy:
             bench_strategy(args.strategy)
+        elif args.backend:
+            bench_backend(args.backend)
         elif args.batch is not None or args.channels is not None:
             ch = tuple(int(v) for v in (args.channels or "3,8").split(","))
             bench_conv2d_batched(args.batch if args.batch is not None else 4,

@@ -55,6 +55,52 @@ SHAPES = {
 LONG_CONTEXT_ARCHS = {"rwkv6_1g6b", "hymba_1g5b", "gemma3_1b"}
 
 
+# ---------------------------------------------------------------------------
+# Engine backend default (DESIGN.md §14)
+#
+# Which *lowering* of the plan IR `run_window_plan`/`run_scan_plan` pick
+# when the caller passes backend=None: "tpu" (core/engine.py's
+# sublane/lane tiling) or "gpu" (core/engine_gpu.py's warp-shuffle
+# tiling). Distinct from jax.default_backend() — that is the device
+# platform; this is which kernel *shape* we emit (the GPU lowering runs
+# fine in interpret mode on CPU, which is how CI proves equivalence).
+
+ENGINE_BACKENDS = ("tpu", "gpu")
+ENGINE_BACKEND_ENV = "REPRO_ENGINE_BACKEND"
+_ENGINE_BACKEND: str | None = None
+
+
+def resolve_engine_backend(backend: str) -> str:
+    """Normalize a user-facing backend name; ``auto`` follows the jax
+    platform (GPU devices get the GPU lowering, everything else TPU)."""
+    if backend == "auto":
+        import jax
+
+        return "gpu" if jax.default_backend() == "gpu" else "tpu"
+    if backend not in ENGINE_BACKENDS:
+        raise ValueError(
+            f"unknown engine backend {backend!r}: expected one of "
+            f"{ENGINE_BACKENDS + ('auto',)}")
+    return backend
+
+
+def engine_backend() -> str:
+    """The session's default engine backend: ``set_engine_backend()`` if
+    called, else ``$REPRO_ENGINE_BACKEND``, else ``auto``."""
+    import os
+
+    if _ENGINE_BACKEND is not None:
+        return _ENGINE_BACKEND
+    return resolve_engine_backend(os.environ.get(ENGINE_BACKEND_ENV, "auto"))
+
+
+def set_engine_backend(backend: str | None) -> None:
+    """Pin the process-wide default engine backend (``None`` restores the
+    env/auto resolution)."""
+    global _ENGINE_BACKEND
+    _ENGINE_BACKEND = None if backend is None else resolve_engine_backend(backend)
+
+
 def normalize_arch(arch: str) -> str:
     arch = arch.replace("-", "_").replace(".", "g")
     return ARCH_IDS.get(arch, arch)

@@ -204,6 +204,39 @@ def adjoint_coeff_array(plan: SystolicPlan, w):
     return jnp.transpose(w, perm)
 
 
+def fold_replicate_edges(plan: SystolicPlan, dxp):
+    """Transpose of the edge clamp ``E``: fold halo bands onto the edges.
+
+    A ``boundary='replicate'`` forward is ``y = V(E x)`` — the
+    valid-mode plan ``V`` on the edge-extended input ``E x``, where
+    ``E`` repeats row 0 ``lead`` times ahead of the domain and row
+    ``N−1`` ``trail`` times behind it (per windowed axis). ``Eᵀ`` is a
+    scatter-add back through that fan-out: every cotangent row that was
+    *read from* a clamped copy accumulates onto the edge row it was
+    copied from. Given ``dxp = Vᵀ g`` on the widened lattice
+    (``N + lead + trail`` rows per axis), this folds, per axis, rows
+    ``[0, lead]`` into the new first row and rows ``[lead+N−1, end)``
+    into the new last row, returning the ``N``-row gradient.
+    """
+    lead, trail = plan.lead_trail()
+    nd = dxp.ndim - plan.ndim_spatial
+    for a, (l, r) in enumerate(zip(lead, trail)):
+        if l == 0 and r == 0:
+            continue
+        ax = nd + a
+        n = dxp.shape[ax] - l - r
+        if n == 1:
+            dxp = jnp.sum(dxp, axis=ax, keepdims=True)
+            continue
+        head = jnp.sum(jax.lax.slice_in_dim(dxp, 0, l + 1, axis=ax),
+                       axis=ax, keepdims=True)
+        tail = jnp.sum(jax.lax.slice_in_dim(dxp, l + n - 1, l + n + r,
+                                            axis=ax), axis=ax, keepdims=True)
+        mid = jax.lax.slice_in_dim(dxp, l + 1, l + n - 1, axis=ax)
+        dxp = jnp.concatenate([head, mid, tail], axis=ax)
+    return dxp
+
+
 # ---------------------------------------------------------------------------
 # Epilogues: the jnp replay and its VJP (DESIGN.md §11.4)
 # ---------------------------------------------------------------------------

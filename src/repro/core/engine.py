@@ -383,57 +383,32 @@ def _window_kernel(*refs, plan: SystolicPlan, block: tuple[int, ...],
         o_ref[o_idx] = epilogue_fn(res).astype(o_ref.dtype)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("plan", "block", "time_steps", "variant", "interpret",
-                     "acc_dtype", "strategy"),
-)
-def run_window_plan(
+def _window_call(
     x: jax.Array,
-    w=None,
+    w,
     *,
     plan: SystolicPlan,
     block: tuple[int, ...],
-    time_steps: int = 1,
-    variant: str = "shift_psum",
-    interpret: bool = True,
-    acc_dtype=jnp.float32,
-    epilogue_args: tuple = (),
-    strategy: str | None = None,
+    time_steps: int,
+    variant: str,
+    interpret: bool,
+    acc_dtype,
+    epilogue_args: tuple,
+    make_kernel,
+    make_scratch,
 ) -> jax.Array:
-    """Lower a windowed plan to a Pallas call and run it.
+    """Backend-shared windowed-family driver (DESIGN.md §14).
 
-    Args:
-      x: ``batch_axes + reduce_axes + ndim_spatial``-dim input, lane axis
-        last.
-      w: runtime coefficients for ``coeff_mode`` 'dense' (full filter,
-        prefixed by ``out_axes + reduce_axes`` channel axes for reduce
-        plans) or 'perlane' (``(K, lanes)`` rows); None for 'table' plans.
-        For a fused pipeline (``plan.stages``), a tuple with one entry
-        per stage — an array for 'dense' stages, None for 'table' ones.
-      plan: the systolic schedule + geometry (lead/trail, footprint).
-      block: output block size per windowed axis, lane axis last.
-      time_steps: fused plan applications per block (§6.4).
-      epilogue_args: runtime operands of the chain's operand-bearing
-        epilogue stages, in application order (mid-chain ``bias``
-        entries first for fused pipelines, the final stage's last) —
-        ``bias`` (per-C_out for out-axes plans, per-lane for perlane
-        plans, scalar otherwise; always scalar mid-chain) and/or
-        ``residual_add`` (shaped like the output, final stage only).
-      strategy: pin the lowering strategy for this call ('lanes' or
-        'mxu', DESIGN.md §13); None keeps whatever the plan carries.
-
-    Returns:
-      The plan's output, ``batch + out_axes + spatial``-shaped: per
-      windowed axis, ``out = (in + t·(lead+trail) − t·(ext−1) − 1) //
-      stride + 1``; reduce axes are contracted away (fp32 grid
-      accumulator).
+    Everything about a windowed lowering that is backend-*independent*
+    lives here: plan validation, the t-widened origin/halo padding, the
+    overlapped ``pl.Unblocked`` input BlockSpecs, coefficient/epilogue
+    operand layout, the batch × out × spatial × reduce grid, and the
+    final valid crop. A backend contributes only its kernel body and
+    scratch request — ``make_kernel(B)`` → kernel fn for output block
+    ``B``, ``make_scratch(B, in_block)`` → ``scratch_shapes`` list — so
+    the TPU (sublane/lane) and GPU (warp-shuffle + SMEM skirt) lowerings
+    share one geometry and can only differ in how a block is computed.
     """
-    if strategy is not None:
-        # kwarg convenience for the thin family wrappers + tuner replay:
-        # the strategy still lives on the plan IR (adjoints/fusion
-        # inherit it from there), this just pins it at the call site.
-        plan = dataclasses.replace(plan, strategy=strategy)
     nb, nr, no, nd = (plan.batch_axes, plan.reduce_axes, plan.out_axes,
                       plan.ndim_spatial)
     assert x.ndim == nb + nr + nd, (x.shape, nb, nr, nd)
@@ -554,12 +529,8 @@ def run_window_plan(
                 (1,) * (nb + no) + B, lambda *ids: ids[:rd0]))
             operands.append(rp)
 
-    kern = functools.partial(
-        _window_kernel, plan=plan, block=B, time_steps=t, variant=variant,
-        acc_dtype=acc_dtype,
-    )
     out = pl.pallas_call(
-        kern,
+        make_kernel(B),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1,) * (nb + no) + B,
@@ -567,11 +538,115 @@ def run_window_plan(
         out_shape=jax.ShapeDtypeStruct(
             batch_dims + out_dims + tuple(gi * bi for gi, bi in zip(g, B)),
             x.dtype),
-        scratch_shapes=[pltpu.VMEM(B, acc_dtype)] if nr else [],
+        scratch_shapes=make_scratch(B, in_block),
         interpret=interpret,
     )(*operands)
     return out[(slice(None),) * (nb + no)
                + tuple(slice(0, o) for o in out_sp)]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("plan", "block", "time_steps", "variant", "interpret",
+                     "acc_dtype", "strategy"),
+)
+def _run_window_plan_tpu(
+    x: jax.Array,
+    w=None,
+    *,
+    plan: SystolicPlan,
+    block: tuple[int, ...],
+    time_steps: int = 1,
+    variant: str = "shift_psum",
+    interpret: bool = True,
+    acc_dtype=jnp.float32,
+    epilogue_args: tuple = (),
+    strategy: str | None = None,
+) -> jax.Array:
+    """The TPU lowering: 8×128 sublane/lane tiles, VPU lane rolls for
+    ``shift_psum``, fp32 VMEM scratch for the reduce accumulator."""
+    if strategy is not None:
+        # kwarg convenience for the thin family wrappers + tuner replay:
+        # the strategy still lives on the plan IR (adjoints/fusion
+        # inherit it from there), this just pins it at the call site.
+        plan = dataclasses.replace(plan, strategy=strategy)
+
+    def make_kernel(B):
+        return functools.partial(
+            _window_kernel, plan=plan, block=B, time_steps=time_steps,
+            variant=variant, acc_dtype=acc_dtype)
+
+    def make_scratch(B, in_block):
+        return [pltpu.VMEM(B, acc_dtype)] if plan.reduce_axes else []
+
+    return _window_call(
+        x, w, plan=plan, block=block, time_steps=time_steps,
+        variant=variant, interpret=interpret, acc_dtype=acc_dtype,
+        epilogue_args=epilogue_args, make_kernel=make_kernel,
+        make_scratch=make_scratch)
+
+
+def run_window_plan(
+    x: jax.Array,
+    w=None,
+    *,
+    plan: SystolicPlan,
+    block: tuple[int, ...],
+    time_steps: int = 1,
+    variant: str = "shift_psum",
+    interpret: bool = True,
+    acc_dtype=jnp.float32,
+    epilogue_args: tuple = (),
+    strategy: str | None = None,
+    backend: str | None = None,
+) -> jax.Array:
+    """Lower a windowed plan to a Pallas call and run it.
+
+    Args:
+      x: ``batch_axes + reduce_axes + ndim_spatial``-dim input, lane axis
+        last.
+      w: runtime coefficients for ``coeff_mode`` 'dense' (full filter,
+        prefixed by ``out_axes + reduce_axes`` channel axes for reduce
+        plans) or 'perlane' (``(K, lanes)`` rows); None for 'table' plans.
+        For a fused pipeline (``plan.stages``), a tuple with one entry
+        per stage — an array for 'dense' stages, None for 'table' ones.
+      plan: the systolic schedule + geometry (lead/trail, footprint).
+      block: output block size per windowed axis, lane axis last.
+      time_steps: fused plan applications per block (§6.4).
+      epilogue_args: runtime operands of the chain's operand-bearing
+        epilogue stages, in application order (mid-chain ``bias``
+        entries first for fused pipelines, the final stage's last) —
+        ``bias`` (per-C_out for out-axes plans, per-lane for perlane
+        plans, scalar otherwise; always scalar mid-chain) and/or
+        ``residual_add`` (shaped like the output, final stage only).
+      strategy: pin the lowering strategy for this call ('lanes' or
+        'mxu', DESIGN.md §13); None keeps whatever the plan carries.
+      backend: which lowering of the plan IR to emit — 'tpu'
+        (:func:`_run_window_plan_tpu`), 'gpu'
+        (:func:`repro.core.engine_gpu.run_window_plan_gpu`: warp-shuffle
+        psum shifts + SMEM halo skirt, DESIGN.md §14) or 'auto'; None
+        defers to :func:`repro.config.engine_backend`. Both backends run
+        under ``interpret=True`` on any host, which is how CI proves
+        their equivalence.
+
+    Returns:
+      The plan's output, ``batch + out_axes + spatial``-shaped: per
+      windowed axis, ``out = (in + t·(lead+trail) − t·(ext−1) − 1) //
+      stride + 1``; reduce axes are contracted away (fp32 grid
+      accumulator).
+    """
+    from repro.config import engine_backend, resolve_engine_backend
+
+    backend = (resolve_engine_backend(backend) if backend is not None
+               else engine_backend())
+    kw = dict(plan=plan, block=block, time_steps=time_steps, variant=variant,
+              interpret=interpret, acc_dtype=acc_dtype,
+              epilogue_args=epilogue_args, strategy=strategy)
+    if backend == "gpu":
+        from . import engine_gpu
+
+        return engine_gpu.run_window_plan_gpu(x, w, **kw)
+    return _run_window_plan_tpu(x, w, **kw)
 
 
 def run_window_plan_mxu(x: jax.Array, w=None, *, plan: SystolicPlan, **kw):
@@ -816,33 +891,21 @@ def _scan_kernel(*refs, plan: SystolicPlan, acc_dtype, has_carry: bool,
         co_ref[:] = carry[:].astype(co_ref.dtype)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("plan", "block_r", "interpret", "acc_dtype",
-                              "return_carry")
-)
-def run_scan_plan(
+def _scan_call(
     *operands: jax.Array,
     plan: SystolicPlan,
-    block_r: int = 8,
-    interpret: bool = True,
-    acc_dtype=jnp.float32,
-    carry: jax.Array | None = None,
-    return_carry: bool = False,
+    block_r: int,
+    interpret: bool,
+    acc_dtype,
+    carry: jax.Array | None,
+    return_carry: bool,
+    make_kernel,
+    make_scratch,
 ):
-    """Lower a scan/recurrence plan over ``(R, T)`` operands.
-
-    ``plan.S`` is the lane-tile width BT (a power of two); T is tiled into
-    sequential grid steps whose carries ride in VMEM scratch. Padding uses
-    the combine's identity element ('add': 0; 'linrec': (1, 0)) so padded
-    tail lanes are no-ops. ``plan.epilogue`` may carry *operand-free*
-    elementwise stages (gelu/silu/relu/scale), applied to the stored
-    output only — the carry keeps the raw scan state.
-
-    ``carry`` (``(R,)`` or ``(R, 1)``) seeds the VMEM carry — the state
-    h₋₁ entering the first tile — and ``return_carry=True`` additionally
-    returns the final raw state ``(R, 1)``; together they promote the
-    intra-kernel VMEM carry to an inter-chunk carry (DESIGN.md §12).
-    """
+    """Backend-shared scan-family driver (DESIGN.md §14): identity-element
+    padding, the ``(R, T)`` tiling with T sequential, carry-in/-out spec
+    plumbing. The backend contributes the Kogge–Stone kernel body
+    (``make_kernel()``) and its carry scratch (``make_scratch(BR)``)."""
     if epilogue_operand_stages(plan.epilogue):
         raise ValueError(
             f"scan plans take operand-free epilogue stages only, got "
@@ -865,8 +928,7 @@ def run_scan_plan(
         c = carry.reshape(R, 1).astype(operands[0].dtype)
         padded.append(jnp.pad(c, ((0, gr * BR - R), (0, 0))))
 
-    kern = functools.partial(_scan_kernel, plan=plan, acc_dtype=acc_dtype,
-                             has_carry=has_carry, want_carry=return_carry)
+    kern = make_kernel(has_carry)
     in_specs = [pl.BlockSpec((BR, BT), lambda i, j: (i, j))] * (len(padded)
                                                                 - has_carry)
     if has_carry:
@@ -885,13 +947,85 @@ def run_scan_plan(
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
-        scratch_shapes=[pltpu.VMEM((BR, 1), acc_dtype)],
+        scratch_shapes=make_scratch(BR),
         interpret=interpret,
     )(*padded)
     if return_carry:
         out, co = res
         return out[:R, :T], co[:R]
     return res[:R, :T]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("plan", "block_r", "interpret", "acc_dtype",
+                              "return_carry")
+)
+def _run_scan_plan_tpu(
+    *operands: jax.Array,
+    plan: SystolicPlan,
+    block_r: int = 8,
+    interpret: bool = True,
+    acc_dtype=jnp.float32,
+    carry: jax.Array | None = None,
+    return_carry: bool = False,
+):
+    """The TPU scan lowering: VPU lane rolls for the Kogge–Stone arrows,
+    inter-tile carry in VMEM scratch."""
+
+    def make_kernel(has_carry):
+        return functools.partial(_scan_kernel, plan=plan,
+                                 acc_dtype=acc_dtype, has_carry=has_carry,
+                                 want_carry=return_carry)
+
+    def make_scratch(BR):
+        return [pltpu.VMEM((BR, 1), acc_dtype)]
+
+    return _scan_call(
+        *operands, plan=plan, block_r=block_r, interpret=interpret,
+        acc_dtype=acc_dtype, carry=carry, return_carry=return_carry,
+        make_kernel=make_kernel, make_scratch=make_scratch)
+
+
+def run_scan_plan(
+    *operands: jax.Array,
+    plan: SystolicPlan,
+    block_r: int = 8,
+    interpret: bool = True,
+    acc_dtype=jnp.float32,
+    carry: jax.Array | None = None,
+    return_carry: bool = False,
+    backend: str | None = None,
+):
+    """Lower a scan/recurrence plan over ``(R, T)`` operands.
+
+    ``plan.S`` is the lane-tile width BT (a power of two); T is tiled into
+    sequential grid steps whose carries ride in VMEM scratch. Padding uses
+    the combine's identity element ('add': 0; 'linrec': (1, 0)) so padded
+    tail lanes are no-ops. ``plan.epilogue`` may carry *operand-free*
+    elementwise stages (gelu/silu/relu/scale), applied to the stored
+    output only — the carry keeps the raw scan state.
+
+    ``carry`` (``(R,)`` or ``(R, 1)``) seeds the VMEM carry — the state
+    h₋₁ entering the first tile — and ``return_carry=True`` additionally
+    returns the final raw state ``(R, 1)``; together they promote the
+    intra-kernel VMEM carry to an inter-chunk carry (DESIGN.md §12).
+
+    ``backend`` picks the lowering ('tpu'/'gpu'/'auto', DESIGN.md §14);
+    None defers to :func:`repro.config.engine_backend`. The GPU lowering
+    runs Kogge–Stone arrows shorter than a warp as intra-warp shuffles
+    and warp-crossing arrows through the shared-memory hand-off.
+    """
+    from repro.config import engine_backend, resolve_engine_backend
+
+    backend = (resolve_engine_backend(backend) if backend is not None
+               else engine_backend())
+    kw = dict(plan=plan, block_r=block_r, interpret=interpret,
+              acc_dtype=acc_dtype, carry=carry, return_carry=return_carry)
+    if backend == "gpu":
+        from . import engine_gpu
+
+        return engine_gpu.run_scan_plan_gpu(*operands, **kw)
+    return _run_scan_plan_tpu(*operands, **kw)
 
 
 def check_chunk_geometry(plan: SystolicPlan, chunk: int) -> None:
@@ -929,6 +1063,7 @@ def run_scan_plan_chunked(
     acc_dtype=jnp.float32,
     carry: jax.Array | None = None,
     return_carry: bool = False,
+    backend: str | None = None,
 ):
     """Stream a scan/recurrence plan over ``(R, chunk)`` slabs (§12).
 
@@ -956,7 +1091,8 @@ def run_scan_plan_chunked(
                       for o in padded)
         out, c_new = run_scan_plan(
             *slabs, plan=plan, block_r=block_r, interpret=interpret,
-            acc_dtype=acc_dtype, carry=c, return_carry=True)
+            acc_dtype=acc_dtype, carry=c, return_carry=True,
+            backend=backend)
         return c_new, out
 
     c_fin, outs = jax.lax.scan(jax.checkpoint(body), c0, jnp.arange(nc))

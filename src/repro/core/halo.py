@@ -119,10 +119,12 @@ def check_shard_geometry(
     ``mesh_per_axis[a]`` is ``(mesh_axis_name, size)`` for sharded
     domain axes, None for replicated ones. Raises ``ValueError`` — not
     an XLA shape error deep inside ``pallas_call`` — when a mesh axis
-    does not divide its domain axis, when the resulting shard is smaller
-    than the halo the plan needs from one neighbor (single-hop
-    ``ppermute`` exchange requirement), or when a sharded axis is not
-    shape-preserving.
+    does not divide its domain axis, when the halo is wider than the
+    whole domain axis (no exchange schedule can source rows that do not
+    exist), or when a sharded axis is not shape-preserving. A halo
+    wider than one *shard* is fine: the exchange layer chains
+    ``ppermute`` hops across as many neighbors as the width spans
+    (``halo_exchange._multihop_slab``).
     """
     halos = shard_halo(plan, time_steps)
     local = []
@@ -145,12 +147,12 @@ def check_shard_geometry(
                 "pick a mesh whose axis divides it")
         shard = n // size
         lo, hi = halos[a]
-        if size > 1 and max(lo, hi) > shard:
+        if size > 1 and max(lo, hi) > n:
             raise ValueError(
-                f"shard of domain axis {a} is smaller than the plan's halo: "
-                f"{shard} rows per device on mesh axis {name!r} but "
-                f"time_steps={time_steps} needs a ({lo}, {hi}) halo from "
-                "each neighbor; use fewer devices, a larger domain, or "
-                "fewer fused time steps")
+                f"the plan's halo is wider than domain axis {a} itself: "
+                f"time_steps={time_steps} needs a ({lo}, {hi}) halo but the "
+                f"axis has only {n} rows in total; no exchange over mesh "
+                f"axis {name!r} can source rows beyond the domain — shrink "
+                "time_steps or grow the domain")
         local.append(shard)
     return tuple(local)

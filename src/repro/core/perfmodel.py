@@ -44,6 +44,27 @@ class HardwareLatencies:
     t_mxu_stage: float = 0.0  # im2row operand staging per tap row element
 
 
+@dataclasses.dataclass(frozen=True)
+class MachineModel(HardwareLatencies):
+    """A :class:`HardwareLatencies` row plus the machine *geometry* the
+    tuner and the §14 GPU lowering need: lane/warp widths (which tile
+    shapes are natural), HBM bandwidth (the roofline denominator of
+    :func:`repro.core.tuning.model_cost`), and the engine backend this
+    row describes (``"tpu"`` or ``"gpu"`` — the dispatch key of
+    :func:`machine_for`, NOT jax's device platform).
+
+    On TPU a "warp" is the 8-sublane group of a VREG and ``lanes`` the
+    128-lane minor axis; on GPU ``warp`` is the 32-thread shuffle scope
+    of ``__shfl_up_sync`` and ``lanes`` the threads-per-block the engine
+    tiles the minor axis with (4 warps — the CUDA-guide default block).
+    """
+
+    lanes: int = 128        # natural minor-axis tile width
+    warp: int = 8           # shuffle scope: lanes reachable in one t_shfl
+    hbm_gbps: float = 800.0  # memory-bound roofline denominator
+    backend: str = "tpu"    # engine backend this row models
+
+
 # Paper Table 2 (measured by the authors' micro-benchmarks).
 P100 = HardwareLatencies("P100", t_shfl=33, t_mad=6, t_smem_read=33, t_reg=1, t_gmem_read=300)
 V100 = HardwareLatencies("V100", t_shfl=22, t_mad=4, t_smem_read=27, t_reg=1, t_gmem_read=300)
@@ -55,9 +76,39 @@ V100 = HardwareLatencies("V100", t_shfl=22, t_mad=4, t_smem_read=27, t_reg=1, t_
 # With the 8-row alignment floor these put the lanes/mxu crossover
 # around ~20 taps: 5/9-point stars stay on the VPU, 25/27-point boxes
 # flip to the MXU — the shape dependence of arxiv 2406.08923.
-TPU_V5E = HardwareLatencies("TPUv5e", t_shfl=2, t_mad=1, t_smem_read=8,
-                            t_reg=0, t_gmem_read=200,
-                            t_mxu_mac=1 / 16, t_mxu_stage=0.7)
+TPU_V5E = MachineModel("TPUv5e", t_shfl=2, t_mad=1, t_smem_read=8,
+                       t_reg=0, t_gmem_read=200,
+                       t_mxu_mac=1 / 16, t_mxu_stage=0.7,
+                       lanes=128, warp=8, hbm_gbps=819.0, backend="tpu")
+# A100-shaped entry: scaled from the paper's measured V100 row along the
+# Volta→Ampere deltas (shuffle and SMEM latency roughly halved, FMA
+# issue unchanged, HBM2e ~1.94× V100's 900 GB/s) plus the tensor-core
+# terms of the §13 im2row lowering (a 16×8×16 mma.sync retires ~8× the
+# CUDA-core FMA rate → ~0.5 cyc per warp-normalized MAC; ldmatrix
+# staging ~1 cyc/row, poorly overlapped vs the MXU's decoupled DMA).
+# Estimates, clearly marked as such (arxiv 2406.08923's tuning study is
+# the calibration target once a GPU runner exists) — they feed the
+# *relative* rankings of the tuner, never absolute wall-time claims.
+A100 = MachineModel("A100", t_shfl=11, t_mad=4, t_smem_read=19,
+                    t_reg=1, t_gmem_read=290,
+                    t_mxu_mac=0.5, t_mxu_stage=1.0,
+                    lanes=128, warp=32, hbm_gbps=1555.0, backend="gpu")
+
+#: Engine-backend → machine description consumed by ``model_cost`` and
+#: the tuner's candidate enumeration. One entry per *backend*, not per
+#: SKU — recalibration swaps the row, not the key.
+MACHINES: dict[str, MachineModel] = {"tpu": TPU_V5E, "gpu": A100}
+
+
+def machine_for(backend: str) -> MachineModel:
+    """The :class:`MachineModel` for an engine backend (``tpu``/``gpu``)."""
+    try:
+        return MACHINES[backend]
+    except KeyError:
+        raise ValueError(
+            f"no machine model for backend {backend!r}: known backends are "
+            f"{sorted(MACHINES)} (register one in perfmodel.MACHINES)"
+        ) from None
 
 
 def l_smem(hw: HardwareLatencies, M: int, N: int) -> float:

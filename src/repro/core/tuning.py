@@ -52,7 +52,8 @@ from typing import Callable, Sequence
 
 import jax
 
-from .perfmodel import TPU_V5E, HardwareLatencies, mxu_tap_rows
+from .perfmodel import (TPU_V5E, HardwareLatencies, machine_for,
+                        mxu_tap_rows)
 from .plan import SystolicPlan
 
 SIDECAR_ENV = "REPRO_TUNING_CACHE"
@@ -78,7 +79,13 @@ SIDECAR_ENV = "REPRO_TUNING_CACHE"
 #        §13) and sidecar keys gain a sixth component (the plan's pinned
 #        strategy, or 'auto') so nearest-shape seeding never crosses
 #        strategies; v4 entries never tuned over the algorithm choice.
-ENGINE_SCHEMA_VERSION = 5
+#   v6 — engine backend: sidecar keys gain a seventh component (the
+#        engine backend, 'tpu' | 'gpu', DESIGN.md §14) and candidates
+#        come from backend-specific grids (warp-multiple pow2 tiles on
+#        GPU vs 8×128 sublane/lane tiles on TPU), so a winner measured
+#        against one lowering never replays — or seeds — the other;
+#        v5 entries never recorded which lowering they measured.
+ENGINE_SCHEMA_VERSION = 6
 
 # VMEM working-set budget per block (f32 elements): input block + psum +
 # output must fit comfortably in ~16 MB VMEM; stay conservative.
@@ -90,6 +97,28 @@ _WINDOW_BLOCK_Z = (4, 8, 16)
 _SCAN_BLOCK_R = (8, 16, 32)
 _SCAN_BLOCK_T = (128, 256, 512, 1024)
 _SCAN_CHUNK_TILES = (1, 2, 4)        # chunk = m × lane tile (streamed scans)
+
+# GPU candidate grids (DESIGN.md §14): warp-multiple pow2 tiles — the
+# Triton tile-chooser idiom (BLOCK = next_pow2(n), masked overhang)
+# rather than the TPU's 8×128 sublane/lane tiling. Lane tiles are whole
+# multiples of the 32-lane warp so every shift_psum hop decomposes into
+# intra-warp shuffles + whole-warp hand-offs; row tiles stay small
+# because GPU blocks hold 4 warps, not 8 sublanes of a VREG.
+_GPU_BLOCK_H = (4, 8, 16, 32)
+_GPU_BLOCK_W = (32, 64, 128, 256)
+_GPU_BLOCK_Z = (2, 4, 8)
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
+def _engine_backend(backend: str | None) -> str:
+    """Resolve the tuner's backend argument against the config default."""
+    from repro.config import engine_backend, resolve_engine_backend
+
+    return (engine_backend() if backend is None
+            else resolve_engine_backend(backend))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -141,8 +170,13 @@ def clear_cache() -> None:
 
 
 def _cache_key(plan: SystolicPlan, shape: tuple[int, ...], time_steps: int,
-               context: tuple = ()):
-    return (plan, tuple(shape), time_steps, jax.default_backend(), context)
+               context: tuple = (), backend: str = "tpu"):
+    # jax.default_backend() is the device *platform* (cpu/tpu/gpu host);
+    # ``backend`` is the engine lowering ('tpu'/'gpu' kernel shape) —
+    # both dimensions key winners, e.g. interpret-mode GPU lowering on a
+    # CPU host is (platform='cpu', backend='gpu').
+    return (plan, tuple(shape), time_steps, jax.default_backend(), context,
+            backend)
 
 
 # ---------------------------------------------------------------------------
@@ -172,12 +206,15 @@ def _jsonable(obj):
 
 
 def _sidecar_key(sig: str, shape, time_steps: int, context: tuple,
-                 strategy: str = "auto") -> str:
+                 strategy: str = "auto", backend: str = "tpu") -> str:
     # strategy is the *plan's* pinned strategy (or 'auto'): a plan pinned
     # to 'mxu' must never replay — or seed from — winners tuned while the
-    # tuner was free to pick, and vice versa.
+    # tuner was free to pick, and vice versa. backend (v6, seventh
+    # component) is the engine lowering the winner was measured against:
+    # a GPU warp-tile winner means nothing to the TPU kernel and vice
+    # versa, so winners never cross backends.
     return json.dumps([sig, list(shape), time_steps, jax.default_backend(),
-                       _jsonable(context), strategy])
+                       _jsonable(context), strategy, backend])
 
 
 # sidecar key → (KernelConfig, model_cost, measured_us)
@@ -261,23 +298,28 @@ def _sidecar_store(skey: str, result: TuneResult) -> None:
 
 
 def _nearest_sidecar(sig: str, shape, time_steps: int, context: tuple,
-                     strategy: str = "auto") -> KernelConfig | None:
+                     strategy: str = "auto",
+                     backend: str = "tpu") -> KernelConfig | None:
     """The winner of the closest already-tuned shape of the same plan.
 
-    Same plan signature, time_steps, backend, context **and pinned
-    strategy** — a neighbor tuned under a different strategy pin ran a
-    different algorithm, so its winner must never seed this one (the v5
-    key carries the strategy component precisely to enforce that).
+    Same plan signature, time_steps, platform, context, pinned
+    strategy **and engine backend** — a neighbor tuned under a different
+    strategy pin ran a different algorithm, and one tuned against the
+    other backend ran a different kernel entirely, so neither may seed
+    this one (the v5/v6 key components exist precisely to enforce that).
     Closest by summed |log| ratio of extents. Seeding replays that
     winner with no measurement — the engine clamps blocks to the output
     shape, so the neighbor's config is always runnable on the new shape.
     """
     want = [sig, time_steps, jax.default_backend(), _jsonable(context),
-            strategy]
+            strategy, backend]
     best, best_d = None, None
     for key, (cfg, _, _) in _SIDECAR.items():
-        ksig, kshape, kt, kbackend, kctx, kstrat = json.loads(key)
-        if ([ksig, kt, kbackend, kctx, kstrat] != want
+        try:
+            ksig, kshape, kt, kplat, kctx, kstrat, kback = json.loads(key)
+        except ValueError:      # pre-v6 key arity smuggled past the
+            continue            # schema gate: never a seed candidate
+        if ([ksig, kt, kplat, kctx, kstrat, kback] != want
                 or len(kshape) != len(shape)):
             continue
         d = sum(abs(math.log(k / s)) for k, s in zip(kshape, shape))
@@ -341,6 +383,7 @@ def candidate_configs(
     *,
     vmem_budget: int = VMEM_BUDGET_ELEMS,
     chunked: bool = False,
+    backend: str = "tpu",
 ) -> list[KernelConfig]:
     """Feasible block configs for ``plan`` on a problem of ``shape``.
 
@@ -356,6 +399,13 @@ def candidate_configs(
     im2row views are static crops, so the psum/data-stationary knob is
     moot under that strategy and enumerating both would make the runner
     time the identical kernel twice.
+
+    ``backend`` selects the grid family (DESIGN.md §14): the TPU grids
+    are sublane/lane-tiled (8×128-shaped), the GPU grids warp-multiple
+    pow2 tiles clamped by the Triton ``next_pow2`` idiom (a tile may
+    overhang the output; the grid round-up masks the overhang) so every
+    candidate keeps whole-warp shuffle decompositions. Scan tiles are
+    already pow2 warp multiples and are shared across backends.
     """
     if plan.combine != "fma":                       # scan family
         R, T = shape
@@ -379,11 +429,17 @@ def candidate_configs(
 
     spatial = tuple(shape)[plan.batch_axes + plan.reduce_axes:]
     out_sp = plan.out_shape(spatial, time_steps)
+    gpu = backend == "gpu"
     axes: list[tuple[int, ...]] = []
     if plan.ndim_spatial == 3:
-        axes.append(_WINDOW_BLOCK_Z)
-    axes.append(_WINDOW_BLOCK_H)
-    axes.append(_WINDOW_BLOCK_W)
+        axes.append(_GPU_BLOCK_Z if gpu else _WINDOW_BLOCK_Z)
+    axes.append(_GPU_BLOCK_H if gpu else _WINDOW_BLOCK_H)
+    axes.append(_GPU_BLOCK_W if gpu else _WINDOW_BLOCK_W)
+    # TPU clamps a candidate to the output extent; GPU clamps to the
+    # next pow2 ≥ the extent (tile-chooser idiom) so tiles stay
+    # warp-decomposable — the engine's own min(b, out) does the rest.
+    clamp = ((lambda b, o: min(b, _next_pow2(o))) if gpu
+             else (lambda b, o: min(b, o)))
     if any(v > 1 for v in plan.stride_per_axis()):
         # strided grids use the data-stationary strided read — the
         # variant knob does not apply.
@@ -416,7 +472,7 @@ def candidate_configs(
                     configs.add(KernelConfig(acc, v, s))
             return
         for b in axes[i]:
-            rec(i + 1, acc + (min(b, out_sp[i]),))
+            rec(i + 1, acc + (clamp(b, out_sp[i]),))
     rec(0, ())
     return sorted(configs, key=lambda c: (c.block, c.variant, c.strategy or ""))
 
@@ -429,9 +485,19 @@ def model_cost(
     plan: SystolicPlan,
     cfg: KernelConfig,
     time_steps: int = 1,
-    hw: HardwareLatencies = TPU_V5E,
+    hw: HardwareLatencies | None = None,
+    *,
+    backend: str | None = None,
 ) -> float:
     """Estimated cycles per useful output element for one block config.
+
+    ``hw`` prices against an explicit latency row; when None it resolves
+    from the machine registry for ``backend``
+    (:func:`repro.core.perfmodel.machine_for` — 'tpu' → TPU_V5E, 'gpu' →
+    the A100-shaped entry; ``backend=None`` follows the config default).
+    Each backend is priced by **its own** machine model, never the
+    other's: that per-backend prediction is what BENCH_8 quotes next to
+    measurements.
 
     For reduce plans (NCHW conv) this is the cost of *one channel
     iterate* per output element; the full per-output cost scales by
@@ -447,6 +513,8 @@ def model_cost(
     Output strides shrink useful outputs per loaded element, which
     ``block_in_shape``'s stride term prices automatically.
     """
+    if hw is None:
+        hw = machine_for(_engine_backend(backend))
     t = time_steps
     if plan.combine != "fma":                       # Kogge–Stone scan
         br, bt = cfg.block[:2]
@@ -509,11 +577,12 @@ def autotune(
     time_steps: int = 1,
     default: KernelConfig | None = None,
     runner: Callable[[KernelConfig], float] | None = None,
-    hw: HardwareLatencies = TPU_V5E,
+    hw: HardwareLatencies | None = None,
     top_k: int = 3,
     context: tuple = (),
     fixed: dict | None = None,
     chunked: bool = False,
+    backend: str | None = None,
 ) -> TuneResult:
     """Pick a block config for ``plan`` on ``shape``.
 
@@ -526,13 +595,24 @@ def autotune(
     actually measures (caller-forced kwargs, op mode, impl), otherwise a
     winner measured under one context is replayed under another.
 
+    ``backend`` is the engine lowering being tuned ('tpu'/'gpu'/'auto';
+    None follows the config default): it selects the candidate grid
+    family and — unless ``hw`` overrides — the machine model, and it
+    keys the cache and the v6 sidecar so winners never cross backends
+    (DESIGN.md §14). The caller's runner must lower with the same
+    backend, or the recorded winner prices one kernel and replays
+    another.
+
     ``fixed`` names kwargs the caller pins (they override the candidate
     at run time): candidates are restricted to those agreeing with the
     pinned values — and deduplicated by their *effective* kwargs — so the
     runner never measures the same kernel twice and the recorded winner
     is the config that actually ran.
     """
-    key = _cache_key(plan, tuple(shape), time_steps, context)
+    backend = _engine_backend(backend)
+    if hw is None:
+        hw = machine_for(backend)
+    key = _cache_key(plan, tuple(shape), time_steps, context, backend)
     if key in _CACHE:
         cached = _CACHE[key]
         return dataclasses.replace(cached, source="cache")
@@ -551,20 +631,21 @@ def autotune(
 
     sig = plan_signature(plan)
     pstrat = (plan.strategy or "auto") if plan.combine == "fma" else "auto"
-    skey = _sidecar_key(sig, shape, time_steps, context, pstrat)
+    skey = _sidecar_key(sig, shape, time_steps, context, pstrat, backend)
     hit = _SIDECAR.get(skey)
     if hit is not None and _agrees(hit[0]):
         result = TuneResult(hit[0], hit[1], hit[2], "sidecar")
         _CACHE[key] = result
         return result
-    seed = _nearest_sidecar(sig, shape, time_steps, context, pstrat)
+    seed = _nearest_sidecar(sig, shape, time_steps, context, pstrat, backend)
     if seed is not None and _agrees(seed):
         result = TuneResult(seed, model_cost(plan, seed, time_steps, hw),
                             None, "seeded")
         _CACHE[key] = result
         return result
 
-    cands = candidate_configs(plan, shape, time_steps, chunked=chunked)
+    cands = candidate_configs(plan, shape, time_steps, chunked=chunked,
+                              backend=backend)
     if default is not None and default not in cands:
         cands.append(default)
     if fixed:

@@ -125,6 +125,57 @@ def _edge_slab(x, axis: int, width: int, *, front: bool):
     return jnp.concatenate([sl] * width, axis=axis)
 
 
+def _multihop_slab(x, axis: int, width: int, name: str, size: int,
+                   boundary: str, *, front: bool):
+    """Halo slab spanning SEVERAL neighbor shards: chained ppermute hops.
+
+    When the t-widened halo is wider than one shard's resident rows, no
+    single neighbor owns the whole slab. Hop ``d`` ships each shard's
+    *full* resident block ``d`` shards toward the consumer (one
+    ``ppermute`` per hop — a chain of ``ceil(width/shard)`` collectives,
+    not a raise); the stacked blocks then crop to the halo width.
+    Out-of-domain rows resolve per boundary exactly as in the single-hop
+    path: a non-circular ``ppermute`` fills them with zeros (the
+    engine's origin padding), ``'wrap'`` uses circular links (mod-size
+    sources), and ``'replicate'`` overwrites them with the *global*
+    edge row — psum-broadcast from the shard that owns it, then masked
+    in per slab row, since with a multi-shard halo several shards clamp
+    and only partially.
+    """
+    n = x.shape[axis]
+    hops = -(-width // n)
+    blocks = []
+    for d in range(1, hops + 1):
+        if boundary == "wrap":
+            pairs = ([(i, (i + d) % size) for i in range(size)] if front
+                     else [((i + d) % size, i) for i in range(size)])
+        else:
+            pairs = ([(i, i + d) for i in range(size - d)] if front
+                     else [(i + d, i) for i in range(size - d)])
+        blocks.append(lax.ppermute(x, name, pairs))
+    if front:
+        # farthest neighbor's rows sit earliest in the global order
+        stack = jnp.concatenate(blocks[::-1], axis=axis)
+        slab = lax.slice_in_dim(stack, hops * n - width, hops * n, axis=axis)
+    else:
+        stack = jnp.concatenate(blocks, axis=axis)
+        slab = lax.slice_in_dim(stack, 0, width, axis=axis)
+    if boundary == "replicate":
+        idx = lax.axis_index(name)
+        edge_shard = 0 if front else size - 1
+        one = _edge_slab(x, axis, 1, front=front)
+        edge = lax.psum(jnp.where(idx == edge_shard, one,
+                                  jnp.zeros_like(one)), name)
+        tiled = jnp.concatenate([edge] * width, axis=axis)
+        # slab row j of shard i holds global row i·n − width + j (front)
+        # or (i+1)·n + j (back); rows beyond the domain edge clamp.
+        iota = lax.broadcasted_iota(jnp.int32, slab.shape, axis)
+        oob = (iota < width - idx * n) if front else \
+            (iota >= (size - 1 - idx) * n)
+        slab = jnp.where(oob, tiled, slab)
+    return slab
+
+
 def _halo_slab(x, axis: int, width: int, assign, boundary: str, *,
                front: bool):
     """One side's halo slab for one axis, or None when nothing to add.
@@ -135,13 +186,18 @@ def _halo_slab(x, axis: int, width: int, assign, boundary: str, *,
     neighbor pushed. On a domain edge a non-circular ``ppermute``
     delivers zeros — the engine's own origin padding — unless the
     boundary wraps (circular link) or clamps (edge-row replication).
-    Unsharded axes synthesize the same slab locally; for ``'zero'``
-    that is a no-op because the engine already zero-pads.
+    Halos wider than one shard chain ppermute hops
+    (:func:`_multihop_slab`). Unsharded axes synthesize the same slab
+    locally; for ``'zero'`` that is a no-op because the engine already
+    zero-pads.
     """
     if width == 0:
         return None
     name, size = assign if assign is not None else (None, 1)
     n = x.shape[axis]
+    if size > 1 and width > n:
+        return _multihop_slab(x, axis, width, name, size, boundary,
+                              front=front)
     if front:
         src = lax.slice_in_dim(x, n - width, n, axis=axis)
     else:
@@ -214,7 +270,7 @@ def _frame_regions(
 
 def _local_lowering(
     xl, wl, epi, *, plan, block, time_steps, variant, boundary, interpret,
-    acc_dtype, assigns, halos, overlap,
+    acc_dtype, assigns, halos, overlap, backend=None,
 ):
     """The per-shard program: exchange → interior compute → frame splice.
 
@@ -245,7 +301,7 @@ def _local_lowering(
     engine = functools.partial(
         run_window_plan, plan=plan, block=block, time_steps=time_steps,
         variant=variant, interpret=interpret, acc_dtype=acc_dtype,
-        epilogue_args=epi)
+        epilogue_args=epi, backend=backend)
 
     def cropped(e):
         """Engine output on a (partially) extended slab, mapped back to
@@ -259,7 +315,11 @@ def _local_lowering(
 
     if not exchanged:
         return cropped(ext)
-    if not overlap:
+    if not overlap or any(halos[a][0] + halos[a][1] >= local[a]
+                          for a in exchanged):
+        # A halo as wide as the shard leaves no interior to overlap with
+        # the exchange (the multi-hop regime) — lower the extended block
+        # monolithically instead of splicing an empty frame.
         return cropped(ext)
 
     # Overlapped schedule: the interior lowers from the *resident* block
@@ -304,6 +364,7 @@ def sharded_window_plan(
     acc_dtype=jnp.float32,
     rules=None,
     epilogue_args: tuple = (),
+    backend: str | None = None,
 ) -> jax.Array:
     """Run a windowed plan on a domain sharded over a device mesh.
 
@@ -378,10 +439,13 @@ def sharded_window_plan(
                                  time_steps)
     halos = shard_halo(plan, time_steps)
     if boundary != "zero":
-        # wrap/replicate also extend unsharded axes, locally — the
-        # resident block must cover the halo it lends itself.
+        # wrap/replicate also extend UNSHARDED axes, locally — the
+        # resident block must cover the halo it lends itself. Sharded
+        # axes are exempt: halos wider than a shard chain ppermute hops
+        # (:func:`_multihop_slab`) instead of slicing the resident rows.
         for a, ((lo, hi), n) in enumerate(zip(halos, local)):
-            if max(lo, hi) > n:
+            if (assigns[a] is None or assigns[a][1] == 1) \
+                    and max(lo, hi) > n:
                 raise ValueError(
                     f"boundary={boundary!r} needs the local block to cover "
                     f"its own axis-{a} halo: {n} rows per shard < "
@@ -409,7 +473,8 @@ def sharded_window_plan(
     fn = functools.partial(
         _local_lowering, plan=plan, block=block, time_steps=time_steps,
         variant=variant, boundary=boundary, interpret=interpret,
-        acc_dtype=acc_dtype, assigns=assigns, halos=halos, overlap=overlap)
+        acc_dtype=acc_dtype, assigns=assigns, halos=halos, overlap=overlap,
+        backend=backend)
 
     sharded = shm.shard_map(
         lambda xs, *rest: fn(xs, rest[0] if n_w else None,

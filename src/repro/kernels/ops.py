@@ -26,8 +26,10 @@ the PartitionSpec (default: the rule tables via
 :mod:`repro.distributed.halo_exchange` layer — ppermute halo pushes
 once per call, interior compute overlapped with the exchange. Sharding
 problems in the resolved layout (an explicitly requested mesh axis that
-does not divide the domain, a shard smaller than the plan's halo) raise
-``ValueError`` here, before any ``pallas_call``; a *default* spec
+does not divide the domain, a halo wider than the whole domain axis)
+raise ``ValueError`` here, before any ``pallas_call``; a halo wider
+than one *shard* is fine — the exchange chains ppermute hops across as
+many neighbors as it spans. A *default* spec
 follows the rule tables' divisibility fallback and leaves a
 non-dividing axis replicated instead. Autotuning under a mesh targets
 the *shard-local* halo-extended shape, so the winner is exactly the
@@ -164,7 +166,8 @@ def _engine_block(plan, kw: dict) -> tuple[tuple[int, ...], str, dict]:
     return block, kw.pop("variant", "shift_psum"), kw
 
 
-def _engine_runner(plan, x, w, interpret, *, epi_args=(), time_steps=1):
+def _engine_runner(plan, x, w, interpret, *, epi_args=(), time_steps=1,
+                   backend=None):
     """Generic tuning-measurement closure: lower ``plan`` itself.
 
     The thin family wrappers rebuild their plan without epilogue/stride/
@@ -181,7 +184,7 @@ def _engine_runner(plan, x, w, interpret, *, epi_args=(), time_steps=1):
         return run_window_plan(x, w, plan=plan, block=blk, variant=variant,
                                time_steps=t, interpret=interpret,
                                acc_dtype=acc, epilogue_args=epi_args,
-                               strategy=strat)
+                               strategy=strat, backend=backend)
     return call
 
 
@@ -246,6 +249,22 @@ def _shape_size(shape) -> int:
     return out
 
 
+def _check_backend(backend, op: str):
+    """Named pre-pallas validation of an op's ``backend=`` kwarg.
+
+    ``None`` defers to :func:`repro.config.engine_backend` at engine
+    dispatch time; 'auto'/'tpu'/'gpu' pass through unresolved (the
+    engine resolves 'auto' per call) but unknown names fail here with
+    the op's name instead of deep inside a jitted engine call."""
+    if backend is not None:
+        from repro.config import resolve_engine_backend
+        try:
+            resolve_engine_backend(backend)
+        except ValueError as e:
+            raise ValueError(f"ops.{op}: {e}") from None
+    return backend
+
+
 def _reject_sharded_residual(epi_stages, mesh) -> None:
     """Shared mesh guard: an output-shaped residual cannot replicate."""
     if mesh is not None and any(s.op == "residual_add" for s in epi_stages):
@@ -288,6 +307,8 @@ class _WindowCfg:
     overlap: bool = True
     bwd_tune: tuple | None = None    # tuner context → adjoint tuned on its
     #                                  own plan signature; None → reuse block
+    backend: str | None = None       # engine lowering ("tpu"/"gpu"/"auto");
+    #                                  None follows config.engine_backend()
 
 
 def _window_forward(cfg: _WindowCfg, x, w, epi=()):
@@ -298,11 +319,11 @@ def _window_forward(cfg: _WindowCfg, x, w, epi=()):
             block=cfg.block, time_steps=cfg.time_steps, variant=cfg.variant,
             boundary=cfg.boundary, overlap=cfg.overlap,
             interpret=cfg.interpret, acc_dtype=cfg.acc_dtype,
-            epilogue_args=epi)
+            epilogue_args=epi, backend=cfg.backend)
     return run_window_plan(
         x, w, plan=cfg.plan, block=cfg.block, time_steps=cfg.time_steps,
         variant=cfg.variant, interpret=cfg.interpret, acc_dtype=cfg.acc_dtype,
-        epilogue_args=epi)
+        epilogue_args=epi, backend=cfg.backend)
 
 
 def _tuned_adjoint_config(aplan, g_shape, g_dtype, w, cfg: _WindowCfg):
@@ -319,11 +340,11 @@ def _tuned_adjoint_config(aplan, g_shape, g_dtype, w, cfg: _WindowCfg):
     runner = lambda c: tuning.measure_us(lambda: run_window_plan(
         zeros, wa, plan=aplan, block=c.block, time_steps=cfg.time_steps,
         variant=c.variant, interpret=cfg.interpret, acc_dtype=cfg.acc_dtype,
-        strategy=c.strategy))
+        strategy=c.strategy, backend=cfg.backend))
     res = tuning.autotune(
         aplan, g_shape, time_steps=cfg.time_steps,
         default=tuning.KernelConfig(cfg.block, cfg.variant), runner=runner,
-        context=cfg.bwd_tune)
+        context=cfg.bwd_tune, backend=cfg.backend)
     return res.config.block, res.config.variant, res.config.strategy
 
 
@@ -339,11 +360,6 @@ def _window_op_fwd(cfg, x, w, epi):
 def _window_op_bwd(cfg, res, g):
     x, w, epi = res
     plan = cfg.plan
-    if cfg.boundary == "replicate":
-        raise ValueError(
-            "gradients under boundary='replicate' are not supported: the "
-            "transpose of an edge clamp accumulates halo rows onto the "
-            "edge, which is not a windowed plan; use 'zero' or 'wrap'")
     if plan.stages:
         return _pipeline_bwd(cfg, x, w, epi, g)
     if cfg.time_steps != 1 and plan.coeff_mode != "table":
@@ -378,6 +394,8 @@ def _window_op_bwd(cfg, res, g):
             slice(None, None, v) for v in plan.stride_per_axis())].set(g)
         plan = dense_plan
         cfg = dataclasses.replace(cfg, plan=dense_plan)
+    if cfg.boundary == "replicate" and cfg.mesh is not None:
+        return _replicate_bwd(cfg, plan, x, w, g, depi)
     aplan = adj.input_adjoint_plan(plan)
     block, variant = cfg.block, cfg.variant
     if cfg.bwd_tune is not None and cfg.mesh is None:
@@ -408,6 +426,41 @@ def _window_op_bwd(cfg, res, g):
         dw = run_weight_grad_plan(
             x, g, plan=plan, block=wg_block, interpret=cfg.interpret,
             acc_dtype=cfg.acc_dtype)
+    return dx, dw.astype(w.dtype), depi
+
+
+def _replicate_bwd(cfg, plan, x, w, g, depi):
+    """Backward of a ``boundary='replicate'`` (edge-clamp) sharded call.
+
+    The forward is ``y = V(E x)``: the valid-mode plan ``V`` on the
+    edge-extended input ``E x``. The transpose splits cleanly:
+    ``dx = Eᵀ(Vᵀ g)``. ``Vᵀ`` is the input adjoint of the valid-mode
+    plan — a full-mode kernel whose output lives on the *widened*
+    lattice (``N + lead + trail`` rows per axis); that lattice does not
+    divide the mesh, so this one backward kernel runs unsharded on the
+    gathered cotangent. ``Eᵀ`` then folds the halo bands back onto the
+    edge rows they were clamped from
+    (:func:`repro.core.adjoint.fold_replicate_edges`). The weight grad
+    needs no transpose at all — it is the same correlation against the
+    edge-extended input the forward saw — so it reuses the sharded
+    halo-exchange correlation with the replicate slabs unchanged.
+    """
+    valid = dataclasses.replace(plan, lead=None, trail=None)
+    aplan = adj.input_adjoint_plan(valid)
+    adj.record_lowering(aplan.kind)
+    dxp = run_window_plan(
+        g, adj.adjoint_coeff_array(valid, w), plan=aplan, block=cfg.block,
+        variant=cfg.variant, interpret=cfg.interpret,
+        acc_dtype=cfg.acc_dtype, backend=cfg.backend)
+    dx = adj.fold_replicate_edges(plan, dxp).astype(x.dtype)
+    if w is None or plan.coeff_mode == "table":
+        return dx, None, depi
+    from repro.distributed import halo_exchange as hx
+    adj.record_lowering(adj.weight_adjoint_plan(plan).kind)
+    dw = hx.sharded_weight_grad(
+        x, g, plan=plan, mesh=cfg.mesh, in_spec=cfg.in_specs,
+        block=cfg.block[-2:], boundary=cfg.boundary,
+        interpret=cfg.interpret, acc_dtype=cfg.acc_dtype)
     return dx, dw.astype(w.dtype), depi
 
 
@@ -452,7 +505,7 @@ def _pipeline_bwd(cfg, x, ws, epi, g):
         valids.append(sv)
         z = run_window_plan(h, w_s, plan=sv, block=cfg.block,
                             variant=cfg.variant, interpret=cfg.interpret,
-                            acc_dtype=cfg.acc_dtype)
+                            acc_dtype=cfg.acc_dtype, backend=cfg.backend)
         se = dataclasses.replace(sv, epilogue=s.epilogue)
         h = adj.apply_epilogue(se, z, epi_splits[i]).astype(x.dtype)
         zs.append(z)
@@ -478,7 +531,7 @@ def _pipeline_bwd(cfg, x, ws, epi, g):
         g = run_window_plan(
             g, ws[i] if s.coeff_mode == "dense" else None, plan=ap,
             block=cfg.block, variant=cfg.variant, interpret=cfg.interpret,
-            acc_dtype=cfg.acc_dtype).astype(x.dtype)
+            acc_dtype=cfg.acc_dtype, backend=cfg.backend).astype(x.dtype)
     # transpose of the pad-once zero pad: crop the summed lead/trail;
     # epilogue-operand cotangents reassemble in chain order
     depi = tuple(d for part in depi_parts for d in part)
@@ -505,11 +558,13 @@ class _ScanCfg:
     interpret: bool = True
     acc_dtype: object = jnp.float32
     chunk: int | None = None
+    backend: str | None = None       # engine lowering; None → config default
 
 
 def _cumsum_run(cfg: _ScanCfg, x):
     return _sc.cumsum(x, block_r=cfg.block_r, block_t=cfg.block_t,
-                      interpret=cfg.interpret, acc_dtype=cfg.acc_dtype)
+                      interpret=cfg.interpret, acc_dtype=cfg.acc_dtype,
+                      backend=cfg.backend)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
@@ -534,7 +589,8 @@ def _linrec_run(cfg: _ScanCfg, a, b):
     return _sc.linear_recurrence(a, b, block_r=cfg.block_r,
                                  block_t=cfg.block_t,
                                  interpret=cfg.interpret,
-                                 acc_dtype=cfg.acc_dtype)
+                                 acc_dtype=cfg.acc_dtype,
+                                 backend=cfg.backend)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
@@ -568,7 +624,8 @@ def _linrec_carry_run(cfg: _ScanCfg, a, b, h0):
                                  block_t=cfg.block_t,
                                  interpret=cfg.interpret,
                                  acc_dtype=cfg.acc_dtype,
-                                 carry=h0, return_carry=True)
+                                 carry=h0, return_carry=True,
+                                 backend=cfg.backend)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
@@ -672,7 +729,7 @@ def _shard_tuning_call(plan, x, mesh, in_specs, time_steps, boundary):
 
 def _tuned_kwargs(plan, shape, call, user_kw, *, time_steps: int = 1,
                   context: tuple = (), chunked: bool = False,
-                  default=None) -> dict:
+                  default=None, backend=None) -> dict:
     """Autotune block kwargs for ``call``; explicit user kwargs win.
 
     The cache context carries everything that changes what the runner
@@ -688,12 +745,12 @@ def _tuned_kwargs(plan, shape, call, user_kw, *, time_steps: int = 1,
                           default=default or _default_cfg(plan),
                           runner=runner,
                           context=context + tuple(sorted(user_kw.items())),
-                          fixed=user_kw, chunked=chunked)
+                          fixed=user_kw, chunked=chunked, backend=backend)
     return {**res.config.as_kwargs(plan), **user_kw}
 
 
 def _conv2d_grouped(x, w, *, groups, mode, impl, autotune, mesh, stride,
-                    epi_stages, epi_args, strategy, kw):
+                    epi_stages, epi_args, strategy, backend, kw):
     """Grouped NCHW conv as per-group reduce slices (ISSUE 7 satellite).
 
     Each group is an ordinary reduce-axes conv on its
@@ -742,7 +799,7 @@ def _conv2d_grouped(x, w, *, groups, mode, impl, autotune, mesh, stride,
             x[:, g * Cg:(g + 1) * Cg], w[g * Og:(g + 1) * Og], mode=mode,
             impl=impl, autotune=autotune, stride=stride,
             epilogue=epi_stages, epilogue_args=args_g, strategy=strategy,
-            **kw))
+            backend=backend, **kw))
     return jnp.concatenate(outs, axis=1)
 
 
@@ -750,7 +807,7 @@ def conv2d(x, w, *, mode: str = "same", impl: str | None = None,
            autotune: bool = False, mesh=None, in_specs=None,
            boundary: str = "zero", stride=None, epilogue=None,
            epilogue_args=(), strategy: str | None = None, groups: int = 1,
-           **kw):
+           backend: str | None = None, **kw):
     """2-D convolution, dispatched on input rank:
 
     * ``(H, W)``            — single image, single channel (the paper's
@@ -784,8 +841,16 @@ def conv2d(x, w, *, mode: str = "same", impl: str | None = None,
     Tuner contexts carry the rank tag and the full operand shape, so
     batched/NCHW winners never collide with single-image winners in the
     cache or the JSON sidecar.
+
+    ``backend=`` selects the engine *lowering* of the plan ('tpu' — the
+    sublane/lane tiling — or 'gpu' — the §14 warp-shuffle tiling;
+    'auto' follows the jax platform, ``None`` the
+    ``repro.config.engine_backend()`` session default). Orthogonal to
+    ``impl``: interpret-mode runs either lowering on any host. Tuned
+    winners are cached and sidecar'd per backend (DESIGN.md §14).
     """
     impl = impl or default_impl()
+    backend = _check_backend(backend, "conv2d")
     epi_stages, epi_args = _epilogue_spec(epilogue, epilogue_args, "conv2d")
     if stride is not None:
         stride = (stride, stride) if isinstance(stride, int) else tuple(stride)
@@ -808,7 +873,7 @@ def conv2d(x, w, *, mode: str = "same", impl: str | None = None,
             x, w, groups=int(groups), mode=mode, impl=impl,
             autotune=autotune, mesh=mesh, stride=stride,
             epi_stages=epi_stages, epi_args=epi_args, strategy=strategy,
-            kw=kw)
+            backend=backend, kw=kw)
     if x.ndim == 4:
         if w.ndim != 4:
             raise ValueError(
@@ -853,11 +918,12 @@ def conv2d(x, w, *, mode: str = "same", impl: str | None = None,
     return _conv2d_engine(x, w, plan=plan, kernel=kernel, tag=tag,
                           mode=mode, impl=impl, autotune=autotune, mesh=mesh,
                           in_specs=in_specs, boundary=boundary, kw=kw,
-                          epi_args=epi_args)
+                          epi_args=epi_args, backend=backend)
 
 
 def _window_cfg(plan, kw, *, interpret, time_steps=1, mesh=None,
-                in_specs=None, boundary="zero", bwd_tune=None) -> _WindowCfg:
+                in_specs=None, boundary="zero", bwd_tune=None,
+                backend=None) -> _WindowCfg:
     """Resolve family kwargs into the static config of one engine call."""
     block, variant, rest = _engine_block(plan, kw)
     # a tuned winner (or an explicit caller) may carry the lowering
@@ -868,7 +934,8 @@ def _window_cfg(plan, kw, *, interpret, time_steps=1, mesh=None,
         time_steps=rest.pop("time_steps", time_steps),
         acc_dtype=rest.pop("acc_dtype", jnp.float32),
         mesh=mesh, in_specs=in_specs, boundary=boundary,
-        overlap=rest.pop("overlap", True), bwd_tune=bwd_tune)
+        overlap=rest.pop("overlap", True), bwd_tune=bwd_tune,
+        backend=rest.pop("backend", backend))
     if rest:
         raise TypeError(f"unexpected kwargs for {plan.kind!r}: "
                         f"{sorted(rest)}")
@@ -876,7 +943,7 @@ def _window_cfg(plan, kw, *, interpret, time_steps=1, mesh=None,
 
 
 def _conv2d_engine(x, w, *, plan, kernel, tag, mode, impl, autotune, mesh,
-                   in_specs, boundary, kw, epi_args=()):
+                   in_specs, boundary, kw, epi_args=(), backend=None):
     """Shared mesh/autotune scaffolding for every conv2d rank.
 
     ``kernel(xs, interpret=..., **block_kwargs)`` lowers the engine call
@@ -905,29 +972,35 @@ def _conv2d_engine(x, w, *, plan, kernel, tag, mode, impl, autotune, mesh,
             zeros = jnp.zeros(shape, x.dtype)
             sharded_kw = {k: kw.pop(k) for k in ("overlap",) if k in kw}
             call = (lambda **k: kernel(zeros, interpret=interpret,
-                                       **{**pin, **k})) \
+                                       backend=backend, **{**pin, **k})) \
                 if plain else _engine_runner(plan, zeros, w, interpret,
-                                             epi_args=epi_args)
+                                             epi_args=epi_args,
+                                             backend=backend)
             kw = _tuned_kwargs(plan, shape, call, kw,
-                               context=(tag, mode, impl) + sctx)
+                               context=(tag, mode, impl) + sctx,
+                               backend=backend)
             kw.update(sharded_kw)
         cfg = _window_cfg(plan, kw, interpret=interpret, mesh=mesh,
-                          in_specs=in_specs, boundary=boundary)
+                          in_specs=in_specs, boundary=boundary,
+                          backend=backend)
         return _window_op(cfg, x, w, epi_args)
     bwd_tune = None
     if autotune:
-        call = (lambda **k: kernel(x, interpret=interpret, **{**pin, **k})) \
+        call = (lambda **k: kernel(x, interpret=interpret, backend=backend,
+                                   **{**pin, **k})) \
             if plain else _engine_runner(plan, x, w, interpret,
-                                         epi_args=epi_args)
-        kw = _tuned_kwargs(plan, x.shape, call, kw, context=(tag, mode, impl))
+                                         epi_args=epi_args, backend=backend)
+        kw = _tuned_kwargs(plan, x.shape, call, kw, context=(tag, mode, impl),
+                           backend=backend)
         bwd_tune = ("adjoint", tag, mode, impl)
     return _window_op(_window_cfg(plan, kw, interpret=interpret,
-                                  bwd_tune=bwd_tune), x, w, epi_args)
+                                  bwd_tune=bwd_tune, backend=backend),
+                      x, w, epi_args)
 
 
 def conv1d_causal(x, w, *, impl: str | None = None, autotune: bool = False,
                   epilogue=None, epilogue_args=(), strategy: str | None = None,
-                  **kw):
+                  backend: str | None = None, **kw):
     """Depthwise causal conv through the D-optimal plan (§5.4).
 
     ``epilogue=`` fuses elementwise output stages into the kernel —
@@ -936,6 +1009,7 @@ def conv1d_causal(x, w, *, impl: str | None = None, autotune: bool = False,
     the HBM round-trip between the conv and the activation.
     """
     impl = impl or default_impl()
+    backend = _check_backend(backend, "conv1d_causal")
     if w.shape[-1] != x.shape[-1]:
         # checked for every impl — the oracle would otherwise silently
         # broadcast a mismatched filter across channels
@@ -956,17 +1030,20 @@ def conv1d_causal(x, w, *, impl: str | None = None, autotune: bool = False,
     if autotune:
         pin = {"strategy": plan.strategy} if plan.strategy else {}
         call = (lambda **k: _c1.conv1d_causal(x, w, interpret=interpret,
+                                              backend=backend,
                                               **{**pin, **k})) \
             if not epi_stages else _engine_runner(plan, x, w, interpret,
-                                                  epi_args=epi_args)
-        kw = _tuned_kwargs(plan, x.shape, call, kw, context=("conv1d", impl))
+                                                  epi_args=epi_args,
+                                                  backend=backend)
+        kw = _tuned_kwargs(plan, x.shape, call, kw, context=("conv1d", impl),
+                           backend=backend)
         bwd_tune = ("adjoint", "conv1d", impl)
     plan = _strategy_plan(plan, kw.pop("strategy", None), "conv1d_causal")
     d = _DEFAULTS["conv1d"].block
     cfg = _WindowCfg(
         plan=plan, block=(kw.pop("block_t", d[0]), kw.pop("block_d", d[1])),
         interpret=interpret, acc_dtype=kw.pop("acc_dtype", jnp.float32),
-        bwd_tune=bwd_tune)
+        bwd_tune=bwd_tune, backend=backend)
     if kw:
         raise TypeError(f"unexpected kwargs for conv1d_causal: {sorted(kw)}")
     return _window_op(cfg, x, w, epi_args)
@@ -975,8 +1052,10 @@ def conv1d_causal(x, w, *, impl: str | None = None, autotune: bool = False,
 def stencil(x, sdef: StencilDef | str, *, time_steps: int = 1,
             impl: str | None = None, autotune: bool = False, mesh=None,
             in_specs=None, boundary: str = "zero", epilogue=None,
-            epilogue_args=(), strategy: str | None = None, **kw):
+            epilogue_args=(), strategy: str | None = None,
+            backend: str | None = None, **kw):
     impl = impl or default_impl()
+    backend = _check_backend(backend, "stencil")
     if isinstance(sdef, str):
         sdef = BENCHMARKS[sdef]
     epi_stages, epi_args = _epilogue_spec(epilogue, epilogue_args, "stencil")
@@ -1005,29 +1084,34 @@ def stencil(x, sdef: StencilDef | str, *, time_steps: int = 1,
             # sharded-layer-only kwargs stay out of the measured closure
             sharded_kw = {k: kw.pop(k) for k in ("overlap",) if k in kw}
             call = (lambda **k: fn(zeros, sdef, time_steps=time_steps,
-                                   interpret=interpret, **{**pin, **k})) \
+                                   interpret=interpret, backend=backend,
+                                   **{**pin, **k})) \
                 if not epi_stages else _engine_runner(
                     plan, zeros, None, interpret, epi_args=epi_args,
-                    time_steps=time_steps)
+                    time_steps=time_steps, backend=backend)
             kw = _tuned_kwargs(plan, shape, call, kw, time_steps=time_steps,
-                               context=("stencil", impl) + sctx)
+                               context=("stencil", impl) + sctx,
+                               backend=backend)
             kw.update(sharded_kw)
         cfg = _window_cfg(plan, kw, interpret=interpret,
                           time_steps=time_steps, mesh=mesh,
-                          in_specs=in_specs, boundary=boundary)
+                          in_specs=in_specs, boundary=boundary,
+                          backend=backend)
         return _window_op(cfg, x, None, epi_args)
     bwd_tune = None
     if autotune:
         call = (lambda **k: fn(x, sdef, time_steps=time_steps,
-                               interpret=interpret, **{**pin, **k})) \
+                               interpret=interpret, backend=backend,
+                               **{**pin, **k})) \
             if not epi_stages else _engine_runner(
                 plan, x, None, interpret, epi_args=epi_args,
-                time_steps=time_steps)
+                time_steps=time_steps, backend=backend)
         kw = _tuned_kwargs(plan, x.shape, call, kw, time_steps=time_steps,
-                           context=("stencil", impl))
+                           context=("stencil", impl), backend=backend)
         bwd_tune = ("adjoint", "stencil", impl)
     return _window_op(_window_cfg(plan, kw, interpret=interpret,
-                                  time_steps=time_steps, bwd_tune=bwd_tune),
+                                  time_steps=time_steps, bwd_tune=bwd_tune,
+                                  backend=backend),
                       x, None, epi_args)
 
 
@@ -1041,8 +1125,15 @@ def _pipeline_stage_plan(x, desc, idx: int):
     A descriptor is a Table-3 name / :class:`StencilDef` (table-coeff
     stencil stage), a 2-D filter array (dense 'same'-mode conv stage),
     or a ``(descriptor, epilogue)`` pair attaching elementwise stages
-    after it. Anything else — scan ops, NCHW filters — gets a named
-    pre-pallas ``ValueError``.
+    after it. Stages apply over the domain's *trailing* spatial axes:
+    a 2-D stage on a ``(B, H, W)`` stack or ``(B, C, H, W)`` NCHW
+    tensor (and a 3-D stage on a batched volume) rides the extra
+    leading axes as block-1 batch grid axes — the fused chain stays
+    one engine kernel per batch item, no Python loop. Anything else —
+    scan ops, OIHW reduce filters — gets a named pre-pallas
+    ``ValueError`` (a channel *reduction* still cannot chain-fuse: the
+    next stage may only read the summed output after the full
+    accumulator sweep).
     """
     epilogue = None
     if (isinstance(desc, tuple) and len(desc) == 2
@@ -1056,12 +1147,14 @@ def _pipeline_stage_plan(x, desc, idx: int):
                 f"{sorted(BENCHMARKS)}")
         desc = BENCHMARKS[desc]
     if isinstance(desc, StencilDef):
-        if desc.ndim != x.ndim:
+        if desc.ndim > x.ndim:
             raise ValueError(
                 f"ops.pipeline: stage {idx} ({desc.name}) is "
                 f"{desc.ndim}-D but the domain is {x.ndim}-D")
         mod = _s2 if desc.ndim == 2 else _s3
         plan, w = mod.plan_for(desc), None
+        if x.ndim > desc.ndim:
+            plan = dataclasses.replace(plan, batch_axes=x.ndim - desc.ndim)
     elif isinstance(desc, jax.Array) or hasattr(desc, "ndim"):
         if desc.ndim == 4:
             raise ValueError(
@@ -1070,12 +1163,14 @@ def _pipeline_stage_plan(x, desc, idx: int):
                 "reduction must finish its accumulator sweep first); "
                 "run ops.conv2d / nn.layers.conv2d_apply with a fused "
                 "epilogue= instead")
-        if desc.ndim != 2 or x.ndim != 2:
+        if desc.ndim != 2 or x.ndim < 2:
             raise ValueError(
                 f"ops.pipeline: stage {idx} filter must be a 2-D (N, M) "
-                f"array on a 2-D domain, got filter {tuple(desc.shape)} "
-                f"on a {x.ndim}-D domain")
+                f"array on a >= 2-D domain, got filter "
+                f"{tuple(desc.shape)} on a {x.ndim}-D domain")
         plan, w = _c2.plan_for(desc.shape, "same"), desc
+        if x.ndim > 2:
+            plan = dataclasses.replace(plan, batch_axes=x.ndim - 2)
     else:
         raise ValueError(
             f"ops.pipeline: stage {idx} descriptor {type(desc).__name__} "
@@ -1102,12 +1197,16 @@ def _pipeline_ref(x, plans, ws, epi_args):
     """Pure-jnp oracle of a pipeline: pad-once, then valid stage
     applications (each stage's dense filter materialized from its taps)
     with the stage epilogues replayed elementwise. The gradcheck
-    reference for fused backward."""
+    reference for fused backward. Leading batch axes flatten into the
+    conv's N dimension — stages convolve the trailing spatial axes per
+    batch item exactly as the engine's block-1 batch grid does."""
     import numpy as np
     from repro.core.fuse import summed_lead_trail
     lead, trail = summed_lead_trail(plans)
+    nb, nd = plans[0].batch_axes, plans[0].ndim_spatial
     splits = _pipeline_epi_splits(plans, epi_args)
-    h = jnp.pad(x, list(zip(lead, trail))).astype(jnp.float32)
+    h = jnp.pad(x, [(0, 0)] * nb + list(zip(lead, trail)))
+    h = h.astype(jnp.float32)
     for i, p in enumerate(plans):
         if p.coeff_mode == "dense":
             f = ws[i].astype(jnp.float32)
@@ -1116,20 +1215,24 @@ def _pipeline_ref(x, plans, ws, epi_args):
             for off, cid in adj.iter_tap_offsets(p):
                 fa[off] = p.coeffs[cid[-1]]
             f = jnp.array(fa)
-        if x.ndim == 2:
-            h = jax.lax.conv_general_dilated(
-                h[None, None], f[None, None], (1, 1), "VALID")[0, 0]
+        batch = h.shape[:nb]
+        hb = h.reshape((-1, 1) + h.shape[nb:])     # (B_flat, C=1, *spatial)
+        if nd == 2:
+            hb = jax.lax.conv_general_dilated(
+                hb, f[None, None], (1, 1), "VALID")
         else:
-            h = jax.lax.conv_general_dilated(
-                h[None, None], f[None, None], (1, 1, 1), "VALID",
-                dimension_numbers=("NCDHW", "OIDHW", "NCDHW"))[0, 0]
+            hb = jax.lax.conv_general_dilated(
+                hb, f[None, None], (1, 1, 1), "VALID",
+                dimension_numbers=("NCDHW", "OIDHW", "NCDHW"))
+        h = hb.reshape(batch + hb.shape[2:])
         h = adj.apply_epilogue(p, h, splits[i])
     return h.astype(x.dtype)
 
 
 def pipeline(x, stages, *, impl: str | None = None, autotune: bool = False,
              fuse="auto", epilogue_args=(), mesh=None, in_specs=None,
-             boundary: str = "zero", strategy: str | None = None, **kw):
+             boundary: str = "zero", strategy: str | None = None,
+             backend: str | None = None, **kw):
     """Run a chain of shape-preserving windowed ops as ONE fused engine
     kernel — partial activations between stages never leave VMEM
     (DESIGN.md §11).
@@ -1137,7 +1240,10 @@ def pipeline(x, stages, *, impl: str | None = None, autotune: bool = False,
     ``stages`` is a list of stage descriptors applied left to right:
     Table-3 stencil names / :class:`StencilDef`\\ s, 2-D 'same'-mode
     conv filters, each optionally paired with an epilogue as
-    ``(stage, "gelu")``. Mid-chain epilogues must fix zero (preserving
+    ``(stage, "gelu")``. Stages apply over the domain's trailing
+    spatial axes: on a batched ``(B, H, W)`` stack or an NCHW
+    ``(B, C, H, W)`` tensor the extra leading axes ride the engine
+    grid as block-1 batch axes, so the chain stays fused per item. Mid-chain epilogues must fix zero (preserving
     the pad-once boundary) or be a *scalar* ``bias``; the final stage
     may also take ``residual_add``. ``epilogue_args`` carries the
     operands of every operand-bearing stage in application (chain)
@@ -1159,12 +1265,20 @@ def pipeline(x, stages, *, impl: str | None = None, autotune: bool = False,
     cannot shard (its stages are valid-mode plans, not shape-preserving).
     """
     impl = impl or default_impl()
+    backend = _check_backend(backend, "pipeline")
     if fuse not in (True, False, "auto"):
         raise ValueError(f"ops.pipeline: fuse must be True/False/'auto', "
                          f"got {fuse!r}")
     if not stages:
         raise ValueError("ops.pipeline needs at least one stage")
     resolved = [_pipeline_stage_plan(x, d, i) for i, d in enumerate(stages)]
+    nd0 = resolved[0][0].ndim_spatial
+    for i, (p, _) in enumerate(resolved):
+        if p.ndim_spatial != nd0:
+            raise ValueError(
+                f"ops.pipeline: stage {i} is {p.ndim_spatial}-D but stage "
+                f"0 is {nd0}-D; on a batched domain every stage must "
+                "window the same trailing spatial axes")
     # one strategy for the whole chain: every stage shares the VMEM tile,
     # so the pin rides each stage plan and fuse_plans carries it onto
     # the composite (stages keep their own copy for the unfused path)
@@ -1222,7 +1336,8 @@ def pipeline(x, stages, *, impl: str | None = None, autotune: bool = False,
         # and one full HBM round-trip of the activation — per stage.
         from repro.core.fuse import summed_lead_trail
         lead, trail = summed_lead_trail(plans)
-        h = jnp.pad(x, list(zip(lead, trail)))
+        h = jnp.pad(x, [(0, 0)] * plans[0].batch_axes
+                    + list(zip(lead, trail)))
         for i, p in enumerate(plans):
             pv = dataclasses.replace(p, lead=None, trail=None)
             a = epi_splits[i]
@@ -1230,9 +1345,11 @@ def pipeline(x, stages, *, impl: str | None = None, autotune: bool = False,
             if autotune:
                 skw = _tuned_kwargs(
                     pv, h.shape,
-                    _engine_runner(pv, h, ws[i], interpret, epi_args=a),
-                    skw, context=("pipeline_stage", i, impl))
-            cfg = _window_cfg(pv, skw, interpret=interpret)
+                    _engine_runner(pv, h, ws[i], interpret, epi_args=a,
+                                   backend=backend),
+                    skw, context=("pipeline_stage", i, impl),
+                    backend=backend)
+            cfg = _window_cfg(pv, skw, interpret=interpret, backend=backend)
             h = _window_op(cfg, h, ws[i], a)
         return h
     if autotune:
@@ -1245,18 +1362,20 @@ def pipeline(x, stages, *, impl: str | None = None, autotune: bool = False,
                 fused_plan, shape,
                 _engine_runner(fused_plan, zeros,
                                ws if fused_plan.stages else ws[0],
-                               interpret, epi_args=epi_args),
-                kw, context=("pipeline", impl) + sctx)
+                               interpret, epi_args=epi_args,
+                               backend=backend),
+                kw, context=("pipeline", impl) + sctx, backend=backend)
             kw.update(sharded_kw)
         else:
             kw = _tuned_kwargs(
                 fused_plan, x.shape,
                 _engine_runner(fused_plan, x,
                                ws if fused_plan.stages else ws[0],
-                               interpret, epi_args=epi_args),
-                kw, context=("pipeline", impl))
+                               interpret, epi_args=epi_args,
+                               backend=backend),
+                kw, context=("pipeline", impl), backend=backend)
     cfg = _window_cfg(fused_plan, kw, interpret=interpret, mesh=mesh,
-                      in_specs=in_specs, boundary=boundary)
+                      in_specs=in_specs, boundary=boundary, backend=backend)
     return _window_op(cfg, x, ws if fused_plan.stages else ws[0], epi_args)
 
 
@@ -1294,7 +1413,8 @@ def _scan_cfg(kw: dict, *, interpret: bool, op: str) -> _ScanCfg:
                    block_t=kw.pop("block_t", d[1]),
                    interpret=interpret,
                    acc_dtype=kw.pop("acc_dtype", jnp.float32),
-                   chunk=kw.pop("chunk", None))
+                   chunk=kw.pop("chunk", None),
+                   backend=_check_backend(kw.pop("backend", None), op))
     if kw:
         raise TypeError(f"unexpected kwargs for ops.{op}: {sorted(kw)}")
     return cfg
@@ -1312,7 +1432,7 @@ def cumsum(x, *, impl: str | None = None, autotune: bool = False, **kw):
         kw = _tuned_kwargs(
             plan, x.shape,
             lambda **k: _sc.cumsum(x, interpret=interpret, **k), kw,
-            context=("cumsum", impl))
+            context=("cumsum", impl), backend=kw.get("backend"))
     return _cumsum_op(_scan_cfg(kw, interpret=interpret, op="cumsum"), x)
 
 
@@ -1338,7 +1458,7 @@ def linear_recurrence(a, b, *, impl: str | None = None,
         kw = _tuned_kwargs(
             plan, a.shape,
             lambda **k: _sc.linear_recurrence(a, b, interpret=interpret, **k),
-            kw, context=("linrec", impl))
+            kw, context=("linrec", impl), backend=kw.get("backend"))
     return _linrec_op(
         _scan_cfg(kw, interpret=interpret, op="linear_recurrence"), a, b)
 
@@ -1447,7 +1567,7 @@ def chunked_linear_recurrence(a: jax.Array, b: jax.Array, *,
             context=("linrec_stream" if streamed else "linrec", impl),
             chunked=streamed,
             default=tuning.KernelConfig((8, 128, chunk)) if streamed
-            else None)
+            else None, backend=kw.get("backend"))
     chunk = kw.pop("chunk", chunk)
     if streamed:
         cfg = _scan_cfg(kw, interpret=interpret,
@@ -1463,7 +1583,10 @@ def chunked_linear_recurrence(a: jax.Array, b: jax.Array, *,
         cfg = _ScanCfg(block_r=kw.pop("block_r", 8),
                        block_t=kw.pop("block_t", chunk),
                        interpret=interpret,
-                       acc_dtype=kw.pop("acc_dtype", jnp.float32))
+                       acc_dtype=kw.pop("acc_dtype", jnp.float32),
+                       backend=_check_backend(
+                           kw.pop("backend", None),
+                           "chunked_linear_recurrence"))
         if kw:
             raise TypeError(
                 f"unexpected kwargs for ops.chunked_linear_recurrence: "

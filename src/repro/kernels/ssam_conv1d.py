@@ -33,6 +33,7 @@ def conv1d_causal(
     interpret: bool = True,
     acc_dtype=jnp.float32,
     strategy: str | None = None,
+    backend: str | None = None,
 ) -> jax.Array:
     """Depthwise causal conv: ``y[b,t,d] = Σ_k x[b, t−K+1+k, d] · w[k, d]``.
 
@@ -45,4 +46,5 @@ def conv1d_causal(
     return run_window_plan(
         x, w, plan=plan_for(K), block=(block_t, block_d),
         interpret=interpret, acc_dtype=acc_dtype, strategy=strategy,
+        backend=backend,
     )

@@ -67,12 +67,13 @@ def conv2d_valid(
     interpret: bool = True,
     acc_dtype=jnp.float32,
     strategy: str | None = None,
+    backend: str | None = None,
 ) -> jax.Array:
     """Valid-mode 2-D cross-correlation ``(H, W) ⋆ (N, M) → (H−N+1, W−M+1)``."""
     return run_window_plan(
         x, w, plan=plan_for(w.shape), block=(block_h, block_w),
         variant=variant, interpret=interpret, acc_dtype=acc_dtype,
-        strategy=strategy,
+        strategy=strategy, backend=backend,
     )
 
 
@@ -86,6 +87,7 @@ def conv2d_same(
     interpret: bool = True,
     acc_dtype=jnp.float32,
     strategy: str | None = None,
+    backend: str | None = None,
 ) -> jax.Array:
     """'Same'-mode convolution (zero boundary), anchor at the filter centre.
 
@@ -96,7 +98,7 @@ def conv2d_same(
     return run_window_plan(
         x, w, plan=plan_for(w.shape, "same"), block=(block_h, block_w),
         variant=variant, interpret=interpret, acc_dtype=acc_dtype,
-        strategy=strategy,
+        strategy=strategy, backend=backend,
     )
 
 
@@ -112,13 +114,14 @@ def conv2d_batched(
     interpret: bool = True,
     acc_dtype=jnp.float32,
     strategy: str | None = None,
+    backend: str | None = None,
 ) -> jax.Array:
     """A ``(B, H, W)`` image stack against one ``(N, M)`` filter — the
     minibatch rides the grid's block-1 batch axis, no Python loop."""
     return run_window_plan(
         x, w, plan=plan_for_batched(w.shape, mode), block=(block_h, block_w),
         time_steps=time_steps, variant=variant, interpret=interpret,
-        acc_dtype=acc_dtype, strategy=strategy,
+        acc_dtype=acc_dtype, strategy=strategy, backend=backend,
     )
 
 
@@ -133,6 +136,7 @@ def conv2d_nchw(
     interpret: bool = True,
     acc_dtype=jnp.float32,
     strategy: str | None = None,
+    backend: str | None = None,
 ) -> jax.Array:
     """Batched multi-channel NCHW convolution through the reduce-axes
     engine: ``(B, C_in, H, W) ⋆ (C_out, C_in, N, M) → (B, C_out, H', W')``.
@@ -144,5 +148,5 @@ def conv2d_nchw(
     return run_window_plan(
         x, w, plan=plan_for_nchw(x.shape, w.shape, mode),
         block=(block_h, block_w), variant=variant, interpret=interpret,
-        acc_dtype=acc_dtype, strategy=strategy,
+        acc_dtype=acc_dtype, strategy=strategy, backend=backend,
     )

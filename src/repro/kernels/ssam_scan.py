@@ -41,6 +41,7 @@ def cumsum(
     acc_dtype=jnp.float32,
     carry: jax.Array | None = None,
     return_carry: bool = False,
+    backend: str | None = None,
 ):
     """Inclusive prefix sum along the last axis of ``(R, T)``.
 
@@ -49,7 +50,7 @@ def cumsum(
     plan = scan_plan(_lane_tile(block_t, x.shape[-1]))
     return run_scan_plan(x, plan=plan, block_r=block_r, interpret=interpret,
                          acc_dtype=acc_dtype, carry=carry,
-                         return_carry=return_carry)
+                         return_carry=return_carry, backend=backend)
 
 
 def linear_recurrence(
@@ -62,6 +63,7 @@ def linear_recurrence(
     acc_dtype=jnp.float32,
     carry: jax.Array | None = None,
     return_carry: bool = False,
+    backend: str | None = None,
 ):
     """Solve ``h_t = a_t · h_{t−1} + b_t`` along the last axis of (R, T).
 
@@ -76,4 +78,5 @@ def linear_recurrence(
     plan = linear_recurrence_plan(_lane_tile(block_t, a.shape[-1]))
     return run_scan_plan(a, b, plan=plan, block_r=block_r,
                          interpret=interpret, acc_dtype=acc_dtype,
-                         carry=carry, return_carry=return_carry)
+                         carry=carry, return_carry=return_carry,
+                         backend=backend)

@@ -37,11 +37,12 @@ def stencil3d(
     interpret: bool = True,
     acc_dtype=jnp.float32,
     strategy: str | None = None,
+    backend: str | None = None,
 ) -> jax.Array:
     """Apply ``sdef`` to ``x`` (Z, Y, X) ``time_steps`` times (zero boundary)."""
     assert sdef.ndim == 3
     return run_window_plan(
         x, plan=plan_for(sdef), block=(block_z, block_h, block_w),
         time_steps=time_steps, variant=variant, interpret=interpret,
-        acc_dtype=acc_dtype, strategy=strategy,
+        acc_dtype=acc_dtype, strategy=strategy, backend=backend,
     )

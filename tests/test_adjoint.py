@@ -539,8 +539,8 @@ def test_sharded_adjoint_matches_single_device():
 
 @pytest.mark.sharded
 def test_sharded_adjoint_boundaries():
-    """wrap transposes to wrap (torus); replicate gradients are refused
-    with a named error instead of a wrong answer."""
+    """wrap transposes to wrap (torus); replicate transposes to the
+    edge fold (widened valid adjoint + fold_replicate_edges)."""
     code = textwrap.dedent("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.kernels import ops
@@ -587,13 +587,42 @@ def test_sharded_adjoint_boundaries():
         np.testing.assert_allclose(np.asarray(gw), np.asarray(ww),
                                    rtol=1e-3, atol=1e-3)
         print("ok wrap conv dw")
-        try:
-            jax.grad(lambda a: jnp.sum(ops.stencil(
-                a, "2d5pt", impl="interpret", mesh=mesh2d,
-                boundary="replicate") ** 2))(x)
-            raise SystemExit("replicate gradient did not raise")
-        except ValueError as e:
-            assert "replicate" in str(e)
+
+        # replicate: the clamp Eᵀ folds halo cotangents onto the edges
+        def clamped(a):
+            xp = jnp.pad(a, ((1, 1), (1, 1)), mode="edge")
+            out = jnp.zeros_like(a)
+            for off, c in zip(sdef.offsets, sdef.coeffs):
+                out = out + c * jax.lax.dynamic_slice(
+                    xp, (1 + off[0], 1 + off[1]), a.shape)
+            return out
+
+        got = jax.grad(lambda a: jnp.sum(ops.stencil(
+            a, "2d5pt", impl="interpret", mesh=mesh2d,
+            boundary="replicate") ** 2))(x)
+        want = jax.grad(lambda a: jnp.sum(clamped(a) ** 2))(x)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+        print("ok replicate dx")
+
+        def clamped_conv(a, b):
+            xp = jnp.pad(a, ((1, 1), (1, 1)), mode="edge")
+            out = jnp.zeros_like(a)
+            for n in range(3):
+                for m in range(3):
+                    out = out + b[n, m] * jax.lax.dynamic_slice(
+                        xp, (n, m), a.shape)
+            return out
+
+        wx, ww = jax.grad(lambda a, b: jnp.sum(clamped_conv(a, b) ** 2),
+                          (0, 1))(x, w)
+        gx, gw = jax.grad(lambda a, b: jnp.sum(ops.conv2d(
+            a, b, impl="interpret", mesh=mesh2d,
+            boundary="replicate") ** 2), (0, 1))(x, w)
+        np.testing.assert_allclose(np.asarray(gx), np.asarray(wx),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(gw), np.asarray(ww),
+                                   rtol=1e-3, atol=1e-3)
         print("DONE")
     """)
     assert "DONE" in run_with_devices(code)

@@ -74,10 +74,11 @@ class TestTuningSidecarShipsWithCheckpoint:
     teardown_method = setup_method
 
     @staticmethod
-    def _entry(block=(8, 64), strategy="mxu"):
+    def _entry(block=(8, 64), strategy="mxu", backend="tpu"):
         from repro.core import tuning
         cfg = tuning.KernelConfig(tuple(block), "shift_psum", strategy)
-        key = tuning._sidecar_key("sig-ship", (128, 128), 1, (), "mxu")
+        key = tuning._sidecar_key("sig-ship", (128, 128), 1, (), "mxu",
+                                  backend)
         return key, cfg
 
     def test_save_embeds_and_restore_merges(self, tmp_path):
@@ -109,6 +110,29 @@ class TestTuningSidecarShipsWithCheckpoint:
         load_checkpoint(str(tmp_path), 3, jax.tree.map(
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree()))
         assert tuning._SIDECAR[key][0] == local   # shipped entry lost
+
+    def test_backend_keyed_entries_round_trip(self, tmp_path):
+        """v6: per-backend winners for the *same* plan/shape ride the
+        checkpoint as distinct entries and restore to distinct keys —
+        a host move never collapses the GPU and TPU winners."""
+        from repro.core import tuning
+        tkey, tcfg = self._entry(block=(8, 128), backend="tpu")
+        gkey, gcfg = self._entry(block=(4, 64), backend="gpu")
+        assert tkey != gkey
+        tuning._SIDECAR[tkey] = (tcfg, 1.5, 42.0)
+        tuning._SIDECAR[gkey] = (gcfg, 2.5, 17.0)
+        save_checkpoint(str(tmp_path), 4, tree())
+        doc = json.loads(
+            (tmp_path / "step_00000004" / "TUNING.json").read_text())
+        assert json.loads(tkey)[-1] == "tpu"
+        assert json.loads(gkey)[-1] == "gpu"
+        assert set(doc["entries"]) == {tkey, gkey}
+
+        tuning.clear_sidecar()
+        load_checkpoint(str(tmp_path), 4, jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree()))
+        assert tuning._SIDECAR[tkey][0] == tcfg
+        assert tuning._SIDECAR[gkey][0] == gcfg
 
     def test_empty_sidecar_writes_no_file(self, tmp_path):
         save_checkpoint(str(tmp_path), 1, tree())

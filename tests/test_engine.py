@@ -559,7 +559,7 @@ class TestMxuStrategy:
         assert fused.strategy == "mxu"
         assert fuse_plans(mk(None), mk(None)).strategy is None
 
-    # ---- tuner integration (schema v5) ------------------------------------
+    # ---- tuner integration (schema v5 strategy / v6 backend keys) ---------
 
     def test_candidates_enumerate_strategy(self):
         import dataclasses
@@ -589,9 +589,9 @@ class TestMxuStrategy:
         assert best("2d121pt").strategy == "mxu"
         assert best("3d27pt").strategy == "mxu"
 
-    def test_autotune_records_strategy_v5(self, rng, tmp_path, monkeypatch):
+    def test_autotune_records_strategy_v6(self, rng, tmp_path, monkeypatch):
         """Measured winners land in the sidecar with the strategy field
-        and the 6-component (strategy-keyed) v5 key."""
+        and the 7-component (strategy- and backend-keyed) v6 key."""
         import json
         from repro.kernels import ops
         tuning.clear_cache()
@@ -606,11 +606,42 @@ class TestMxuStrategy:
             assert tuning._SIDECAR
             key, (cfg, _, _) = next(iter(tuning._SIDECAR.items()))
             parts = json.loads(key)
-            assert len(parts) == 6 and parts[-1] == "mxu"
+            assert len(parts) == 7 and parts[-2] == "mxu"
+            assert parts[-1] in ("tpu", "gpu")
             assert cfg.strategy == "mxu"
             entries = tuning.sidecar_entries()
             assert all(v["schema"] == tuning.ENGINE_SCHEMA_VERSION
                        and v["strategy"] == "mxu" for v in entries.values())
+        finally:
+            tuning.clear_sidecar()
+            tuning.clear_cache()
+
+    def test_autotune_gpu_backend_v6_entries(self, rng, tmp_path,
+                                             monkeypatch):
+        """``autotune(backend='gpu')`` lands warp-shaped winners under a
+        key whose seventh component says 'gpu' — and the same op tuned
+        on the TPU lowering gets its own separate entry."""
+        import json
+        from repro.kernels import ops
+        tuning.clear_cache()
+        tuning.clear_sidecar()
+        monkeypatch.setenv(tuning.SIDECAR_ENV, str(tmp_path / "side.json"))
+        try:
+            x = jnp.array(rng.standard_normal((48, 96)), jnp.float32)
+            g = ops.stencil(x, "2d5pt", impl="interpret", autotune=True,
+                            backend="gpu")
+            t = ops.stencil(x, "2d5pt", impl="interpret", autotune=True,
+                            backend="tpu")
+            assert_close(g, ref.stencil_iterate(x, BENCHMARKS["2d5pt"], 1),
+                         1e-4)
+            assert_close(t, ref.stencil_iterate(x, BENCHMARKS["2d5pt"], 1),
+                         1e-4)
+            backends = {json.loads(k)[-1] for k in tuning._SIDECAR}
+            assert {"gpu", "tpu"} <= backends
+            # GPU winners come from the warp-multiple grid
+            for k, (cfg, _, _) in tuning._SIDECAR.items():
+                if json.loads(k)[-1] == "gpu" and len(cfg.block) == 2:
+                    assert cfg.block[-1] % 32 == 0 or cfg.block[-1] < 32
         finally:
             tuning.clear_sidecar()
             tuning.clear_cache()
@@ -632,6 +663,46 @@ class TestMxuStrategy:
                 is None
             assert tuning._nearest_sidecar(sig, (96, 96), 1, (), "lanes") \
                 is None
+        finally:
+            tuning.clear_sidecar()
+
+    def test_nearest_seed_never_crosses_backend(self):
+        """v6 regression: a winner measured against the GPU warp tiling
+        must never seed a TPU tune of the same plan/shape — the key's
+        seventh component keeps the lowerings apart."""
+        sdef = BENCHMARKS["2d9pt"]
+        plan = stencil2d_plan(sdef.offsets, coeffs=sdef.coeffs)
+        sig = tuning.plan_signature(plan)
+        tuning.clear_sidecar()
+        try:
+            cfg = tuning.KernelConfig((8, 64), "shift_psum")
+            key = tuning._sidecar_key(sig, (128, 128), 1, (), "auto", "gpu")
+            tuning._SIDECAR[key] = (cfg, 1.0, 2.0)
+            assert tuning._nearest_sidecar(
+                sig, (96, 96), 1, (), "auto", "gpu") == cfg
+            assert tuning._nearest_sidecar(
+                sig, (96, 96), 1, (), "auto", "tpu") is None
+        finally:
+            tuning.clear_sidecar()
+
+    def test_stale_v5_sidecar_entries_ignored(self, tmp_path):
+        """v5 sidecars predate the backend dimension (6-component keys,
+        schema 5): the loader and the checkpoint merge path must drop
+        every entry — a v5 winner never recorded which lowering it
+        measured."""
+        import json
+        v5_key = json.dumps(["conv2d:5x3", [64, 64], 1, "cpu", [], "auto"])
+        entries = {v5_key: {"block": [8, 128], "variant": "shift_psum",
+                            "strategy": None, "model_cost": 1.0,
+                            "measured_us": 5.0, "schema": 5}}
+        path = tmp_path / "v5.json"
+        path.write_text(json.dumps({"version": 1, "entries": entries}))
+        tuning.clear_sidecar()
+        try:
+            assert tuning.load_sidecar(str(path)) == 0
+            assert not tuning._SIDECAR
+            assert tuning.merge_sidecar_entries(entries) == 0
+            assert not tuning._SIDECAR
         finally:
             tuning.clear_sidecar()
 

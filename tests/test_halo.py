@@ -63,10 +63,17 @@ class TestShardGeometryErrors:
             check_shard_geometry(_plan("2d5pt"), (30, 64),
                                  (("data", 4), None))
 
-    def test_shard_smaller_than_halo_raises(self):
-        with pytest.raises(ValueError, match="smaller than the plan's halo"):
-            check_shard_geometry(_plan("2d9pt"), (16, 64),
-                                 (("data", 8), None), time_steps=3)
+    def test_shard_smaller_than_halo_is_fine_multihop(self):
+        # (6, 6) halo over 2-row shards: the exchange layer chains
+        # ppermute hops, so geometry checking accepts it.
+        local = check_shard_geometry(_plan("2d9pt"), (16, 64),
+                                     (("data", 8), None), time_steps=3)
+        assert local == (2, 64)
+
+    def test_halo_wider_than_axis_raises(self):
+        with pytest.raises(ValueError, match="wider than domain axis"):
+            check_shard_geometry(_plan("2d121pt"), (8, 64),
+                                 (("data", 8), None), time_steps=2)
 
     def test_non_shape_preserving_axis_raises(self):
         with pytest.raises(ValueError, match="shape-preserving"):
