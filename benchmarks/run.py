@@ -15,6 +15,7 @@ Prints ``name,us_per_call,derived`` CSV rows per the repo convention.
 | bench_scan_chunked (--scan-chunked) | (beyond paper) | chunk-streamed engine scans vs monolithic engine vs XLA chunked: tokens/sec + peak temp memory at long T |
 | bench_strategy (--strategy) | §5 + (beyond paper) | lanes (VPU shift-fma) vs mxu (im2row matmul) lowering per shape class: MB/s both ways, the tuner's pick, and §5 predicted-vs-measured ranking agreement |
 | bench_backend (--backend) | §4 + (beyond paper) | TPU lane-roll vs GPU warp-shift lowering of the same plans: per-backend MB/s + each backend's machine-model prediction |
+| bench_obs (--obs)         | §5 + (beyond paper) | telemetry readout: tuner sidecar hit-rates, engine launch/recompile counts, per-backend model-vs-measured drift aggregates |
 | bench_lm_roofline         | (assignment)   | summary of dry-run roofline artifacts |
 
 ``--json PATH`` additionally writes every row as machine-readable JSON
@@ -22,8 +23,9 @@ Prints ``name,us_per_call,derived`` CSV rows per the repo convention.
 ``BENCH_5.json`` perf-trajectory artifact comes from
 ``--fused --json BENCH_5.json``, ``BENCH_6.json`` from
 ``--scan-chunked --json BENCH_6.json``, ``BENCH_7.json`` from
-``--strategy auto --json BENCH_7.json`` and ``BENCH_8.json`` from
-``--backend auto --json BENCH_8.json``.
+``--strategy auto --json BENCH_7.json``, ``BENCH_8.json`` from
+``--backend auto --json BENCH_8.json`` and ``BENCH_9.json`` from
+``--obs --json BENCH_9.json`` (with ``--trace``/``--metrics`` sidecars).
 
 The container is CPU-only: wall-times are CPU XLA numbers that compare
 *schedules*, not TPU performance; TPU performance is reported by the
@@ -77,11 +79,29 @@ def _row(name: str, us: float, derived: str = ""):
                            "derived": _parse_derived(derived)})
 
 
+def _git_sha() -> str | None:
+    import subprocess
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=5, cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or None
+    except Exception:
+        return None
+
+
 def _write_json(path: str) -> None:
+    from repro.core.tuning import ENGINE_SCHEMA_VERSION
     doc = {
         "meta": {
             "backend": jax.default_backend(),
             "device_count": jax.device_count(),
+            # provenance: which code produced these numbers — a BENCH_N
+            # row is only comparable to another measured at the same
+            # engine schema (winners mean different kernels otherwise)
+            "git_sha": _git_sha(),
+            "engine_schema_version": ENGINE_SCHEMA_VERSION,
+            "jax_version": jax.__version__,
             "note": "CPU interpret-mode wall-times compare schedules, "
                     "not TPU performance",
         },
@@ -906,6 +926,75 @@ def bench_lm_roofline():
              f"useful={rr.useful_flops_ratio:.2f}")
 
 
+# ---------------------------------------------------------------------------
+# Telemetry: tuner hit-rates + model-vs-measured drift (--obs, BENCH_9.json)
+# ---------------------------------------------------------------------------
+
+def bench_obs(size2d: int = 128):
+    """Exercise tuner + both engine backends under telemetry and report
+    what the observability layer saw (DESIGN.md §15): sidecar hit/seed/
+    miss rates, engine launch and lowering (recompile) counts, and the
+    per-backend model-vs-measured drift aggregates — the BENCH_9.json
+    rows. Absolute µs are CPU interpret-mode; the drift *ratios* are the
+    artifact (they recalibrate the §5 constants on real hardware)."""
+    from repro import obs
+    from repro.core import tuning
+    from repro.kernels import ops, ssam_stencil2d
+    from repro.kernels.stencils import BENCHMARKS
+
+    obs.metrics.reset()
+    obs.drift.reset()
+    tuning.clear_cache()
+    tuning.clear_sidecar()
+    rng = np.random.default_rng(0)
+    x = jnp.array(rng.standard_normal((size2d, size2d)), jnp.float32)
+    names = [n for n, s in BENCHMARKS.items() if s.ndim == 2][:3]
+    print(f"# Telemetry: tuner + drift over {names} on tpu+gpu lowerings "
+          f"({size2d}^2, interpret mode)")
+    for backend in ("tpu", "gpu"):
+        for name in names:
+            sdef = BENCHMARKS[name]
+            plan = ssam_stencil2d.plan_for(sdef)
+            default = tuning.KernelConfig((8, 128))
+            runner = lambda cfg: tuning.measure_us(
+                lambda: ops.stencil(x, sdef, impl="interpret",
+                                    backend=backend, **cfg.as_kwargs(plan)))
+            tuning.autotune(plan, x.shape, default=default, runner=runner,
+                            backend=backend)
+            # replay: the second autotune of the same key must cache-hit
+            tuning.autotune(plan, x.shape, default=default, runner=runner,
+                            backend=backend)
+
+    snap = obs.metrics.snapshot()
+    counters = snap["counters"]
+
+    def total(cname):
+        return counters.get(cname, {}).get("total", 0.0)
+
+    hits = total("tuner.cache_hit") + total("tuner.sidecar_hit")
+    lookups = hits + total("tuner.sidecar_seed") + total("tuner.sidecar_miss")
+    _row("obs_tuner_hit_rate", 0.0,
+         f"hits={hits:.0f};lookups={lookups:.0f};"
+         f"rate={hits / max(lookups, 1):.2f};"
+         f"measured={total('tuner.measure'):.0f}")
+    for label, n in sorted(
+            counters.get("engine.launch", {}).get("by_label", {}).items()):
+        _row(f"obs_launch_{label.replace(':', '_')}", 0.0, f"count={n:.0f}")
+    _row("obs_recompiles", 0.0,
+         f"count={total('engine.lowering'):.0f}")
+
+    for backend, agg in sorted(obs.drift.aggregate().items()):
+        _row(f"obs_drift_{backend}", 0.0,
+             f"pooled_ratio={agg['pooled_ratio']:.4g};"
+             f"cells={agg['cells']};samples={agg['samples']};"
+             f"max_drift={agg['max_drift']:.3f}x;"
+             f"worst={agg['worst_signature']}")
+    from repro.obs import report as obs_report
+    print("# drift table (python -m repro.obs.report):")
+    for line in obs_report.render().splitlines():
+        print(f"#   {line}")
+
+
 def main(argv=None) -> None:
     import argparse
 
@@ -957,6 +1046,21 @@ def main(argv=None) -> None:
              "(perfmodel.machine_for); 'auto' measures both and asserts "
              "equivalence (the BENCH_8.json artifact uses 'auto')")
     p.add_argument(
+        "--obs", action="store_true",
+        help="run the telemetry benchmark: tuner sidecar hit-rates, engine "
+             "launch/recompile counts and per-backend model-vs-measured "
+             "drift aggregates (the BENCH_9.json artifact; pairs with "
+             "--trace/--metrics)")
+    p.add_argument(
+        "--trace", default=None, metavar="PATH",
+        help="collect engine/tuner/halo spans for the whole run and write "
+             "Chrome-trace JSON (chrome://tracing / Perfetto) to PATH")
+    p.add_argument(
+        "--metrics", default=None, metavar="PATH",
+        help="write the metrics registry snapshot + drift recorder state "
+             "as JSON to PATH at exit (render the drift table with "
+             "python -m repro.obs.report PATH)")
+    p.add_argument(
         "--json", default=None, metavar="PATH",
         help="also write every benchmark row as machine-readable JSON "
              "(per-kernel µs, MB/s, tuned config, §5 prediction, fused vs "
@@ -965,6 +1069,9 @@ def main(argv=None) -> None:
     global _JSON_ROWS
     if args.json:
         _JSON_ROWS = []
+    from repro import obs
+    if args.trace:
+        obs.trace.enable(args.trace)
     try:
         if args.mesh:
             shape = tuple(int(v) for v in args.mesh.lower().split("x"))
@@ -979,6 +1086,8 @@ def main(argv=None) -> None:
             bench_strategy(args.strategy)
         elif args.backend:
             bench_backend(args.backend)
+        elif args.obs:
+            bench_obs()
         elif args.batch is not None or args.channels is not None:
             ch = tuple(int(v) for v in (args.channels or "3,8").split(","))
             bench_conv2d_batched(args.batch if args.batch is not None else 4,
@@ -993,6 +1102,11 @@ def main(argv=None) -> None:
             bench_fused()
             bench_lm_roofline()
     finally:
+        if args.trace:
+            out = obs.trace.export(args.trace)
+            print(f"# wrote {len(obs.trace.events())} spans to {out}")
+        if args.metrics:
+            print(f"# wrote metrics+drift to {obs.metrics.export(args.metrics)}")
         if args.json:
             _write_json(args.json)
 

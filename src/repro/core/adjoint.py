@@ -57,12 +57,13 @@ rather than silently falling back to an XLA autodiff path.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 from typing import Iterator
 
 import jax
 import jax.numpy as jnp
+
+from repro.obs import metrics as _metrics
 
 from .plan import Step, SystolicPlan, Tap
 
@@ -70,7 +71,14 @@ from .plan import Step, SystolicPlan, Tap
 # Incremented by the ops-layer custom_vjp rules at backward trace time;
 # the gradcheck suite asserts these move, which is the acceptance proof
 # that jax.grad(ops.*) runs on the plan engine.
-BACKWARD_LOWERINGS: collections.Counter = collections.Counter()
+#
+# Since PR 9 this is an alias of the registry counter
+# ``adjoint.backward_lowerings`` (repro.obs.metrics), so the counts show
+# up in metrics snapshots; it is still a ``collections.Counter``
+# subclass, and ``metrics.reset()`` clears it in place, so every
+# existing ``BACKWARD_LOWERINGS[kind]`` / ``dict(...)`` consumer is
+# unchanged.
+BACKWARD_LOWERINGS = _metrics.counter("adjoint.backward_lowerings")
 
 
 def record_lowering(kind: str) -> None:

@@ -35,16 +35,70 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import obs
+
 from .fuse import pipeline_coeff_count
 from .halo import origin_pads
 from .plan import (EPILOGUE_OPERANDS, EpilogueStage, SystolicPlan, Tap,
                    chain_epilogue_operand_stages, epilogue_operand_stages)
+
+
+def _obs_lowering(*, plan: SystolicPlan, block, backend: str,
+                  time_steps: int = 1, variant: str = "shift_psum"):
+    """Trace-time telemetry for one plan lowering (both backends call it).
+
+    This runs inside the ``jax.jit``-ed lowering bodies, so its Python
+    side effects fire once per *compilation*, not per call: the
+    ``engine.lowering`` counter is the lowering-cache-miss (recompile)
+    count, and the returned span — the "one span per plan lowering"
+    event — times the trace+lower work itself, carrying the plan
+    signature, strategy, block and the §5 predicted cost. Disabled
+    tracing pays one counter bump and one boolean check.
+    """
+    strategy = (plan.strategy or "lanes") if plan.combine == "fma" \
+        else plan.combine
+    obs.metrics.inc("engine.lowering", f"{backend}:{plan.kind}")
+    if not obs.trace.enabled():
+        return obs.trace.NULL
+    from . import tuning
+    try:
+        cost = tuning.model_cost(
+            plan, tuning.KernelConfig(tuple(block), variant, plan.strategy),
+            time_steps, tuning.machine_for(backend))
+    except Exception:
+        cost = None       # telemetry never turns a lowering into an error
+    return obs.span(
+        "engine.lower", cat="engine", plan=tuning.plan_signature(plan),
+        kind=plan.kind, backend=backend, strategy=strategy,
+        block=list(block), time_steps=time_steps, model_cost=cost)
+
+
+def _obs_call_drift(plan: SystolicPlan, block, backend: str, time_steps: int,
+                    variant: str, out, t0: float, shape) -> None:
+    """Opt-in per-call model-vs-measured sample (``REPRO_DRIFT``).
+
+    Blocks on ``out`` — which defeats async dispatch, hence opt-in —
+    and records wall µs against the launch's predicted §5 cost. Skipped
+    under an enclosing jit trace (there is nothing to time).
+    """
+    jax.block_until_ready(out)
+    us = (time.perf_counter() - t0) * 1e6
+    from . import tuning
+    try:
+        cost = tuning.model_cost(
+            plan, tuning.KernelConfig(tuple(block), variant, plan.strategy),
+            time_steps, tuning.machine_for(backend))
+    except Exception:
+        return
+    obs.drift.record(tuning.plan_signature(plan), backend, plan.strategy,
+                     cost, us, shape=shape, source="call")
 
 
 # ---------------------------------------------------------------------------
@@ -579,11 +633,13 @@ def _run_window_plan_tpu(
     def make_scratch(B, in_block):
         return [pltpu.VMEM(B, acc_dtype)] if plan.reduce_axes else []
 
-    return _window_call(
-        x, w, plan=plan, block=block, time_steps=time_steps,
-        variant=variant, interpret=interpret, acc_dtype=acc_dtype,
-        epilogue_args=epilogue_args, make_kernel=make_kernel,
-        make_scratch=make_scratch)
+    with _obs_lowering(plan=plan, block=block, backend="tpu",
+                       time_steps=time_steps, variant=variant):
+        return _window_call(
+            x, w, plan=plan, block=block, time_steps=time_steps,
+            variant=variant, interpret=interpret, acc_dtype=acc_dtype,
+            epilogue_args=epilogue_args, make_kernel=make_kernel,
+            make_scratch=make_scratch)
 
 
 def run_window_plan(
@@ -642,11 +698,22 @@ def run_window_plan(
     kw = dict(plan=plan, block=block, time_steps=time_steps, variant=variant,
               interpret=interpret, acc_dtype=acc_dtype,
               epilogue_args=epilogue_args, strategy=strategy)
-    if backend == "gpu":
-        from . import engine_gpu
+    eff = dataclasses.replace(plan, strategy=strategy) if strategy else plan
+    strat = (eff.strategy or "lanes") if eff.combine == "fma" else eff.combine
+    obs.metrics.inc("engine.launch", f"{backend}:{strat}")
+    t0 = time.perf_counter()
+    with obs.span("engine.run_window_plan", cat="engine", kind=plan.kind,
+                  backend=backend, strategy=strat):
+        if backend == "gpu":
+            from . import engine_gpu
 
-        return engine_gpu.run_window_plan_gpu(x, w, **kw)
-    return _run_window_plan_tpu(x, w, **kw)
+            out = engine_gpu.run_window_plan_gpu(x, w, **kw)
+        else:
+            out = _run_window_plan_tpu(x, w, **kw)
+    if obs.drift.per_call() and not isinstance(x, jax.core.Tracer):
+        _obs_call_drift(eff, block, backend, time_steps, variant, out, t0,
+                        x.shape)
+    return out
 
 
 def run_window_plan_mxu(x: jax.Array, w=None, *, plan: SystolicPlan, **kw):
@@ -743,6 +810,8 @@ def run_weight_grad_plan(
         raise ValueError(
             f"no weight gradient for {plan.kind!r} "
             f"(combine={plan.combine!r}, coeff_mode={plan.coeff_mode!r})")
+    # Jitted directly: fires once per compilation (recompile count).
+    obs.metrics.inc("engine.lowering", f"tpu:wgrad-{plan.kind}")
     nb, nr, no = plan.batch_axes, plan.reduce_axes, plan.out_axes
 
     if plan.coeff_mode == "perlane":
@@ -980,10 +1049,11 @@ def _run_scan_plan_tpu(
     def make_scratch(BR):
         return [pltpu.VMEM((BR, 1), acc_dtype)]
 
-    return _scan_call(
-        *operands, plan=plan, block_r=block_r, interpret=interpret,
-        acc_dtype=acc_dtype, carry=carry, return_carry=return_carry,
-        make_kernel=make_kernel, make_scratch=make_scratch)
+    with _obs_lowering(plan=plan, block=(block_r, plan.S), backend="tpu"):
+        return _scan_call(
+            *operands, plan=plan, block_r=block_r, interpret=interpret,
+            acc_dtype=acc_dtype, carry=carry, return_carry=return_carry,
+            make_kernel=make_kernel, make_scratch=make_scratch)
 
 
 def run_scan_plan(
@@ -1021,11 +1091,21 @@ def run_scan_plan(
                else engine_backend())
     kw = dict(plan=plan, block_r=block_r, interpret=interpret,
               acc_dtype=acc_dtype, carry=carry, return_carry=return_carry)
-    if backend == "gpu":
-        from . import engine_gpu
+    obs.metrics.inc("engine.launch", f"{backend}:{plan.combine}")
+    t0 = time.perf_counter()
+    with obs.span("engine.run_scan_plan", cat="engine", kind=plan.kind,
+                  backend=backend, strategy=plan.combine):
+        if backend == "gpu":
+            from . import engine_gpu
 
-        return engine_gpu.run_scan_plan_gpu(*operands, **kw)
-    return _run_scan_plan_tpu(*operands, **kw)
+            out = engine_gpu.run_scan_plan_gpu(*operands, **kw)
+        else:
+            out = _run_scan_plan_tpu(*operands, **kw)
+    if (obs.drift.per_call()
+            and not isinstance(operands[0], jax.core.Tracer)):
+        _obs_call_drift(plan, (block_r, plan.S), backend, 1, "shift_psum",
+                        out, t0, operands[0].shape)
+    return out
 
 
 def check_chunk_geometry(plan: SystolicPlan, chunk: int) -> None:

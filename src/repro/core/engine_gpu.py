@@ -280,11 +280,13 @@ def run_window_plan_gpu(
             scratch.append(_smem(B, acc_dtype))     # register accumulator
         return scratch
 
-    return engine._window_call(
-        x, w, plan=plan, block=block, time_steps=time_steps,
-        variant=variant, interpret=interpret, acc_dtype=acc_dtype,
-        epilogue_args=epilogue_args, make_kernel=make_kernel,
-        make_scratch=make_scratch)
+    with engine._obs_lowering(plan=plan, block=block, backend="gpu",
+                              time_steps=time_steps, variant=variant):
+        return engine._window_call(
+            x, w, plan=plan, block=block, time_steps=time_steps,
+            variant=variant, interpret=interpret, acc_dtype=acc_dtype,
+            epilogue_args=epilogue_args, make_kernel=make_kernel,
+            make_scratch=make_scratch)
 
 
 def _gpu_scan_kernel(*refs, plan: SystolicPlan, acc_dtype, has_carry: bool,
@@ -381,7 +383,9 @@ def run_scan_plan_gpu(
     def make_scratch(BR):
         return [_smem((BR, 1), acc_dtype)]
 
-    return engine._scan_call(
-        *operands, plan=plan, block_r=block_r, interpret=interpret,
-        acc_dtype=acc_dtype, carry=carry, return_carry=return_carry,
-        make_kernel=make_kernel, make_scratch=make_scratch)
+    with engine._obs_lowering(plan=plan, block=(block_r, plan.S),
+                              backend="gpu"):
+        return engine._scan_call(
+            *operands, plan=plan, block_r=block_r, interpret=interpret,
+            acc_dtype=acc_dtype, carry=carry, return_carry=return_carry,
+            make_kernel=make_kernel, make_scratch=make_scratch)

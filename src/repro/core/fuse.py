@@ -54,6 +54,8 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro import obs
+
 from .plan import SystolicPlan, epilogue_operand_stages
 
 
@@ -166,23 +168,26 @@ def fuse_plans(*plans: SystolicPlan) -> SystolicPlan:
         depth, N, M = exts
     else:
         depth, (N, M) = 1, exts
-    return dataclasses.replace(
-        head,
-        kind="pipe%d_%s" % (n, "+".join(p.kind for p in plans)),
-        stages=tuple(plans),
-        steps=(),                       # per-stage steps live on the stages
-        M=M, N=N, depth=depth,
-        C=N + head.P - 1,
-        lead=lead if any(lead) else None,
-        trail=trail if any(trail) else None,
-        coeffs=None,
-        coeff_mode="dense" if any(p.coeff_mode == "dense" for p in plans)
-        else "table",
-        epilogue=(),                    # stage epilogues live on the stages
-        # one pinned stage pins the chain (single kernel); else auto —
-        # the engine resolves each stage as stage.strategy or composite's
-        strategy=strategies.pop() if strategies else None,
-    )
+    obs.metrics.inc("fuse.chains", f"n{n}")
+    with obs.span("fuse.fuse_plans", cat="fuse", n=n,
+                  kinds=[p.kind for p in plans]):
+        return dataclasses.replace(
+            head,
+            kind="pipe%d_%s" % (n, "+".join(p.kind for p in plans)),
+            stages=tuple(plans),
+            steps=(),                   # per-stage steps live on the stages
+            M=M, N=N, depth=depth,
+            C=N + head.P - 1,
+            lead=lead if any(lead) else None,
+            trail=trail if any(trail) else None,
+            coeffs=None,
+            coeff_mode="dense" if any(p.coeff_mode == "dense" for p in plans)
+            else "table",
+            epilogue=(),                # stage epilogues live on the stages
+            # one pinned stage pins the chain (single kernel); else auto —
+            # the engine resolves each stage as stage.strategy or composite's
+            strategy=strategies.pop() if strategies else None,
+        )
 
 
 def pipeline_coeff_count(plan: SystolicPlan) -> int:

@@ -52,11 +52,14 @@ from typing import Callable, Sequence
 
 import jax
 
+from repro import obs
+
 from .perfmodel import (TPU_V5E, HardwareLatencies, machine_for,
                         mxu_tap_rows)
 from .plan import SystolicPlan
 
 SIDECAR_ENV = "REPRO_TUNING_CACHE"
+MEASURE_REPS_ENV = "REPRO_MEASURE_REPS"
 
 # Engine schema version stamped on every sidecar entry. Bump whenever the
 # engine's lowering changes what a measured winner *means* (block
@@ -85,7 +88,13 @@ SIDECAR_ENV = "REPRO_TUNING_CACHE"
 #        GPU vs 8×128 sublane/lane tiles on TPU), so a winner measured
 #        against one lowering never replays — or seeds — the other;
 #        v5 entries never recorded which lowering they measured.
-ENGINE_SCHEMA_VERSION = 6
+#   v7 — measurement spread: entries carry the ``spread_us`` (IQR across
+#        :func:`measure_us` reps) of the winning measurement, so drift
+#        analysis (DESIGN.md §15) can tell noisy wins from modeled ones;
+#        v6 entries carry medians whose confidence is unknown, and a
+#        replayed winner with unknown noise is exactly what the drift
+#        monitor exists to rule out.
+ENGINE_SCHEMA_VERSION = 7
 
 # VMEM working-set budget per block (f32 elements): input block + psum +
 # output must fit comfortably in ~16 MB VMEM; stay conservative.
@@ -219,6 +228,10 @@ def _sidecar_key(sig: str, shape, time_steps: int, context: tuple,
 
 # sidecar key → (KernelConfig, model_cost, measured_us)
 _SIDECAR: dict[str, tuple[KernelConfig, float, float | None]] = {}
+# Measurement spread (IQR µs across reps) rides in a parallel map rather
+# than widening the tuple above: tests and checkpoint code construct /
+# unpack 3-tuples directly, and spread is v7 metadata, not identity.
+_SIDECAR_SPREAD: dict[str, float] = {}
 
 
 def sidecar_path() -> str | None:
@@ -236,13 +249,20 @@ def load_sidecar(path: str) -> int:
     with open(path) as f:
         doc = json.load(f)
     n = 0
-    for key, val in doc.get("entries", {}).items():
-        if val.get("schema", 1) != ENGINE_SCHEMA_VERSION:
-            continue
-        cfg = KernelConfig(tuple(val["block"]), val.get("variant", "shift_psum"),
-                           val.get("strategy"))
-        _SIDECAR[key] = (cfg, val.get("model_cost", 0.0), val.get("measured_us"))
-        n += 1
+    with obs.span("tuner.load_sidecar", cat="tuner", path=path):
+        for key, val in doc.get("entries", {}).items():
+            if val.get("schema", 1) != ENGINE_SCHEMA_VERSION:
+                obs.metrics.inc("tuner.sidecar_stale")
+                continue
+            cfg = KernelConfig(tuple(val["block"]),
+                               val.get("variant", "shift_psum"),
+                               val.get("strategy"))
+            _SIDECAR[key] = (cfg, val.get("model_cost", 0.0),
+                             val.get("measured_us"))
+            if val.get("spread_us") is not None:
+                _SIDECAR_SPREAD[key] = float(val["spread_us"])
+            n += 1
+    obs.metrics.inc("tuner.sidecar_load", n=n)
     return n
 
 
@@ -269,12 +289,15 @@ def save_sidecar(path: str | None = None) -> str | None:
                                      val.get("variant", "shift_psum"),
                                      val.get("strategy")),
                         val.get("model_cost", 0.0), val.get("measured_us"))
+                    if val.get("spread_us") is not None:
+                        _SIDECAR_SPREAD[key] = float(val["spread_us"])
         except Exception:
             pass      # unreadable file: overwrite with our entries
     entries = {
         key: {"block": list(cfg.block), "variant": cfg.variant,
               "strategy": cfg.strategy,
               "model_cost": cost, "measured_us": us,
+              "spread_us": _SIDECAR_SPREAD.get(key),
               "schema": ENGINE_SCHEMA_VERSION}
         for key, (cfg, cost, us) in sorted(_SIDECAR.items())
     }
@@ -330,6 +353,7 @@ def _nearest_sidecar(sig: str, shape, time_steps: int, context: tuple,
 
 def clear_sidecar() -> None:
     _SIDECAR.clear()
+    _SIDECAR_SPREAD.clear()
 
 
 def sidecar_entries() -> dict:
@@ -340,6 +364,7 @@ def sidecar_entries() -> dict:
         key: {"block": list(cfg.block), "variant": cfg.variant,
               "strategy": cfg.strategy,
               "model_cost": cost, "measured_us": us,
+              "spread_us": _SIDECAR_SPREAD.get(key),
               "schema": ENGINE_SCHEMA_VERSION}
         for key, (cfg, cost, us) in sorted(_SIDECAR.items())
     }
@@ -361,6 +386,8 @@ def merge_sidecar_entries(entries: dict) -> int:
         cfg = KernelConfig(tuple(val["block"]), val.get("variant", "shift_psum"),
                            val.get("strategy"))
         _SIDECAR[key] = (cfg, val.get("model_cost", 0.0), val.get("measured_us"))
+        if val.get("spread_us") is not None:
+            _SIDECAR_SPREAD[key] = float(val["spread_us"])
         n += 1
     return n
 
@@ -558,8 +585,39 @@ def model_cost(
 # Measurement + the tuner
 # ---------------------------------------------------------------------------
 
-def measure_us(fn: Callable[[], jax.Array], reps: int = 3) -> float:
-    """Median wall-time (µs) of ``fn`` post-warmup."""
+class Measurement(float):
+    """A measured median that still *is* its µs float — every existing
+    consumer (min/sort/format/JSON) handles it unchanged — but carries
+    the sample dispersion: ``spread_us`` is the inter-quartile range
+    across reps (0.0 when reps < 3 can't resolve quartiles) and
+    ``reps`` the sample count. Monkeypatched stand-ins that return bare
+    floats stay legal; readers use ``getattr(us, "spread_us", None)``."""
+
+    __slots__ = ("spread_us", "reps")
+
+    def __new__(cls, median_us: float, spread_us: float = 0.0, reps: int = 1):
+        m = super().__new__(cls, median_us)
+        m.spread_us = float(spread_us)
+        m.reps = int(reps)
+        return m
+
+
+def measure_us(fn: Callable[[], jax.Array],
+               reps: int | None = None) -> "Measurement":
+    """Median wall-time (µs) of ``fn`` post-warmup.
+
+    ``reps`` defaults to ``$REPRO_MEASURE_REPS`` (else 3) so noisy hosts
+    (CI) can buy tighter medians without touching call sites. Returns a
+    :class:`Measurement` — a float subclass whose ``spread_us`` (IQR
+    across the reps) the tuner persists next to the winner (schema v7)
+    and the drift monitor uses to separate noise from model error.
+    """
+    if reps is None:
+        try:
+            reps = int(os.environ.get(MEASURE_REPS_ENV, "") or 3)
+        except ValueError:
+            reps = 3
+    reps = max(reps, 1)
     jax.block_until_ready(fn())
     ts = []
     for _ in range(reps):
@@ -567,7 +625,9 @@ def measure_us(fn: Callable[[], jax.Array], reps: int = 3) -> float:
         jax.block_until_ready(fn())
         ts.append(time.perf_counter() - t0)
     ts.sort()
-    return ts[len(ts) // 2] * 1e6
+    median = ts[len(ts) // 2] * 1e6
+    iqr = (ts[(3 * (len(ts) - 1)) // 4] - ts[(len(ts) - 1) // 4]) * 1e6
+    return Measurement(median, iqr, reps)
 
 
 def autotune(
@@ -614,6 +674,7 @@ def autotune(
         hw = machine_for(backend)
     key = _cache_key(plan, tuple(shape), time_steps, context, backend)
     if key in _CACHE:
+        obs.metrics.inc("tuner.cache_hit", backend)
         cached = _CACHE[key]
         return dataclasses.replace(cached, source="cache")
 
@@ -634,18 +695,24 @@ def autotune(
     skey = _sidecar_key(sig, shape, time_steps, context, pstrat, backend)
     hit = _SIDECAR.get(skey)
     if hit is not None and _agrees(hit[0]):
+        obs.metrics.inc("tuner.sidecar_hit", backend)
         result = TuneResult(hit[0], hit[1], hit[2], "sidecar")
         _CACHE[key] = result
         return result
-    seed = _nearest_sidecar(sig, shape, time_steps, context, pstrat, backend)
+    with obs.span("tuner.seed", cat="tuner", plan=sig, backend=backend):
+        seed = _nearest_sidecar(sig, shape, time_steps, context, pstrat,
+                                backend)
     if seed is not None and _agrees(seed):
+        obs.metrics.inc("tuner.sidecar_seed", backend)
         result = TuneResult(seed, model_cost(plan, seed, time_steps, hw),
                             None, "seeded")
         _CACHE[key] = result
         return result
+    obs.metrics.inc("tuner.sidecar_miss", backend)
 
-    cands = candidate_configs(plan, shape, time_steps, chunked=chunked,
-                              backend=backend)
+    with obs.span("tuner.candidates", cat="tuner", plan=sig, backend=backend):
+        cands = candidate_configs(plan, shape, time_steps, chunked=chunked,
+                                  backend=backend)
     if default is not None and default not in cands:
         cands.append(default)
     if fixed:
@@ -657,8 +724,8 @@ def autotune(
         else:      # pinned value outside the grid: dedupe by what runs
             seen: dict[tuple, KernelConfig] = {}
             for c in cands:
-                sig = tuple(sorted({**c.as_kwargs(plan), **fixed}.items()))
-                seen.setdefault(sig, c)
+                eff = tuple(sorted({**c.as_kwargs(plan), **fixed}.items()))
+                seen.setdefault(eff, c)
             cands = list(seen.values())
     if not cands:
         raise ValueError(f"no feasible block configs for {plan.kind} {shape}")
@@ -685,11 +752,26 @@ def autotune(
             to_measure = list(ranked[:top_k])
         if default is not None and default not in to_measure:
             to_measure.append(default)
-        timed = [(runner(c), c) for c in to_measure]
+        timed = []
+        for c in to_measure:
+            with obs.span("tuner.measure", cat="tuner", plan=sig,
+                          backend=backend, block=list(c.block),
+                          variant=c.variant, strategy=c.strategy or "auto"):
+                us_c = runner(c)
+            obs.metrics.inc("tuner.measure", backend)
+            # Every measured candidate is a free (predicted, measured)
+            # drift sample — not just the winner (DESIGN.md §15).
+            obs.drift.record(sig, backend, c.strategy,
+                             model_cost(plan, c, time_steps, hw),
+                             float(us_c), shape=tuple(shape))
+            timed.append((us_c, c))
         us, best = min(timed, key=lambda p: p[0])
         result = TuneResult(best, model_cost(plan, best, time_steps, hw),
                             us, "measured")
         _sidecar_store(skey, result)
+        spread = getattr(us, "spread_us", None)
+        if spread is not None and skey in _SIDECAR:
+            _SIDECAR_SPREAD[skey] = float(spread)
     _CACHE[key] = result
     return result
 

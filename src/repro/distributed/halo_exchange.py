@@ -45,6 +45,7 @@ from jax import lax
 from jax.experimental import shard_map as shm
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import obs
 from repro.core.engine import run_weight_grad_plan, run_window_plan
 from repro.core.halo import (check_shard_geometry, extended_crop,
                              is_shape_preserving, shard_halo)
@@ -290,7 +291,27 @@ def _local_lowering(
     ext = xl
     for a in range(nd):
         lo, hi = halos[a]
-        ext = _extend_axis(ext, in_off + a, lo, hi, assigns[a], boundary)
+        assign = assigns[a]
+        if (lo or hi) and assign is not None and assign[1] > 1:
+            # A cross-device exchange on this axis. This runs inside the
+            # shard_map trace, so the span and counters fire once per
+            # compilation with *static* accounting: per-shard slab bytes
+            # (both sides) and the ppermute hop count (halos wider than
+            # a shard chain ceil(width/n) hops, _multihop_slab).
+            n = ext.shape[in_off + a]
+            slab_bytes = ((lo + hi) * (ext.size // max(n, 1))
+                          * ext.dtype.itemsize)
+            hops = sum(-(-width // n) for width in (lo, hi) if width)
+            obs.metrics.inc("halo.exchanges", f"axis{a}")
+            obs.metrics.inc("halo.bytes", f"axis{a}", n=slab_bytes)
+            with obs.span("halo.exchange", cat="halo", kind=plan.kind,
+                          axis=a, lo=lo, hi=hi, mesh_axis=assign[0],
+                          shards=assign[1], slab_bytes=slab_bytes,
+                          hops=hops, boundary=boundary):
+                ext = _extend_axis(ext, in_off + a, lo, hi, assign,
+                                   boundary)
+        else:
+            ext = _extend_axis(ext, in_off + a, lo, hi, assign, boundary)
     exchanged = tuple(
         a for a in range(nd) if ext.shape[in_off + a] != local[a])
 
@@ -484,7 +505,10 @@ def sharded_window_plan(
         out_specs=spec_out,
         check_rep=False,
     )
-    return sharded(x, *w_args, *epi)
+    obs.metrics.inc("halo.launch", plan.kind)
+    with obs.span("halo.sharded_window_plan", cat="halo", kind=plan.kind,
+                  devices=mesh.size, overlap=overlap, boundary=boundary):
+        return sharded(x, *w_args, *epi)
 
 
 # ---------------------------------------------------------------------------

@@ -66,6 +66,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import adjoint as adj
 from repro.core import tuning
 from repro.core.engine import run_weight_grad_plan, run_window_plan
@@ -353,10 +354,14 @@ def _window_op(cfg: _WindowCfg, x, w, epi):
     return _window_forward(cfg, x, w, epi)
 
 
+# custom_vjp rules run at (backward) trace time, so these spans mark
+# one adjoint derivation + lowering each, not per-step runtime.
+@obs.trace.traced("ops.window_fwd", cat="ops")
 def _window_op_fwd(cfg, x, w, epi):
     return _window_forward(cfg, x, w, epi), (x, w, epi)
 
 
+@obs.trace.traced("ops.window_bwd", cat="ops")
 def _window_op_bwd(cfg, res, g):
     x, w, epi = res
     plan = cfg.plan
@@ -572,10 +577,12 @@ def _cumsum_op(cfg: _ScanCfg, x):
     return _cumsum_run(cfg, x)
 
 
+@obs.trace.traced("ops.cumsum_fwd", cat="ops")
 def _cumsum_op_fwd(cfg, x):
     return _cumsum_run(cfg, x), None
 
 
+@obs.trace.traced("ops.cumsum_bwd", cat="ops")
 def _cumsum_op_bwd(cfg, _, g):
     # (cumsum)ᵀ = the time-reversed scan plan: rev ∘ cumsum ∘ rev.
     adj.record_lowering("adj_scan")
@@ -598,11 +605,13 @@ def _linrec_op(cfg: _ScanCfg, a, b):
     return _linrec_run(cfg, a, b)
 
 
+@obs.trace.traced("ops.linrec_fwd", cat="ops")
 def _linrec_op_fwd(cfg, a, b):
     h = _linrec_run(cfg, a, b)
     return h, (a, h)
 
 
+@obs.trace.traced("ops.linrec_bwd", cat="ops")
 def _linrec_op_bwd(cfg, res, g):
     # λ_t = g_t + a_{t+1}·λ_{t+1}: the same recurrence, time-reversed,
     # with shifted coefficients — lowered through the same scan engine.
@@ -634,11 +643,13 @@ def _linrec_carry_op(cfg: _ScanCfg, a, b, h0):
     return _linrec_carry_run(cfg, a, b, h0)
 
 
+@obs.trace.traced("ops.linrec_carry_fwd", cat="ops")
 def _linrec_carry_op_fwd(cfg, a, b, h0):
     h, hT = _linrec_carry_run(cfg, a, b, h0)
     return (h, hT), (a, h, h0)
 
 
+@obs.trace.traced("ops.linrec_carry_bwd", cat="ops")
 def _linrec_carry_op_bwd(cfg, res, cts):
     # Chunk-local adjoint (DESIGN.md §12): the carry-out cotangent gc
     # folds into the last in-chunk λ seed (h_T *is* h[:, -1]), the λ

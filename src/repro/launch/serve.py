@@ -29,6 +29,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 
 @dataclasses.dataclass
 class Request:
@@ -37,6 +39,7 @@ class Request:
     max_new: int
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    t_assign: float = 0.0       # slot-assignment wall time (latency metric)
 
 
 class DecodeServer:
@@ -67,6 +70,7 @@ class DecodeServer:
         self.steps = 0
 
     def assign(self, req: Request, slot: int):
+        req.t_assign = time.perf_counter()
         self.slot_req[slot] = req
         self.index[slot] = 0
         self.active_mask[slot] = True
@@ -93,10 +97,15 @@ class DecodeServer:
 
     def step(self):
         """One lock-step decode across all slots."""
+        t0 = time.perf_counter()
         logits, self.state = self.step_fn(
             self.params, self.state, jnp.asarray(self.tokens),
             jnp.asarray(self.index))
         self.steps += 1
+        # Histogram of dispatch wall-time per batched step (the first
+        # sample includes the jit compile; p50 is the steady state).
+        obs.metrics.observe("serve.step_us",
+                            (time.perf_counter() - t0) * 1e6)
         if self.temperature > 0:
             self.key, sub = jax.random.split(self.key)
             nxt = jax.random.categorical(sub, logits / self.temperature, -1)
@@ -119,6 +128,12 @@ class DecodeServer:
                     req.done = True
                     self.active_mask[b] = False
                     self.slot_req[b] = None
+                    # assignment→completion latency; p50/p99 come out of
+                    # metrics.snapshot()["histograms"]["serve.request_us"]
+                    obs.metrics.observe(
+                        "serve.request_us",
+                        (time.perf_counter() - req.t_assign) * 1e6)
+                    obs.metrics.inc("serve.requests")
 
     def free_slots(self):
         return [b for b in range(self.B) if not self.active_mask[b]]

@@ -1,0 +1,32 @@
+"""Engine telemetry: span tracing, metrics, model-vs-measured drift.
+
+The observability layer the rest of the stack reports into (DESIGN.md
+§15). Three parts, all stdlib-only so any core module may import them
+without cycles:
+
+* :mod:`repro.obs.trace` — a nestable span tracer (context manager +
+  decorator, thread-local stack) exporting Chrome-trace/Perfetto JSON.
+  Disabled by default; enabled via ``$REPRO_TRACE`` or
+  :func:`tracing`. When disabled a span call returns one shared no-op
+  object — no allocation, no clock read.
+* :mod:`repro.obs.metrics` — a process-wide registry of counters,
+  gauges and histograms with ``snapshot()``/``reset()`` and JSON
+  export. Always live (a counter bump is a dict add); the registry
+  allocates state only for metrics actually touched.
+* :mod:`repro.obs.drift` — pairs each launch's predicted §5
+  ``model_cost`` cycles with measured µs and ranks the
+  (signature, backend, strategy) cells whose calibration drifts from
+  the backend-wide ratio — the artifact perf-model recalibration
+  consumes (``python -m repro.obs.report``).
+
+Overhead policy: with tracing off and per-call drift sampling off, the
+hot path pays one module-level boolean check per instrumentation point
+(asserted by ``tests/test_obs.py``). Telemetry never changes results —
+every hook is read-only on the data path.
+"""
+from __future__ import annotations
+
+from . import drift, metrics, trace
+from .trace import span, tracing
+
+__all__ = ["drift", "metrics", "trace", "span", "tracing"]

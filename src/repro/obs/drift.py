@@ -1,0 +1,184 @@
+"""Model-vs-measured drift recorder for the §5 performance model.
+
+Every measured launch contributes a pair: the §5 model's predicted
+``model_cost`` (cycles per useful output element) and the measured
+wall-time (µs). Their ratio ``µs / cycle`` is the *calibration
+constant* of the (plan signature, engine backend, strategy) cell —
+on a perfectly modeled machine it is the same constant everywhere
+(cycle time × elements), so the interesting signal is **dispersion**:
+
+* a cell whose ratio sits far from its backend's pooled geometric-mean
+  ratio is a shape class the model mis-prices — exactly where the
+  tuner's ranking can flip (the paper's §5 validation concern, and the
+  pre-work the ROADMAP "real-hardware recalibration" item needs);
+* a cell with a wide geometric spread across its own samples is noisy
+  measurement, not model error — the report separates the two.
+
+Pairs arrive from two sources:
+
+* **autotune sampling** (always on, free): every candidate the tuner's
+  measuring pass times already has both numbers in hand
+  (:func:`repro.core.tuning.autotune` records each one);
+* **per-call timing** (opt-in: ``REPRO_DRIFT=1`` or
+  :func:`sample_calls`): the engine dispatchers block on the result
+  and record wall-time against the launch's model cost — off by
+  default because the block defeats async dispatch.
+
+Ratios are tracked in log space (running sum + sum of squares), so the
+state is O(#cells) regardless of sample count and merges trivially.
+"""
+from __future__ import annotations
+
+import math
+import os
+import threading
+
+DRIFT_ENV = "REPRO_DRIFT"
+
+_lock = threading.Lock()
+# key "signature|backend|strategy" → running log-space stats
+_cells: dict[str, dict] = {}
+
+_per_call = bool(os.environ.get(DRIFT_ENV, "").lower()
+                 not in ("", "0", "false", "off"))
+
+
+def per_call() -> bool:
+    """Is opt-in per-launch timing on? (One bool read on the hot path.)"""
+    return _per_call
+
+
+def sample_calls(on: bool) -> None:
+    global _per_call
+    _per_call = bool(on)
+
+
+def _key(signature: str, backend: str, strategy: str | None) -> str:
+    return f"{signature}|{backend}|{strategy or 'lanes'}"
+
+
+def record(signature: str, backend: str, strategy: str | None,
+           predicted_cycles: float, measured_us: float,
+           shape=None, source: str = "autotune") -> None:
+    """Fold one (predicted cycles, measured µs) pair into its cell."""
+    if not (predicted_cycles > 0 and measured_us > 0):
+        return
+    lg = math.log(measured_us / predicted_cycles)
+    key = _key(signature, backend, strategy)
+    with _lock:
+        c = _cells.get(key)
+        if c is None:
+            c = _cells[key] = {
+                "signature": signature, "backend": backend,
+                "strategy": strategy or "lanes",
+                "n": 0, "sum_log": 0.0, "sum_log_sq": 0.0,
+                "min_ratio": None, "max_ratio": None,
+                "last_shape": None, "sources": {},
+            }
+        ratio = measured_us / predicted_cycles
+        c["n"] += 1
+        c["sum_log"] += lg
+        c["sum_log_sq"] += lg * lg
+        c["min_ratio"] = (ratio if c["min_ratio"] is None
+                          else min(c["min_ratio"], ratio))
+        c["max_ratio"] = (ratio if c["max_ratio"] is None
+                          else max(c["max_ratio"], ratio))
+        if shape is not None:
+            c["last_shape"] = list(shape)
+        c["sources"][source] = c["sources"].get(source, 0) + 1
+
+
+def reset() -> None:
+    with _lock:
+        _cells.clear()
+
+
+def state() -> dict:
+    """The recorder state as a JSON-ready dict (mergeable/loadable)."""
+    with _lock:
+        return {"cells": {k: dict(v, sources=dict(v["sources"]))
+                          for k, v in _cells.items()}}
+
+
+def load_state(doc: dict) -> int:
+    """Merge a :func:`state` document back in; returns #cells merged."""
+    cells = (doc or {}).get("cells", {})
+    n = 0
+    with _lock:
+        for key, c in cells.items():
+            mine = _cells.get(key)
+            if mine is None:
+                _cells[key] = {**c, "sources": dict(c.get("sources", {}))}
+            else:
+                mine["n"] += c["n"]
+                mine["sum_log"] += c["sum_log"]
+                mine["sum_log_sq"] += c["sum_log_sq"]
+                for lim, pick in (("min_ratio", min), ("max_ratio", max)):
+                    if c.get(lim) is not None:
+                        mine[lim] = (c[lim] if mine[lim] is None
+                                     else pick(mine[lim], c[lim]))
+                for s, k in c.get("sources", {}).items():
+                    mine["sources"][s] = mine["sources"].get(s, 0) + k
+            n += 1
+    return n
+
+
+def report(doc: dict | None = None) -> list[dict]:
+    """Drift rows, worst first.
+
+    Per cell: the geometric-mean calibration ratio (µs/cycle), its
+    geometric spread (σ in log space, exponentiated — ~1.0 means tight
+    samples), and ``drift`` = the cell ratio over its backend's pooled
+    ratio (log-signed: >1 the model is optimistic for this shape, <1
+    pessimistic). Rows sort by |log drift| — the cells most likely to
+    make the §5 ranking flip come first.
+    """
+    cells = ((doc or state()).get("cells") or {})
+    pooled: dict[str, list[float]] = {}
+    for c in cells.values():
+        pooled.setdefault(c["backend"], []).append((c["sum_log"], c["n"]))
+    base = {
+        b: math.exp(sum(s for s, _ in pairs) / max(sum(n for _, n in pairs), 1))
+        for b, pairs in pooled.items()
+    }
+    rows = []
+    for c in cells.values():
+        n = max(c["n"], 1)
+        mean_log = c["sum_log"] / n
+        var = max(c["sum_log_sq"] / n - mean_log * mean_log, 0.0)
+        ratio = math.exp(mean_log)
+        drift = ratio / base[c["backend"]]
+        rows.append({
+            "signature": c["signature"], "backend": c["backend"],
+            "strategy": c["strategy"], "n": c["n"],
+            "ratio_us_per_cyc": ratio,
+            "spread_geo": math.exp(math.sqrt(var)),
+            "backend_ratio": base[c["backend"]],
+            "drift": drift,
+            "abs_log_drift": abs(math.log(drift)) if drift > 0 else 0.0,
+            "min_ratio": c.get("min_ratio"),
+            "max_ratio": c.get("max_ratio"),
+            "last_shape": c.get("last_shape"),
+        })
+    rows.sort(key=lambda r: r["abs_log_drift"], reverse=True)
+    return rows
+
+
+def aggregate(doc: dict | None = None) -> dict:
+    """Fleet-level summary for bench artifacts (BENCH_9 rows): per
+    backend, the pooled ratio, the worst cell drift and the cell count."""
+    rows = report(doc)
+    out: dict[str, dict] = {}
+    best: dict[str, float] = {}
+    for r in rows:
+        agg = out.setdefault(r["backend"], {
+            "cells": 0, "samples": 0, "pooled_ratio": r["backend_ratio"],
+            "max_drift": 1.0, "worst_signature": None,
+        })
+        agg["cells"] += 1
+        agg["samples"] += r["n"]
+        if r["abs_log_drift"] >= best.get(r["backend"], -1.0):
+            best[r["backend"]] = r["abs_log_drift"]
+            agg["max_drift"] = r["drift"]
+            agg["worst_signature"] = r["signature"]
+    return out

@@ -1,0 +1,167 @@
+"""Process-wide metrics registry: counters, gauges, histograms.
+
+One flat namespace of dotted metric names (``"tuner.sidecar_hit"``,
+``"engine.launch"``, ``"serve.request_us"``). Three kinds:
+
+* **counters** — monotone :class:`LabeledCounter` maps (a
+  ``collections.Counter`` subclass, so existing Counter-shaped call
+  sites like ``adjoint.BACKWARD_LOWERINGS`` migrate by aliasing the
+  registry object). Unlabeled increments use the ``""`` key; labeled
+  ones key by an arbitrary string (``"gpu:mxu"``).
+* **gauges** — last-write-wins floats.
+* **histograms** — bounded reservoirs of observations with
+  count/sum/min/max and percentile readout (p50/p99 in
+  :func:`snapshot`); the reservoir keeps the most recent
+  :data:`HISTOGRAM_CAP` values, the scalar aggregates cover everything
+  ever observed.
+
+Always live: a counter bump is a dict add (~100 ns) and the registry
+allocates state only for metrics actually touched, which is the
+zero-state-when-unused half of the §15 overhead policy (the tracer
+carries the zero-overhead-when-disabled half). :func:`reset` clears
+registered objects **in place** so module-level aliases stay valid.
+"""
+from __future__ import annotations
+
+import collections
+import json
+import os
+import threading
+
+HISTOGRAM_CAP = 8192
+
+_lock = threading.Lock()
+
+
+class LabeledCounter(collections.Counter):
+    """A registry-held Counter: label → count (``""`` = unlabeled)."""
+
+    __slots__ = ()
+
+    def total_count(self) -> float:
+        # Counter.total() exists only on 3.10+; keep an explicit form.
+        return float(sum(self.values()))
+
+
+class Histogram:
+    """Bounded-reservoir histogram with exact global count/sum/min/max."""
+
+    __slots__ = ("values", "count", "sum", "min", "max")
+
+    def __init__(self):
+        self.values: collections.deque = collections.deque(
+            maxlen=HISTOGRAM_CAP)
+        self.count = 0
+        self.sum = 0.0
+        self.min = None
+        self.max = None
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        self.values.append(v)
+        self.count += 1
+        self.sum += v
+        self.min = v if self.min is None else min(self.min, v)
+        self.max = v if self.max is None else max(self.max, v)
+
+    def percentile(self, p: float) -> float | None:
+        """Nearest-rank percentile over the retained reservoir."""
+        if not self.values:
+            return None
+        vs = sorted(self.values)
+        idx = min(len(vs) - 1, max(0, int(round(p / 100.0 * (len(vs) - 1)))))
+        return vs[idx]
+
+    def clear(self) -> None:
+        self.values.clear()
+        self.count = 0
+        self.sum = 0.0
+        self.min = self.max = None
+
+    def summary(self) -> dict:
+        mean = self.sum / self.count if self.count else None
+        return {"count": self.count, "sum": self.sum, "min": self.min,
+                "max": self.max, "mean": mean,
+                "p50": self.percentile(50), "p99": self.percentile(99)}
+
+
+_counters: dict[str, LabeledCounter] = {}
+_gauges: dict[str, float] = {}
+_histograms: dict[str, Histogram] = {}
+
+
+def counter(name: str) -> LabeledCounter:
+    """The (lazily created) counter registered under ``name``."""
+    c = _counters.get(name)
+    if c is None:
+        with _lock:
+            c = _counters.setdefault(name, LabeledCounter())
+    return c
+
+
+def inc(name: str, label: str = "", n: float = 1) -> None:
+    counter(name)[label] += n
+
+
+def gauge(name: str, value: float) -> None:
+    _gauges[name] = float(value)
+
+
+def histogram(name: str) -> Histogram:
+    h = _histograms.get(name)
+    if h is None:
+        with _lock:
+            h = _histograms.setdefault(name, Histogram())
+    return h
+
+
+def observe(name: str, value: float) -> None:
+    histogram(name).observe(value)
+
+
+def snapshot() -> dict:
+    """The whole registry as a JSON-ready dict.
+
+    Counters render as ``{label: count}`` maps plus a ``total``;
+    histograms as their scalar summaries with p50/p99.
+    """
+    return {
+        "counters": {
+            name: {"total": c.total_count(), "by_label": dict(c)}
+            for name, c in sorted(_counters.items()) if c
+        },
+        "gauges": dict(sorted(_gauges.items())),
+        "histograms": {
+            name: h.summary()
+            for name, h in sorted(_histograms.items()) if h.count
+        },
+    }
+
+
+def counter_total(name: str) -> float:
+    """Total across labels of one counter (0 when never touched)."""
+    c = _counters.get(name)
+    return c.total_count() if c else 0.0
+
+
+def reset() -> None:
+    """Zero every registered metric **in place** — module-level aliases
+    (``adjoint.BACKWARD_LOWERINGS``) keep pointing at the live object."""
+    with _lock:
+        for c in _counters.values():
+            c.clear()
+        _gauges.clear()
+        for h in _histograms.values():
+            h.clear()
+
+
+def export(path: str) -> str:
+    """Write :func:`snapshot` (plus the drift state, so one file feeds
+    ``python -m repro.obs.report``) as JSON; returns the path."""
+    from . import drift
+    doc = {"metrics": snapshot(), "drift": drift.state()}
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    return path

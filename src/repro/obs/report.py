@@ -1,0 +1,77 @@
+"""Drift-report CLI: render the model-vs-measured table.
+
+Usage:
+  python -m repro.obs.report METRICS.json      # file from --metrics / metrics.export
+  python -m repro.obs.report --live            # the in-process recorder
+
+The input is either a :func:`repro.obs.metrics.export` document
+(``{"metrics": ..., "drift": ...}``) or a bare
+:func:`repro.obs.drift.state` document (``{"cells": ...}``). Rows sort
+worst-drift-first: the (plan signature, backend, strategy) cells whose
+µs-per-predicted-cycle calibration sits farthest from their backend's
+pooled ratio — the shapes where the §5 model is most likely to
+mis-rank candidates and the first targets for real-hardware
+recalibration (ROADMAP).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from . import drift
+
+_COLS = ("signature", "backend", "strategy", "n", "ratio", "spread",
+         "drift", "shape")
+
+
+def _fmt(v, nd=3):
+    return f"{v:.{nd}g}" if isinstance(v, float) else str(v)
+
+
+def render(doc: dict | None = None) -> str:
+    """The drift table as aligned text (one line per cell)."""
+    rows = drift.report(doc)
+    if not rows:
+        return "drift: no model-vs-measured samples recorded"
+    table = [_COLS] + [
+        (r["signature"], r["backend"], r["strategy"], str(r["n"]),
+         _fmt(r["ratio_us_per_cyc"]), _fmt(r["spread_geo"]),
+         _fmt(r["drift"]),
+         "x".join(map(str, r["last_shape"] or ())) or "-")
+        for r in rows
+    ]
+    widths = [max(len(row[i]) for row in table) for i in range(len(_COLS))]
+    lines = ["  ".join(c.ljust(w) for c, w in zip(row, widths)).rstrip()
+             for row in table]
+    lines.insert(1, "  ".join("-" * w for w in widths))
+    agg = drift.aggregate(doc)
+    for b, a in sorted(agg.items()):
+        lines.append(
+            f"[{b}] pooled={a['pooled_ratio']:.3g} us/cyc over "
+            f"{a['cells']} cells / {a['samples']} samples; worst drift "
+            f"{a['max_drift']:.3g}x at {a['worst_signature']}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="render the model-vs-measured drift table")
+    ap.add_argument("path", nargs="?", default=None,
+                    help="metrics/drift JSON (from benchmarks/run.py "
+                         "--metrics PATH or repro.obs.metrics.export)")
+    ap.add_argument("--live", action="store_true",
+                    help="report the in-process recorder instead of a file")
+    args = ap.parse_args(argv)
+    doc = None
+    if args.path:
+        with open(args.path) as f:
+            loaded = json.load(f)
+        doc = loaded.get("drift", loaded)
+    elif not args.live:
+        ap.error("give a metrics JSON path (or --live)")
+    print(render(doc))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

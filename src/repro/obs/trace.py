@@ -1,0 +1,219 @@
+"""Nestable span tracer with Chrome-trace/Perfetto JSON export.
+
+Spans are wall-clock intervals with string attributes, collected into a
+process-wide buffer and exported as Chrome ``traceEvents`` (``ph: "X"``
+complete events — ``chrome://tracing`` and https://ui.perfetto.dev both
+open the file directly). Nesting is per-thread: a thread-local stack
+records the enclosing span, so events carry their parent's name and the
+viewer stacks them on the thread's track.
+
+Enabling:
+
+* ``REPRO_TRACE=1`` (or any truthy value) at import, or
+  ``REPRO_TRACE=/path/out.json`` to also set the default export path;
+* :func:`tracing` as a context manager (exports on exit when given a
+  path);
+* :func:`enable` / :func:`disable` imperatively.
+
+Overhead policy (DESIGN.md §15): when disabled, :func:`span` returns
+the shared :data:`NULL` no-op — one function call, one module-global
+boolean read, zero allocation, no clock read. Instrumentation sites
+that compute *attributes* (plan signatures, model costs) must guard
+that work with :func:`enabled` themselves; the tracer cannot un-pay
+work done before the call.
+
+A note on jit: spans emitted inside a ``jax.jit``-ed function body run
+at **trace time** — once per compilation, not per call. That is the
+"one span per plan lowering" semantic the engine uses deliberately:
+the jitted kernel bodies emit lowering spans, while the un-jitted
+dispatchers (``run_window_plan``/``run_scan_plan``) emit per-call
+spans.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import threading
+import time
+
+TRACE_ENV = "REPRO_TRACE"
+
+_enabled = False
+_default_path: str | None = None
+_events: list[dict] = []
+_lock = threading.Lock()
+_tls = threading.local()
+# Trace timestamps are µs relative to this origin (Chrome trace wants
+# monotonically comparable ts, not epoch time).
+_T0 = time.perf_counter()
+
+
+class _NullSpan:
+    """Shared do-nothing span: the disabled-mode fast path."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+NULL = _NullSpan()
+
+
+def enabled() -> bool:
+    return _enabled
+
+
+def enable(path: str | None = None) -> None:
+    """Turn span collection on (``path`` sets the default export file)."""
+    global _enabled, _default_path
+    _enabled = True
+    if path:
+        _default_path = path
+
+
+def disable() -> None:
+    global _enabled
+    _enabled = False
+
+
+def clear() -> None:
+    with _lock:
+        _events.clear()
+
+
+def events() -> list[dict]:
+    """A copy of the collected Chrome-trace events."""
+    with _lock:
+        return list(_events)
+
+
+def _stack() -> list[str]:
+    st = getattr(_tls, "stack", None)
+    if st is None:
+        st = _tls.stack = []
+    return st
+
+
+def current_stack() -> tuple[str, ...]:
+    """Names of the open spans on this thread, outermost first."""
+    return tuple(_stack())
+
+
+class _Span:
+    __slots__ = ("name", "cat", "attrs", "_t0")
+
+    def __init__(self, name: str, cat: str, attrs: dict):
+        self.name = name
+        self.cat = cat
+        self.attrs = attrs
+
+    def __enter__(self):
+        st = _stack()
+        if st:
+            self.attrs.setdefault("parent", st[-1])
+        st.append(self.name)
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        t1 = time.perf_counter()
+        st = _stack()
+        if st and st[-1] == self.name:
+            st.pop()
+        self.attrs["depth"] = len(st)
+        with _lock:
+            _events.append({
+                "name": self.name,
+                "cat": self.cat,
+                "ph": "X",
+                "ts": (self._t0 - _T0) * 1e6,
+                "dur": (t1 - self._t0) * 1e6,
+                "pid": os.getpid(),
+                "tid": threading.get_ident(),
+                "args": self.attrs,
+            })
+        return False
+
+
+def span(name: str, cat: str = "repro", **attrs):
+    """A span context manager — or the shared no-op when disabled.
+
+    Attribute values must be JSON-serializable (stringify plans and
+    dtypes at the call site, and only when :func:`enabled`).
+    """
+    if not _enabled:
+        return NULL
+    return _Span(name, cat, attrs)
+
+
+def traced(name: str | None = None, cat: str = "repro"):
+    """Decorator form of :func:`span` (zero-overhead when disabled)."""
+
+    def deco(fn):
+        label = name or fn.__qualname__
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            if not _enabled:
+                return fn(*args, **kwargs)
+            with _Span(label, cat, {}):
+                return fn(*args, **kwargs)
+
+        return wrapper
+
+    return deco
+
+
+class tracing:
+    """``with obs.tracing("out.json"): ...`` — enable, run, export.
+
+    Restores the previous enabled state on exit, so nested/tested use
+    cannot leak tracing into the rest of the process.
+    """
+
+    def __init__(self, path: str | None = None, *, fresh: bool = True):
+        self.path = path
+        self.fresh = fresh
+        self._was = False
+
+    def __enter__(self):
+        self._was = _enabled
+        if self.fresh:
+            clear()
+        enable(self.path)
+        return self
+
+    def __exit__(self, *exc):
+        if self.path:
+            export(self.path)
+        if not self._was:
+            disable()
+        return False
+
+
+def export(path: str | None = None) -> str | None:
+    """Write the collected events as Chrome-trace JSON; returns the path.
+
+    The document shape is the Chrome Trace Event Format's object form:
+    ``{"traceEvents": [...], "displayTimeUnit": "ms"}`` — what
+    ``chrome://tracing`` and Perfetto ingest unmodified.
+    """
+    path = path or _default_path
+    if not path:
+        return None
+    doc = {"traceEvents": events(), "displayTimeUnit": "ms"}
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    return path
+
+
+_env = os.environ.get(TRACE_ENV, "")
+if _env and _env.lower() not in ("0", "false", "off"):
+    enable(None if _env.lower() in ("1", "true", "on") else _env)

@@ -1,0 +1,386 @@
+"""Observability layer (DESIGN.md §15): tracer, metrics, drift.
+
+Covers the PR-9 acceptance gates:
+- disabled-mode fast path: ``span()`` returns the shared no-op, the
+  event buffer stays empty, and the per-span overhead is bounded;
+- span nesting + Chrome-trace JSON validity (``ph: "X"`` complete
+  events with µs timestamps, parent attribution, valid ``json.dumps``);
+- engine counters match known launch counts (per-call launches vs
+  per-compile lowerings);
+- drift recorder math (geomean ratios, backend pooling, worst-cell
+  ranking) and the report CLI;
+- serve latency histograms (p50/p99 in ``metrics.snapshot()``);
+- ``measure_us`` spread + ``$REPRO_MEASURE_REPS`` and the v7 sidecar
+  schema (spread persisted, stale v6 entries dropped on load).
+"""
+import json
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import tuning
+from repro.kernels import ops
+
+
+@pytest.fixture(autouse=True)
+def _clean_telemetry():
+    """Every test starts (and leaves) with telemetry off and empty."""
+    obs.trace.disable()
+    obs.trace.clear()
+    obs.metrics.reset()
+    obs.drift.reset()
+    yield
+    obs.trace.disable()
+    obs.trace.clear()
+    obs.metrics.reset()
+    obs.drift.reset()
+
+
+class TestTracerDisabled:
+    def test_span_is_shared_noop(self):
+        assert obs.span("anything", key="val") is obs.trace.NULL
+        assert obs.span("other") is obs.trace.NULL
+
+    def test_no_events_collected(self):
+        with obs.span("a"):
+            with obs.span("b"):
+                pass
+        assert obs.trace.events() == []
+
+    def test_disabled_overhead_bounded(self):
+        """The no-op path is a function call + a bool read — bound it
+        loosely (100 µs/span) so only a real regression (event append,
+        clock read, allocation per call) can trip it on a noisy host."""
+        n = 10_000
+        t0 = time.perf_counter()
+        for _ in range(n):
+            with obs.span("hot", a=1):
+                pass
+        per_span = (time.perf_counter() - t0) / n
+        assert per_span < 100e-6, f"{per_span * 1e6:.2f} µs per no-op span"
+        assert obs.trace.events() == []
+
+    def test_traced_decorator_passthrough(self):
+        calls = []
+
+        @obs.trace.traced("deco")
+        def fn(v):
+            calls.append(v)
+            return v + 1
+
+        assert fn(1) == 2
+        assert calls == [1]
+        assert obs.trace.events() == []
+
+
+class TestTracerEnabled:
+    def test_nesting_and_parent_attribution(self):
+        with obs.tracing():
+            with obs.span("outer"):
+                assert obs.trace.current_stack() == ("outer",)
+                with obs.span("inner"):
+                    assert obs.trace.current_stack() == ("outer", "inner")
+        evs = {e["name"]: e for e in obs.trace.events()}
+        assert set(evs) == {"outer", "inner"}
+        assert evs["inner"]["args"]["parent"] == "outer"
+        assert evs["inner"]["args"]["depth"] == 1
+        assert evs["outer"]["args"]["depth"] == 0
+        # inner completes within outer's interval
+        assert evs["inner"]["ts"] >= evs["outer"]["ts"]
+        assert (evs["inner"]["ts"] + evs["inner"]["dur"]
+                <= evs["outer"]["ts"] + evs["outer"]["dur"] + 1e-3)
+
+    def test_chrome_trace_export_shape(self, tmp_path):
+        path = tmp_path / "trace.json"
+        with obs.tracing(str(path)):
+            with obs.span("work", cat="test", detail="x"):
+                pass
+        doc = json.loads(path.read_text())
+        assert doc["displayTimeUnit"] == "ms"
+        (ev,) = doc["traceEvents"]
+        assert ev["ph"] == "X"
+        assert ev["name"] == "work" and ev["cat"] == "test"
+        assert isinstance(ev["ts"], float) and isinstance(ev["dur"], float)
+        assert ev["dur"] >= 0
+        assert {"pid", "tid", "args"} <= set(ev)
+
+    def test_tracing_restores_prior_state(self):
+        assert not obs.trace.enabled()
+        with obs.tracing():
+            assert obs.trace.enabled()
+        assert not obs.trace.enabled()
+
+
+class TestMetrics:
+    def test_counter_labels_and_total(self):
+        obs.metrics.inc("t.c")
+        obs.metrics.inc("t.c", "a", 2)
+        snap = obs.metrics.snapshot()["counters"]["t.c"]
+        assert snap["total"] == 3
+        assert snap["by_label"] == {"": 1, "a": 2}
+        assert obs.metrics.counter_total("t.c") == 3
+        assert obs.metrics.counter_total("never.touched") == 0
+
+    def test_reset_clears_in_place(self):
+        c = obs.metrics.counter("t.alias")
+        c["k"] += 5
+        obs.metrics.reset()
+        assert obs.metrics.counter("t.alias") is c     # same object
+        assert c.total_count() == 0
+
+    def test_histogram_percentiles(self):
+        for v in range(1, 101):
+            obs.metrics.observe("t.h", float(v))
+        h = obs.metrics.snapshot()["histograms"]["t.h"]
+        assert h["count"] == 100 and h["min"] == 1 and h["max"] == 100
+        assert 49 <= h["p50"] <= 52
+        assert 98 <= h["p99"] <= 100
+
+    def test_backward_lowerings_is_registry_counter(self):
+        from repro.core import adjoint
+        adjoint.reset_lowering_counts()
+        adjoint.record_lowering("adj_test")
+        assert adjoint.BACKWARD_LOWERINGS["adj_test"] == 1
+        snap = obs.metrics.snapshot()["counters"]
+        assert snap["adjoint.backward_lowerings"]["by_label"]["adj_test"] == 1
+        obs.metrics.reset()
+        assert adjoint.BACKWARD_LOWERINGS["adj_test"] == 0   # alias stays live
+
+
+class TestEngineCounters:
+    def test_launch_count_matches_calls(self):
+        x = jnp.ones((8, 256), jnp.float32)
+        base = obs.metrics.counter_total("engine.launch")
+        for _ in range(3):
+            ops.cumsum(x, impl="interpret")
+        assert obs.metrics.counter_total("engine.launch") == base + 3
+        assert obs.metrics.counter("engine.launch")["tpu:add"] >= 3
+
+    def test_lowering_counts_compiles_not_calls(self):
+        x = jnp.ones((8, 320), jnp.float32)      # unique shape → fresh compile
+        c = obs.metrics.counter("engine.lowering")
+        before = dict(c)
+        ops.cumsum(x, impl="interpret")
+        ops.cumsum(x, impl="interpret")          # second call: jit cache hit
+        delta = c["tpu:scan"] - before.get("tpu:scan", 0)
+        assert delta == 1, f"expected 1 compile, counted {delta}"
+
+    def test_engine_spans_when_tracing(self):
+        x = jnp.ones((8, 384), jnp.float32)
+        with obs.tracing():
+            ops.cumsum(x, impl="interpret")
+            ops.cumsum(x, impl="interpret")
+        names = [e["name"] for e in obs.trace.events()]
+        assert names.count("engine.run_scan_plan") == 2   # per call
+        assert names.count("engine.lower") == 1           # per compile
+        (low,) = [e for e in obs.trace.events()
+                  if e["name"] == "engine.lower"]
+        assert low["args"]["backend"] == "tpu"
+        assert low["args"]["plan"].startswith("scan-")
+        assert low["args"]["model_cost"] > 0
+
+    def test_backward_spans_when_tracing(self):
+        x = jnp.ones((8, 256), jnp.float32)
+        with obs.tracing():
+            jax.grad(lambda v: ops.cumsum(v, impl="interpret").sum())(x)
+        names = {e["name"] for e in obs.trace.events()}
+        assert "ops.cumsum_bwd" in names
+
+
+class TestDrift:
+    def test_record_and_geomean(self):
+        # two samples with ratios 2.0 and 8.0 → geomean 4.0
+        obs.drift.record("sig-a", "tpu", "lanes", 10.0, 20.0)
+        obs.drift.record("sig-a", "tpu", "lanes", 10.0, 80.0)
+        (row,) = obs.drift.report()
+        assert row["n"] == 2
+        assert row["ratio_us_per_cyc"] == pytest.approx(4.0)
+        assert row["min_ratio"] == pytest.approx(2.0)
+        assert row["max_ratio"] == pytest.approx(8.0)
+        # only cell of its backend → drift 1.0 against its own pool
+        assert row["drift"] == pytest.approx(1.0)
+        # log-space spread: exp(std([log2, log8])) = exp(log2) = 2
+        assert row["spread_geo"] == pytest.approx(2.0, rel=1e-6)
+
+    def test_backend_pooling_and_ranking(self):
+        obs.drift.record("sig-a", "tpu", "lanes", 1.0, 4.0)    # ratio 4
+        obs.drift.record("sig-b", "tpu", "lanes", 1.0, 1.0)    # ratio 1
+        obs.drift.record("sig-c", "gpu", "lanes", 1.0, 7.0)
+        rows = obs.drift.report()
+        tpu = [r for r in rows if r["backend"] == "tpu"]
+        assert all(r["backend_ratio"] == pytest.approx(2.0) for r in tpu)
+        drifts = sorted(r["drift"] for r in tpu)
+        assert drifts == [pytest.approx(0.5), pytest.approx(2.0)]
+        # both tpu cells drift equally in |log|; the gpu cell not at all
+        agg = obs.drift.aggregate()
+        assert agg["gpu"]["max_drift"] == pytest.approx(1.0)
+        assert agg["tpu"]["cells"] == 2 and agg["tpu"]["samples"] == 2
+        assert agg["tpu"]["worst_signature"] in ("sig-a", "sig-b")
+
+    def test_state_roundtrip_merge(self):
+        obs.drift.record("sig-a", "tpu", "lanes", 1.0, 2.0, shape=(8, 128))
+        doc = obs.drift.state()
+        obs.drift.reset()
+        assert obs.drift.report() == []
+        assert obs.drift.load_state(doc) == 1
+        obs.drift.record("sig-a", "tpu", "lanes", 1.0, 2.0)
+        (row,) = obs.drift.report()
+        assert row["n"] == 2 and row["last_shape"] == [8, 128]
+
+    def test_ignores_nonpositive(self):
+        obs.drift.record("s", "tpu", None, 0.0, 5.0)
+        obs.drift.record("s", "tpu", None, 5.0, 0.0)
+        assert obs.drift.report() == []
+
+    def test_autotune_records_drift(self):
+        tuning.clear_cache()
+        x = jnp.ones((32, 256), jnp.float32)
+        from repro.kernels import ssam_stencil2d
+        from repro.kernels.stencils import BENCHMARKS
+        sdef = BENCHMARKS["2d5pt"]
+        plan = ssam_stencil2d.plan_for(sdef)
+        runner = lambda cfg: tuning.measure_us(
+            lambda: ops.stencil(x, sdef, impl="interpret",
+                                **cfg.as_kwargs(plan)), reps=1)
+        tuning.autotune(plan, x.shape, time_steps=1,
+                        default=tuning.KernelConfig((8, 128)), runner=runner,
+                        context=("test_obs_drift",))
+        rows = obs.drift.report()
+        assert rows, "measured autotune pass must feed the drift recorder"
+        assert all(r["ratio_us_per_cyc"] > 0 for r in rows)
+        assert {r["signature"] for r in rows} == {
+            tuning.plan_signature(plan)}
+
+    def test_report_cli_renders(self, tmp_path, capsys):
+        from repro.obs import report
+        obs.drift.record("sig-x", "tpu", "lanes", 1.0, 3.0, shape=(4, 128))
+        path = tmp_path / "metrics.json"
+        obs.metrics.export(str(path))
+        assert report.main([str(path)]) == 0
+        out = capsys.readouterr().out
+        assert "sig-x" in out and "backend" in out
+        assert "[tpu]" in out
+
+    def test_report_empty(self, capsys):
+        from repro.obs import report
+        assert report.main(["--live"]) == 0
+        assert "no model-vs-measured samples" in capsys.readouterr().out
+
+
+class TestMeasureUs:
+    def test_measurement_carries_spread(self):
+        m = tuning.measure_us(lambda: jnp.zeros(8), reps=5)
+        assert isinstance(m, float)
+        assert m > 0 and m.reps == 5
+        assert m.spread_us >= 0.0
+
+    def test_reps_env_override(self, monkeypatch):
+        monkeypatch.setenv(tuning.MEASURE_REPS_ENV, "7")
+        m = tuning.measure_us(lambda: jnp.zeros(8))
+        assert m.reps == 7
+        monkeypatch.setenv(tuning.MEASURE_REPS_ENV, "not-a-number")
+        assert tuning.measure_us(lambda: jnp.zeros(8)).reps == 3
+
+    def test_plain_float_runner_still_legal(self):
+        """Monkeypatched measure_us stand-ins return bare floats
+        (test_sharded does); spread access must degrade, not crash."""
+        us = 17.0
+        assert getattr(us, "spread_us", None) is None
+
+
+class TestSidecarV7:
+    def test_spread_persisted_roundtrip(self, tmp_path):
+        tuning.clear_cache()
+        tuning.clear_sidecar()
+        key = tuning._sidecar_key("sig-v7", (32, 256), 1, (), "auto", "tpu")
+        tuning._SIDECAR[key] = (tuning.KernelConfig((8, 128)), 1.5, 42.0)
+        tuning._SIDECAR_SPREAD[key] = 3.25
+        path = tmp_path / "sidecar.json"
+        tuning.save_sidecar(str(path))
+        doc = json.loads(path.read_text())
+        (entry,) = doc["entries"].values()
+        assert entry["schema"] == tuning.ENGINE_SCHEMA_VERSION == 7
+        assert entry["spread_us"] == 3.25
+        tuning.clear_sidecar()
+        assert tuning.load_sidecar(str(path)) == 1
+        assert tuning._SIDECAR_SPREAD[key] == 3.25
+        tuning.clear_sidecar()
+
+    def test_stale_v6_dropped_on_load(self, tmp_path):
+        tuning.clear_sidecar()
+        path = tmp_path / "sidecar.json"
+        path.write_text(json.dumps({"version": 1, "entries": {
+            "stale-key": {"block": [8, 128], "variant": "shift_psum",
+                          "strategy": None, "model_cost": 1.0,
+                          "measured_us": 5.0, "schema": 6},
+        }}))
+        assert tuning.load_sidecar(str(path)) == 0
+        assert "stale-key" not in tuning._SIDECAR
+        assert obs.metrics.counter_total("tuner.sidecar_stale") == 1
+
+    def test_checkpoint_entries_carry_spread(self):
+        tuning.clear_sidecar()
+        key = tuning._sidecar_key("sig-ck", (8, 128), 1, (), "auto", "tpu")
+        tuning._SIDECAR[key] = (tuning.KernelConfig((8, 128)), 1.0, 9.0)
+        tuning._SIDECAR_SPREAD[key] = 0.5
+        entries = tuning.sidecar_entries()
+        assert entries[key]["spread_us"] == 0.5
+        tuning.clear_sidecar()
+        assert tuning.merge_sidecar_entries(entries) == 1
+        assert tuning._SIDECAR_SPREAD[key] == 0.5
+        tuning.clear_sidecar()
+
+
+class TestTunerCounters:
+    def test_hit_miss_seed_accounting(self):
+        tuning.clear_cache()
+        tuning.clear_sidecar()
+        obs.metrics.reset()
+        from repro.kernels import ssam_stencil2d
+        from repro.kernels.stencils import BENCHMARKS
+        plan = ssam_stencil2d.plan_for(BENCHMARKS["2d5pt"])
+        ctx = ("test_obs_tuner",)
+        tuning.autotune(plan, (32, 256), context=ctx)       # model-only: miss
+        assert obs.metrics.counter_total("tuner.sidecar_miss") == 1
+        tuning.autotune(plan, (32, 256), context=ctx)       # replay: cache hit
+        assert obs.metrics.counter_total("tuner.cache_hit") == 1
+        assert obs.metrics.counter_total("tuner.sidecar_hit") == 0
+
+
+class TestServeHistograms:
+    @pytest.fixture(scope="class")
+    def server_metrics(self):
+        from repro.config import get_config
+        from repro.launch.serve import DecodeServer, Request
+        from repro.models import build_model
+        from repro.nn.spec import init_params
+
+        obs.metrics.reset()
+        cfg = get_config("gemma3_1b", smoke=True)
+        model = build_model(cfg)
+        params = init_params(model.specs(), jax.random.PRNGKey(0))
+        server = DecodeServer(model, params, slots=2, cache_len=32)
+        rng = np.random.default_rng(0)
+        reqs = [Request(i, rng.integers(0, cfg.vocab, 4, dtype=np.int32), 3)
+                for i in range(3)]
+        done = server.run(reqs)
+        return len(done), obs.metrics.snapshot()
+
+    def test_request_latency_p50_p99(self, server_metrics):
+        n_done, snap = server_metrics
+        h = snap["histograms"]["serve.request_us"]
+        assert h["count"] == n_done == 3
+        assert 0 < h["p50"] <= h["p99"] <= h["max"]
+        assert h["min"] > 0
+        assert snap["counters"]["serve.requests"]["total"] == n_done
+
+    def test_step_latency_histogram(self, server_metrics):
+        _, snap = server_metrics
+        h = snap["histograms"]["serve.step_us"]
+        assert h["count"] >= 3                 # ≥ tokens decoded per request
+        assert 0 < h["p50"] <= h["max"]
