@@ -101,6 +101,61 @@ def set_engine_backend(backend: str | None) -> None:
     _ENGINE_BACKEND = None if backend is None else resolve_engine_backend(backend)
 
 
+# ---------------------------------------------------------------------------
+# Failure policy (DESIGN.md §16)
+#
+# What a guarded ops.* dispatch does when an execution level fails:
+# 'fallback' walks the degradation lattice (tuned → default → alternate
+# strategy/backend → reference oracle), 'raise' surfaces a structured
+# error naming the failing site. Same resolution order as the engine
+# backend: session global → $REPRO_ON_FAILURE → default 'fallback'.
+
+ON_FAILURE_MODES = ("fallback", "raise")
+ON_FAILURE_ENV = "REPRO_ON_FAILURE"
+CHECK_NUMERICS_ENV = "REPRO_CHECK_NUMERICS"
+_ON_FAILURE: str | None = None
+_CHECK_NUMERICS: bool | None = None
+
+
+def resolve_on_failure(mode: str) -> str:
+    if mode not in ON_FAILURE_MODES:
+        raise ValueError(
+            f"unknown on_failure mode {mode!r}: expected one of {ON_FAILURE_MODES}")
+    return mode
+
+
+def on_failure() -> str:
+    """The session's failure policy: ``set_on_failure()`` if called, else
+    ``$REPRO_ON_FAILURE``, else ``'fallback'``."""
+    import os
+
+    if _ON_FAILURE is not None:
+        return _ON_FAILURE
+    return resolve_on_failure(os.environ.get(ON_FAILURE_ENV, "fallback"))
+
+
+def set_on_failure(mode: str | None) -> None:
+    """Pin the process-wide failure policy (``None`` restores env/default)."""
+    global _ON_FAILURE
+    _ON_FAILURE = None if mode is None else resolve_on_failure(mode)
+
+
+def check_numerics() -> bool:
+    """Opt-in non-finite output detection on guarded dispatches:
+    ``set_check_numerics()`` if called, else truthy ``$REPRO_CHECK_NUMERICS``."""
+    import os
+
+    if _CHECK_NUMERICS is not None:
+        return _CHECK_NUMERICS
+    env = os.environ.get(CHECK_NUMERICS_ENV, "")
+    return bool(env) and env.lower() not in ("0", "false", "off")
+
+
+def set_check_numerics(flag: bool | None) -> None:
+    global _CHECK_NUMERICS
+    _CHECK_NUMERICS = None if flag is None else bool(flag)
+
+
 def normalize_arch(arch: str) -> str:
     arch = arch.replace("-", "_").replace(".", "g")
     return ARCH_IDS.get(arch, arch)

@@ -43,6 +43,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro import obs
+from repro.robust import faults as rfaults
 
 from .fuse import pipeline_coeff_count
 from .halo import origin_pads
@@ -700,6 +701,7 @@ def run_window_plan(
               epilogue_args=epilogue_args, strategy=strategy)
     eff = dataclasses.replace(plan, strategy=strategy) if strategy else plan
     strat = (eff.strategy or "lanes") if eff.combine == "fma" else eff.combine
+    rfaults.check("engine.window")
     obs.metrics.inc("engine.launch", f"{backend}:{strat}")
     t0 = time.perf_counter()
     with obs.span("engine.run_window_plan", cat="engine", kind=plan.kind,
@@ -1091,6 +1093,7 @@ def run_scan_plan(
                else engine_backend())
     kw = dict(plan=plan, block_r=block_r, interpret=interpret,
               acc_dtype=acc_dtype, carry=carry, return_carry=return_carry)
+    rfaults.check("engine.scan")
     obs.metrics.inc("engine.launch", f"{backend}:{plan.combine}")
     t0 = time.perf_counter()
     with obs.span("engine.run_scan_plan", cat="engine", kind=plan.kind,

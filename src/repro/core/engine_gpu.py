@@ -46,6 +46,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.robust import faults as rfaults
+
 from . import engine
 from .plan import (EPILOGUE_OPERANDS, GPU_WARP_LANES, SystolicPlan,
                    chain_epilogue_operand_stages)
@@ -239,12 +241,20 @@ def _gpu_window_kernel(*refs, plan: SystolicPlan, block: tuple[int, ...],
         o_ref[o_idx] = epilogue_fn(res).astype(o_ref.dtype)
 
 
+def run_window_plan_gpu(x, w=None, **kw):
+    """Fault-checked entry: ``engine.gpu.window`` fires per *call*, not
+    per trace — the jitted lowering below would only run its Python body
+    once per compilation, so an armed site would miss warm-cache calls."""
+    rfaults.check("engine.gpu.window")
+    return _run_window_plan_gpu_jit(x, w, **kw)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("plan", "block", "time_steps", "variant", "interpret",
                      "acc_dtype", "strategy"),
 )
-def run_window_plan_gpu(
+def _run_window_plan_gpu_jit(
     x: jax.Array,
     w=None,
     *,
@@ -356,11 +366,17 @@ def _gpu_scan_kernel(*refs, plan: SystolicPlan, acc_dtype, has_carry: bool,
         co_ref[:] = carry[:].astype(co_ref.dtype)
 
 
+def run_scan_plan_gpu(*operands, **kw):
+    """Fault-checked entry for the scan lowering (site ``engine.gpu.scan``)."""
+    rfaults.check("engine.gpu.scan")
+    return _run_scan_plan_gpu_jit(*operands, **kw)
+
+
 @functools.partial(
     jax.jit, static_argnames=("plan", "block_r", "interpret", "acc_dtype",
                               "return_carry")
 )
-def run_scan_plan_gpu(
+def _run_scan_plan_gpu_jit(
     *operands: jax.Array,
     plan: SystolicPlan,
     block_r: int = 8,

@@ -48,11 +48,15 @@ import json
 import math
 import os
 import time
+import zlib
 from typing import Callable, Sequence
 
 import jax
 
 from repro import obs
+from repro.robust import faults as rfaults
+from repro.robust import guard as rguard
+from repro.robust.guard import MeasurementError, SidecarError
 
 from .perfmodel import (TPU_V5E, HardwareLatencies, machine_for,
                         mxu_tap_rows)
@@ -60,6 +64,12 @@ from .plan import SystolicPlan
 
 SIDECAR_ENV = "REPRO_TUNING_CACHE"
 MEASURE_REPS_ENV = "REPRO_MEASURE_REPS"
+MEASURE_RETRIES_ENV = "REPRO_MEASURE_RETRIES"
+TUNE_BUDGET_ENV = "REPRO_TUNE_BUDGET_S"
+
+# A candidate whose IQR exceeds this fraction of its median is a noisy
+# sample: re-measure once before letting it into the ranking (§16.4).
+OUTLIER_SPREAD_FRACTION = 0.5
 
 # Engine schema version stamped on every sidecar entry. Bump whenever the
 # engine's lowering changes what a measured winner *means* (block
@@ -238,25 +248,98 @@ def sidecar_path() -> str | None:
     return os.environ.get(SIDECAR_ENV) or None
 
 
-def load_sidecar(path: str) -> int:
+def entry_crc(val: dict) -> str:
+    """Per-entry checksum over the fields that make a winner a winner.
+
+    Computed over the canonical JSON of the identity-bearing fields (not
+    the raw file bytes), so a sidecar re-serialized with different
+    whitespace/key order still verifies, while a flipped block size or
+    strategy does not."""
+    payload = json.dumps([
+        _jsonable(val.get("block")), val.get("variant"), val.get("strategy"),
+        val.get("model_cost"), val.get("measured_us"), val.get("schema"),
+    ])
+    return format(zlib.crc32(payload.encode()), "08x")
+
+
+def _entry_ok(val: dict) -> bool:
+    """Schema + checksum gate shared by every sidecar ingest path.
+
+    Wrong-schema entries are *stale* (measured against a different
+    lowering); entries whose stored ``crc`` disagrees with the recomputed
+    one are *corrupt* (bit-rotted or hand-edited). Entries with no crc at
+    all pass — pre-hardening v7 sidecars (and tests that hand-write
+    entries) stay loadable; they pick up checksums on the next save."""
+    if not isinstance(val, dict) or val.get("schema", 1) != ENGINE_SCHEMA_VERSION:
+        obs.metrics.inc("tuner.sidecar_stale")
+        return False
+    if "crc" in val and val["crc"] != entry_crc(val):
+        obs.metrics.inc("tuner.sidecar_corrupt_entry")
+        return False
+    return True
+
+
+def _quarantine_sidecar(path: str, err: Exception,
+                        on_corrupt: str | None) -> int:
+    """Handle an unreadable/corrupt sidecar *file* per policy.
+
+    ``'raise'`` surfaces a :class:`SidecarError` naming the site;
+    ``'quarantine'`` renames the file to ``<path>.corrupt`` (so the next
+    save starts fresh and the evidence survives for inspection), bumps
+    ``tuner.sidecar_quarantined`` and reports zero entries loaded.
+    ``None`` resolves from the session failure policy."""
+    mode = on_corrupt
+    if mode is None:
+        mode = "raise" if rguard.on_failure() == "raise" else "quarantine"
+    if mode == "raise":
+        raise SidecarError(
+            f"tuning.sidecar.load: corrupt/unreadable sidecar {path!r}: "
+            f"{type(err).__name__}: {err}") from err
+    obs.metrics.inc("tuner.sidecar_quarantined")
+    try:
+        os.replace(path, path + ".corrupt")
+    except OSError:
+        pass    # already gone / unwritable dir: fresh start regardless
+    return 0
+
+
+def load_sidecar(path: str, *, on_corrupt: str | None = None) -> int:
     """Merge a sidecar file into the persistent store; returns #entries.
 
     Entries whose ``schema`` does not match :data:`ENGINE_SCHEMA_VERSION`
     are *stale* — measured against a different engine lowering — and are
     skipped (the next :func:`save_sidecar` rewrites the file without
-    them, so staleness ages out rather than accumulating).
+    them, so staleness ages out rather than accumulating). Entries whose
+    per-entry checksum fails, or that are structurally broken, are
+    skipped individually (``tuner.sidecar_corrupt_entry``). A file that
+    cannot be parsed at all goes through :func:`_quarantine_sidecar`:
+    under ``on_corrupt='quarantine'`` (or failure policy 'fallback') it
+    is renamed ``*.corrupt`` and loading reports 0 entries; under
+    ``'raise'`` a :class:`SidecarError` names the site.
     """
-    with open(path) as f:
-        doc = json.load(f)
+    try:
+        rfaults.check("tuning.sidecar.load")
+        with open(path) as f:
+            doc = json.load(f)
+        entries = doc.get("entries", {})
+        if not isinstance(entries, dict):
+            raise ValueError("sidecar 'entries' is not an object")
+    except (KeyboardInterrupt, SystemExit):
+        raise
+    except Exception as e:
+        return _quarantine_sidecar(path, e, on_corrupt)
     n = 0
     with obs.span("tuner.load_sidecar", cat="tuner", path=path):
-        for key, val in doc.get("entries", {}).items():
-            if val.get("schema", 1) != ENGINE_SCHEMA_VERSION:
-                obs.metrics.inc("tuner.sidecar_stale")
+        for key, val in entries.items():
+            if not _entry_ok(val):
                 continue
-            cfg = KernelConfig(tuple(val["block"]),
-                               val.get("variant", "shift_psum"),
-                               val.get("strategy"))
+            try:
+                cfg = KernelConfig(tuple(val["block"]),
+                                   val.get("variant", "shift_psum"),
+                                   val.get("strategy"))
+            except (KeyError, TypeError):
+                obs.metrics.inc("tuner.sidecar_corrupt_entry")
+                continue
             _SIDECAR[key] = (cfg, val.get("model_cost", 0.0),
                              val.get("measured_us"))
             if val.get("spread_us") is not None:
@@ -266,11 +349,29 @@ def load_sidecar(path: str) -> int:
     return n
 
 
+def _wire_entry(key: str, cfg: KernelConfig, cost, us) -> dict:
+    """One sidecar entry in wire format, checksum stamped last."""
+    val = {"block": list(cfg.block), "variant": cfg.variant,
+           "strategy": cfg.strategy,
+           "model_cost": cost, "measured_us": us,
+           "spread_us": _SIDECAR_SPREAD.get(key),
+           "schema": ENGINE_SCHEMA_VERSION}
+    val["crc"] = entry_crc(val)
+    return val
+
+
 def save_sidecar(path: str | None = None) -> str | None:
     """Atomically write the persistent store to ``path`` (or the env path).
 
     Re-merges the file first so concurrent processes sharing one sidecar
-    keep each other's winners (this process's entries win conflicts).
+    keep each other's winners (this process's entries win conflicts);
+    an unreadable pre-existing file is counted (``tuner.sidecar_remerge_
+    failed``) and overwritten — the atomic tmp+rename means a failed
+    *write* never destroys the old file. Write failures follow the
+    failure policy: 'raise' surfaces a :class:`SidecarError` naming the
+    ``tuning.sidecar.save`` site, 'fallback' counts
+    ``tuner.sidecar_save_failed`` and keeps the process alive (the store
+    is still in memory; the next save retries).
     """
     path = path or sidecar_path()
     if not path:
@@ -279,9 +380,10 @@ def save_sidecar(path: str | None = None) -> str | None:
         try:
             load_file_only = json.load(open(path)).get("entries", {})
             for key, val in load_file_only.items():
-                # Stale-schema entries are dropped here: ignored on load,
-                # not re-merged on save — the rewrite ages them out.
-                if val.get("schema", 1) != ENGINE_SCHEMA_VERSION:
+                # Stale-schema / corrupt entries are dropped here:
+                # ignored on load, not re-merged on save — the rewrite
+                # ages them out.
+                if not _entry_ok(val):
                     continue
                 if key not in _SIDECAR:
                     _SIDECAR[key] = (
@@ -291,21 +393,31 @@ def save_sidecar(path: str | None = None) -> str | None:
                         val.get("model_cost", 0.0), val.get("measured_us"))
                     if val.get("spread_us") is not None:
                         _SIDECAR_SPREAD[key] = float(val["spread_us"])
+        except (KeyboardInterrupt, SystemExit):
+            raise
         except Exception:
-            pass      # unreadable file: overwrite with our entries
+            # unreadable file: overwrite with our entries, but visibly
+            obs.metrics.inc("tuner.sidecar_remerge_failed")
     entries = {
-        key: {"block": list(cfg.block), "variant": cfg.variant,
-              "strategy": cfg.strategy,
-              "model_cost": cost, "measured_us": us,
-              "spread_us": _SIDECAR_SPREAD.get(key),
-              "schema": ENGINE_SCHEMA_VERSION}
+        key: _wire_entry(key, cfg, cost, us)
         for key, (cfg, cost, us) in sorted(_SIDECAR.items())
     }
-    tmp = f"{path}.tmp.{os.getpid()}"
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    with open(tmp, "w") as f:
-        json.dump({"version": 1, "entries": entries}, f, indent=1)
-    os.replace(tmp, path)
+    try:
+        rfaults.check("tuning.sidecar.save")
+        tmp = f"{path}.tmp.{os.getpid()}"
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        with open(tmp, "w") as f:
+            json.dump({"version": 1, "entries": entries}, f, indent=1)
+        os.replace(tmp, path)
+    except (KeyboardInterrupt, SystemExit):
+        raise
+    except Exception as e:
+        if rguard.on_failure() == "raise":
+            raise SidecarError(
+                f"tuning.sidecar.save: failed writing sidecar {path!r}: "
+                f"{type(e).__name__}: {e}") from e
+        obs.metrics.inc("tuner.sidecar_save_failed")
+        return None
     return path
 
 
@@ -361,11 +473,7 @@ def sidecar_entries() -> dict:
     same wire format as :func:`save_sidecar`). Checkpoints embed this so
     tuned winners survive host moves (DESIGN.md §13)."""
     return {
-        key: {"block": list(cfg.block), "variant": cfg.variant,
-              "strategy": cfg.strategy,
-              "model_cost": cost, "measured_us": us,
-              "spread_us": _SIDECAR_SPREAD.get(key),
-              "schema": ENGINE_SCHEMA_VERSION}
+        key: _wire_entry(key, cfg, cost, us)
         for key, (cfg, cost, us) in sorted(_SIDECAR.items())
     }
 
@@ -373,15 +481,16 @@ def sidecar_entries() -> dict:
 def merge_sidecar_entries(entries: dict) -> int:
     """Merge checkpoint-shipped entries into the store; returns #merged.
 
-    Mirrors :func:`load_sidecar`'s staleness rule (wrong-schema entries
-    are skipped) but **never clobbers** an existing key: the live
-    process's winners — possibly measured on *this* host — outrank
-    whatever the checkpoint carried. Does not write through to the env
-    sidecar; the next measured winner does, via the usual path.
+    Mirrors :func:`load_sidecar`'s staleness + checksum rules
+    (wrong-schema or crc-failing entries are skipped) but **never
+    clobbers** an existing key: the live process's winners — possibly
+    measured on *this* host — outrank whatever the checkpoint carried.
+    Does not write through to the env sidecar; the next measured winner
+    does, via the usual path.
     """
     n = 0
     for key, val in (entries or {}).items():
-        if val.get("schema", 1) != ENGINE_SCHEMA_VERSION or key in _SIDECAR:
+        if not _entry_ok(val) or key in _SIDECAR:
             continue
         cfg = KernelConfig(tuple(val["block"]), val.get("variant", "shift_psum"),
                            val.get("strategy"))
@@ -392,11 +501,11 @@ def merge_sidecar_entries(entries: dict) -> int:
     return n
 
 
+# Import must never break on a bad sidecar, whatever the failure policy:
+# force quarantine mode here (rename *.corrupt + counter + fresh start)
+# instead of the old silent `except Exception` swallow.
 if sidecar_path() and os.path.exists(sidecar_path()):
-    try:
-        load_sidecar(sidecar_path())
-    except Exception:   # corrupt/foreign sidecar must never break import
-        _SIDECAR.clear()
+    load_sidecar(sidecar_path(), on_corrupt="quarantine")
 
 
 # ---------------------------------------------------------------------------
@@ -611,14 +720,26 @@ def measure_us(fn: Callable[[], jax.Array],
     :class:`Measurement` — a float subclass whose ``spread_us`` (IQR
     across the reps) the tuner persists next to the winner (schema v7)
     and the drift monitor uses to separate noise from model error.
+
+    Unusable samples raise a named :class:`MeasurementError` instead of
+    leaking into the ranking: a non-finite warmup output (the kernel
+    under time produced NaN/Inf — its speed is meaningless) or a
+    non-finite/negative median (a clock anomaly). The tuner's
+    per-candidate wrapper converts that into retry-then-quarantine.
     """
+    rfaults.check("tuning.measure")
     if reps is None:
         try:
             reps = int(os.environ.get(MEASURE_REPS_ENV, "") or 3)
         except ValueError:
             reps = 3
     reps = max(reps, 1)
-    jax.block_until_ready(fn())
+    out = fn()
+    jax.block_until_ready(out)
+    if rguard.has_nonfinite(out):
+        raise MeasurementError(
+            "tuning.measure: candidate produced non-finite output during "
+            "warmup — refusing to rank a kernel that computes garbage")
     ts = []
     for _ in range(reps):
         t0 = time.perf_counter()
@@ -627,7 +748,61 @@ def measure_us(fn: Callable[[], jax.Array],
     ts.sort()
     median = ts[len(ts) // 2] * 1e6
     iqr = (ts[(3 * (len(ts) - 1)) // 4] - ts[(len(ts) - 1) // 4]) * 1e6
+    if not math.isfinite(median) or median < 0:
+        raise MeasurementError(
+            f"tuning.measure: non-finite/negative median {median!r} µs "
+            f"across {reps} reps")
     return Measurement(median, iqr, reps)
+
+
+def _measure_candidate(runner, cfg: KernelConfig, *, backend: str,
+                       retries: int | None = None):
+    """One candidate through the hardened measurement path (§16.4).
+
+    Retry-with-backoff on failure, one extra re-measurement when the
+    sample is an IQR outlier (spread > ``OUTLIER_SPREAD_FRACTION`` of
+    the median — a noisy sample must not decide the ranking), and
+    quarantine (returns ``None``) when every attempt fails — so one bad
+    candidate can neither win nor abort the sweep. Under
+    ``on_failure='raise'`` an injected fault or measurement error
+    surfaces immediately as a structured :class:`GuardedExecutionError`;
+    organic exceptions re-raise unchanged.
+    """
+    if retries is None:
+        try:
+            retries = int(os.environ.get(MEASURE_RETRIES_ENV, "") or 2)
+        except ValueError:
+            retries = 2
+    backoff = 0.005
+    for attempt in range(retries + 1):
+        try:
+            us = runner(cfg)
+        except (KeyboardInterrupt, SystemExit):
+            raise
+        except Exception as e:
+            if rguard.on_failure() == "raise":
+                if isinstance(e, (rfaults.FaultInjected, MeasurementError)):
+                    raise rguard.GuardedExecutionError(
+                        "tuner.measure", [(f"candidate {cfg.block}", e)]
+                    ) from e
+                raise
+            obs.metrics.inc("tuner.measure_retry", backend)
+            if attempt < retries:
+                time.sleep(backoff * (2 ** attempt))
+            continue
+        m = float(us)
+        if not math.isfinite(m) or m < 0:
+            # runner bypassed measure_us (bare-float stand-ins): apply
+            # the same rejection here so garbage never enters min().
+            obs.metrics.inc("tuner.measure_nonfinite", backend)
+            continue
+        spread = getattr(us, "spread_us", 0.0) or 0.0
+        if spread > OUTLIER_SPREAD_FRACTION * max(m, 1e-9) and attempt < retries:
+            obs.metrics.inc("tuner.measure_outlier", backend)
+            continue
+        return us
+    obs.metrics.inc("tuner.quarantined", backend)
+    return None
 
 
 def autotune(
@@ -752,12 +927,26 @@ def autotune(
             to_measure = list(ranked[:top_k])
         if default is not None and default not in to_measure:
             to_measure.append(default)
+        try:
+            budget_s = float(os.environ.get(TUNE_BUDGET_ENV, "") or 0.0)
+        except ValueError:
+            budget_s = 0.0
+        deadline = (time.monotonic() + budget_s) if budget_s > 0 else None
         timed = []
-        for c in to_measure:
+        for idx, c in enumerate(to_measure):
+            if deadline is not None and timed and time.monotonic() > deadline:
+                # Wall-clock budget exhausted: rank what we have. Never
+                # skip the *first* candidate — a budget too small to
+                # measure anything would silently become model-only.
+                obs.metrics.inc("tuner.budget_skipped", backend,
+                                n=len(to_measure) - idx)
+                break
             with obs.span("tuner.measure", cat="tuner", plan=sig,
                           backend=backend, block=list(c.block),
                           variant=c.variant, strategy=c.strategy or "auto"):
-                us_c = runner(c)
+                us_c = _measure_candidate(runner, c, backend=backend)
+            if us_c is None:
+                continue        # quarantined: neither wins nor aborts
             obs.metrics.inc("tuner.measure", backend)
             # Every measured candidate is a free (predicted, measured)
             # drift sample — not just the winner (DESIGN.md §15).
@@ -765,13 +954,22 @@ def autotune(
                              model_cost(plan, c, time_steps, hw),
                              float(us_c), shape=tuple(shape))
             timed.append((us_c, c))
-        us, best = min(timed, key=lambda p: p[0])
-        result = TuneResult(best, model_cost(plan, best, time_steps, hw),
-                            us, "measured")
-        _sidecar_store(skey, result)
-        spread = getattr(us, "spread_us", None)
-        if spread is not None and skey in _SIDECAR:
-            _SIDECAR_SPREAD[skey] = float(spread)
+        if not timed:
+            # Every measurement quarantined: fall back to the model's
+            # ranking rather than crashing the sweep — the §5 model is
+            # exactly the prior we keep for when measurement is broken.
+            obs.metrics.inc("tuner.model_fallback", backend)
+            best = ranked[0]
+            result = TuneResult(best, model_cost(plan, best, time_steps, hw),
+                                None, "model_fallback")
+        else:
+            us, best = min(timed, key=lambda p: p[0])
+            result = TuneResult(best, model_cost(plan, best, time_steps, hw),
+                                us, "measured")
+            _sidecar_store(skey, result)
+            spread = getattr(us, "spread_us", None)
+            if spread is not None and skey in _SIDECAR:
+                _SIDECAR_SPREAD[skey] = float(spread)
     _CACHE[key] = result
     return result
 

@@ -47,6 +47,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import obs
 from repro.core.engine import run_weight_grad_plan, run_window_plan
+from repro.robust import faults as rfaults
 from repro.core.halo import (check_shard_geometry, extended_crop,
                              is_shape_preserving, shard_halo)
 from repro.core.plan import SystolicPlan
@@ -369,6 +370,81 @@ def _local_lowering(
     return out
 
 
+def validate_sharded_call(x, plan: SystolicPlan, mesh: Mesh,
+                          in_spec: P | None = None, *, time_steps: int = 1,
+                          boundary: str = "zero", rules=None):
+    """Every pre-``pallas_call`` check of :func:`sharded_window_plan`.
+
+    Factored out so the §16 guard can run it *before* entering the
+    degradation lattice: these are configuration errors (a sharded
+    reduce axis, a non-shape-preserving plan, halo-vs-shard geometry),
+    and a lattice level that drops the mesh would otherwise "recover"
+    from user misuse by silently computing something else. Returns the
+    resolved ``(in_spec, batch_assigns, spatial_assigns, halos,
+    local_shape)`` for the caller to lower with.
+    """
+    if boundary not in BOUNDARIES:
+        raise ValueError(f"boundary must be one of {BOUNDARIES}, "
+                         f"got {boundary!r}")
+    if boundary == "replicate" and time_steps != 1:
+        raise ValueError(
+            "boundary='replicate' supports time_steps=1 only: a clamped "
+            "halo is static while the true clamped boundary evolves under "
+            "temporal fusion")
+    nb, nr, nd = plan.batch_axes, plan.reduce_axes, plan.ndim_spatial
+    if x.ndim != nb + nr + nd:
+        raise ValueError(f"{plan.kind!r} plan wants a "
+                         f"{nb + nr + nd}-D input, got shape {x.shape}")
+    for a in range(nd):
+        if not is_shape_preserving(plan, a):
+            raise ValueError(
+                f"sharded execution needs a shape-preserving plan "
+                f"(lead+trail = ext−1 on every axis) so shards own equal "
+                f"input and output slices; {plan.kind!r} violates this on "
+                f"axis {a}. For conv2d use mode='same' "
+                "(core.plan.conv2d_same_plan).")
+    if in_spec is None:
+        in_spec = default_plan_spec(plan, x.shape, mesh, rules)
+    all_assigns = _axis_assignments(in_spec, mesh, nb + nr + nd)
+    batch_assigns = all_assigns[:nb]
+    for a, assign in enumerate(all_assigns[nb:nb + nr]):
+        if assign is not None:
+            raise ValueError(
+                f"reduce axis {a} of a {plan.kind!r} plan cannot be "
+                f"sharded (mesh axis {assign[0]!r}): the channel "
+                "reduction is carried in the engine's accumulator, not a "
+                "cross-device psum; shard the batch or spatial axes")
+    for a, (n, assign) in enumerate(zip(x.shape[:nb], batch_assigns)):
+        if assign is not None and n % assign[1] != 0:
+            raise ValueError(
+                f"mesh axis {assign[0]!r} (size {assign[1]}) does not "
+                f"divide batch axis {a} (size {n}) for {plan.kind!r}")
+    assigns = all_assigns[nb + nr:]
+    local = check_shard_geometry(plan, x.shape[nb + nr:], assigns,
+                                 time_steps)
+    halos = shard_halo(plan, time_steps)
+    if boundary != "zero":
+        # wrap/replicate also extend UNSHARDED axes, locally — the
+        # resident block must cover the halo it lends itself. Sharded
+        # axes are exempt: halos wider than a shard chain ppermute hops
+        # (:func:`_multihop_slab`) instead of slicing the resident rows.
+        for a, ((lo, hi), n) in enumerate(zip(halos, local)):
+            if (assigns[a] is None or assigns[a][1] == 1) \
+                    and max(lo, hi) > n:
+                raise ValueError(
+                    f"boundary={boundary!r} needs the local block to cover "
+                    f"its own axis-{a} halo: {n} rows per shard < "
+                    f"({lo}, {hi}) halo")
+    from repro.core.plan import epilogue_operand_stages
+    for st in epilogue_operand_stages(plan.final_epilogue()):
+        if st.op == "residual_add":
+            raise ValueError(
+                "a residual_add epilogue cannot ride a sharded call: the "
+                "residual operand is output-shaped and would need the "
+                "same sharding; add the residual outside the mesh call")
+    return in_spec, batch_assigns, assigns, halos, local
+
+
 def sharded_window_plan(
     x: jax.Array,
     w: jax.Array | None = None,
@@ -418,67 +494,11 @@ def sharded_window_plan(
       The plan's output (batch + out + spatial axes), batch and spatial
       axes sharded exactly like the input.
     """
-    if boundary not in BOUNDARIES:
-        raise ValueError(f"boundary must be one of {BOUNDARIES}, "
-                         f"got {boundary!r}")
-    if boundary == "replicate" and time_steps != 1:
-        raise ValueError(
-            "boundary='replicate' supports time_steps=1 only: a clamped "
-            "halo is static while the true clamped boundary evolves under "
-            "temporal fusion")
+    in_spec, batch_assigns, assigns, halos, local = validate_sharded_call(
+        x, plan, mesh, in_spec, time_steps=time_steps, boundary=boundary,
+        rules=rules)
     nb, nr, no, nd = (plan.batch_axes, plan.reduce_axes, plan.out_axes,
                       plan.ndim_spatial)
-    if x.ndim != nb + nr + nd:
-        raise ValueError(f"{plan.kind!r} plan wants a "
-                         f"{nb + nr + nd}-D input, got shape {x.shape}")
-    for a in range(nd):
-        if not is_shape_preserving(plan, a):
-            raise ValueError(
-                f"sharded execution needs a shape-preserving plan "
-                f"(lead+trail = ext−1 on every axis) so shards own equal "
-                f"input and output slices; {plan.kind!r} violates this on "
-                f"axis {a}. For conv2d use mode='same' "
-                "(core.plan.conv2d_same_plan).")
-    if in_spec is None:
-        in_spec = default_plan_spec(plan, x.shape, mesh, rules)
-    all_assigns = _axis_assignments(in_spec, mesh, nb + nr + nd)
-    batch_assigns = all_assigns[:nb]
-    for a, assign in enumerate(all_assigns[nb:nb + nr]):
-        if assign is not None:
-            raise ValueError(
-                f"reduce axis {a} of a {plan.kind!r} plan cannot be "
-                f"sharded (mesh axis {assign[0]!r}): the channel "
-                "reduction is carried in the engine's accumulator, not a "
-                "cross-device psum; shard the batch or spatial axes")
-    for a, (n, assign) in enumerate(zip(x.shape[:nb], batch_assigns)):
-        if assign is not None and n % assign[1] != 0:
-            raise ValueError(
-                f"mesh axis {assign[0]!r} (size {assign[1]}) does not "
-                f"divide batch axis {a} (size {n}) for {plan.kind!r}")
-    assigns = all_assigns[nb + nr:]
-    local = check_shard_geometry(plan, x.shape[nb + nr:], assigns,
-                                 time_steps)
-    halos = shard_halo(plan, time_steps)
-    if boundary != "zero":
-        # wrap/replicate also extend UNSHARDED axes, locally — the
-        # resident block must cover the halo it lends itself. Sharded
-        # axes are exempt: halos wider than a shard chain ppermute hops
-        # (:func:`_multihop_slab`) instead of slicing the resident rows.
-        for a, ((lo, hi), n) in enumerate(zip(halos, local)):
-            if (assigns[a] is None or assigns[a][1] == 1) \
-                    and max(lo, hi) > n:
-                raise ValueError(
-                    f"boundary={boundary!r} needs the local block to cover "
-                    f"its own axis-{a} halo: {n} rows per shard < "
-                    f"({lo}, {hi}) halo")
-
-    from repro.core.plan import epilogue_operand_stages
-    for st in epilogue_operand_stages(plan.final_epilogue()):
-        if st.op == "residual_add":
-            raise ValueError(
-                "a residual_add epilogue cannot ride a sharded call: the "
-                "residual operand is output-shaped and would need the "
-                "same sharding; add the residual outside the mesh call")
 
     b_names = tuple(a[0] if a else None for a in batch_assigns)
     s_names = tuple(a[0] if a else None for a in assigns)
@@ -505,6 +525,7 @@ def sharded_window_plan(
         out_specs=spec_out,
         check_rep=False,
     )
+    rfaults.check("halo.exchange")
     obs.metrics.inc("halo.launch", plan.kind)
     with obs.span("halo.sharded_window_plan", cat="halo", kind=plan.kind,
                   devices=mesh.size, overlap=overlap, boundary=boundary):
@@ -595,4 +616,5 @@ def sharded_weight_grad(
         out_specs=P(),
         check_rep=False,
     )
+    rfaults.check("halo.exchange")
     return sharded(x, g)

@@ -69,6 +69,7 @@ import jax.numpy as jnp
 from repro import obs
 from repro.core import adjoint as adj
 from repro.core import tuning
+from repro.robust import guard as rguard
 from repro.core.engine import run_weight_grad_plan, run_window_plan
 from repro.core.fuse import fuse_plans
 from repro.core.plan import (SystolicPlan, epilogue_operand_stages,
@@ -548,6 +549,120 @@ def _pipeline_bwd(cfg, x, ws, epi, g):
 _window_op.defvjp(_window_op_fwd, _window_op_bwd)
 
 
+# ---------------------------------------------------------------------------
+# Guarded dispatch: the degradation lattice (DESIGN.md §16.3)
+#
+# Every engine-lowered ops.* surface routes its forward call through
+# repro.robust.guard with an ordered level list: the tuned/requested
+# config first, then the family default block, then the alternate
+# lowering (strategy for mxu-pinned plans, the other engine backend
+# otherwise), and finally the pure-XLA reference oracle that shares no
+# lowering code with the engine. Each step down gives up performance
+# before it gives up the engine, and gives up the engine before it
+# gives up the answer. Fallback configs are built lazily inside their
+# thunks, so the no-failure path pays only closure creation; under
+# on_failure='raise' the guard surfaces injected faults as structured
+# errors and re-raises organic exceptions (validation ValueErrors etc.)
+# completely unchanged.
+#
+# Scope: the *forward* dispatch is guarded. custom_vjp backward rules
+# lower through the same engine but outside the lattice — an adjoint
+# failure surfaces under both policies (a silently-demoted gradient
+# would be worse than a loud one).
+# ---------------------------------------------------------------------------
+
+
+def _flip_backend(backend) -> str:
+    """The other engine lowering: resolve the effective backend, flip it."""
+    from repro.config import engine_backend, resolve_engine_backend
+    cur = (resolve_engine_backend(backend) if backend is not None
+           else engine_backend())
+    return "tpu" if cur == "gpu" else "gpu"
+
+
+def _safe_variant(plan) -> str:
+    """The variant the default/alternate levels retreat to: strided grids
+    require the data-stationary read; everything else takes shift_psum."""
+    return ("shift_data" if any(v > 1 for v in plan.stride_per_axis())
+            else "shift_psum")
+
+
+def _guarded_window(op: str, cfg: _WindowCfg, x, w, epi, oracle=None):
+    """One windowed engine call through the §16.3 lattice.
+
+    ``oracle`` is the op's pure-XLA reference closure (same output to
+    fp32 tolerance); None drops the level — used where no oracle can
+    represent the call (sharded wrap/replicate boundaries). Sharded
+    calls with boundary='zero' also get an ``unsharded`` level: the
+    halo-exchange layer exists to make the sharded result equal the
+    single-device engine, so desharding is an exact fallback when the
+    collective itself is what failed.
+    """
+    if cfg.mesh is not None:
+        # configuration errors (sharded reduce axes, non-shape-preserving
+        # plans, halo-vs-shard geometry) surface before the lattice: the
+        # unsharded/oracle levels drop the mesh and would otherwise
+        # "recover" from user misuse by computing something else.
+        from repro.distributed import halo_exchange as hx
+        hx.validate_sharded_call(x, cfg.plan, cfg.mesh, cfg.in_specs,
+                                 time_steps=cfg.time_steps,
+                                 boundary=cfg.boundary)
+
+    def default_level():
+        c = dataclasses.replace(cfg, block=_default_cfg(cfg.plan).block,
+                                variant=_safe_variant(cfg.plan),
+                                bwd_tune=None)
+        return _window_op(c, x, w, epi)
+
+    def alternate_level():
+        c = dataclasses.replace(cfg, block=_default_cfg(cfg.plan).block,
+                                variant=_safe_variant(cfg.plan),
+                                bwd_tune=None)
+        if (c.plan.strategy or "lanes") == "mxu":
+            # an mxu lowering bug: retreat to the paper's VPU schedule
+            c = dataclasses.replace(
+                c, plan=dataclasses.replace(c.plan, strategy="lanes"))
+        else:
+            c = dataclasses.replace(c, backend=_flip_backend(c.backend))
+        return _window_op(c, x, w, epi)
+
+    levels = [
+        ("tuned", lambda: _window_op(cfg, x, w, epi)),
+        ("default", default_level),
+        ("alternate", alternate_level),
+    ]
+    if cfg.mesh is not None and cfg.boundary == "zero":
+        levels.append(("unsharded", lambda: _window_op(
+            dataclasses.replace(cfg, mesh=None, in_specs=None), x, w, epi)))
+    if oracle is not None and (cfg.mesh is None or cfg.boundary == "zero"):
+        levels.append(("oracle", oracle))
+    return rguard.run(op, levels)
+
+
+def _guarded_scan(op: str, cfg: _ScanCfg, call, oracle=None):
+    """One scan engine call through the lattice: tuned block → default
+    (8, 128) block → the other backend → reference oracle. ``call`` maps
+    a (possibly demoted) :class:`_ScanCfg` to the engine invocation, so
+    the same helper serves monolithic and chunk-streamed schedules."""
+    d = _DEFAULTS["scan"].block
+    bt = min(d[1], cfg.chunk) if cfg.chunk else d[1]
+
+    def default_level():
+        return call(dataclasses.replace(cfg, block_r=d[0], block_t=bt))
+
+    def alternate_level():
+        return call(dataclasses.replace(
+            cfg, block_r=d[0], block_t=bt,
+            backend=_flip_backend(cfg.backend)))
+
+    levels = [("tuned", lambda: call(cfg)),
+              ("default", default_level),
+              ("alternate", alternate_level)]
+    if oracle is not None:
+        levels.append(("oracle", oracle))
+    return rguard.run(op, levels)
+
+
 @dataclasses.dataclass(frozen=True)
 class _ScanCfg:
     """Static configuration of one scan-engine call.
@@ -686,8 +801,17 @@ def linear_recurrence_carry(a, b, h0, *, impl: str | None = None, **kw):
     impl = impl or default_engine_impl()
     interpret = _interp(impl)
     cfg = _scan_cfg(kw, interpret=interpret, op="linear_recurrence_carry")
-    return _linrec_carry_op(dataclasses.replace(cfg, chunk=None),
-                            a, b, h0.reshape(a.shape[0], 1))
+    h0c = h0.reshape(a.shape[0], 1)
+
+    def oracle():
+        # fold the carry into the first step: h_1 = a_1·h_0 + b_1
+        b2 = b.at[:, :1].add(a[:, :1] * h0c)
+        h = ref.linear_recurrence(a, b2)
+        return h, h[:, -1:]
+
+    return _guarded_scan("linear_recurrence_carry",
+                         dataclasses.replace(cfg, chunk=None),
+                         lambda c: _linrec_carry_op(c, a, b, h0c), oracle)
 
 
 def _linrec_stream(cfg: _ScanCfg, a, b):
@@ -926,10 +1050,21 @@ def conv2d(x, w, *, mode: str = "same", impl: str | None = None,
         if epi_stages:
             y = adj.apply_epilogue(plan, y, epi_args)
         return y
+
+    def oracle():
+        # the impl='xla' branch above, as the lattice's level of last
+        # resort — stride subsample + epilogue replay included
+        y = ref_fn(x, mode)
+        if stride is not None:
+            y = y[..., ::stride[0], ::stride[1]]
+        if epi_stages:
+            y = adj.apply_epilogue(plan, y, epi_args)
+        return y
+
     return _conv2d_engine(x, w, plan=plan, kernel=kernel, tag=tag,
                           mode=mode, impl=impl, autotune=autotune, mesh=mesh,
                           in_specs=in_specs, boundary=boundary, kw=kw,
-                          epi_args=epi_args, backend=backend)
+                          epi_args=epi_args, backend=backend, oracle=oracle)
 
 
 def _window_cfg(plan, kw, *, interpret, time_steps=1, mesh=None,
@@ -954,7 +1089,8 @@ def _window_cfg(plan, kw, *, interpret, time_steps=1, mesh=None,
 
 
 def _conv2d_engine(x, w, *, plan, kernel, tag, mode, impl, autotune, mesh,
-                   in_specs, boundary, kw, epi_args=(), backend=None):
+                   in_specs, boundary, kw, epi_args=(), backend=None,
+                   oracle=None):
     """Shared mesh/autotune scaffolding for every conv2d rank.
 
     ``kernel(xs, interpret=..., **block_kwargs)`` lowers the engine call
@@ -994,7 +1130,7 @@ def _conv2d_engine(x, w, *, plan, kernel, tag, mode, impl, autotune, mesh,
         cfg = _window_cfg(plan, kw, interpret=interpret, mesh=mesh,
                           in_specs=in_specs, boundary=boundary,
                           backend=backend)
-        return _window_op(cfg, x, w, epi_args)
+        return _guarded_window(tag, cfg, x, w, epi_args, oracle)
     bwd_tune = None
     if autotune:
         call = (lambda **k: kernel(x, interpret=interpret, backend=backend,
@@ -1004,9 +1140,10 @@ def _conv2d_engine(x, w, *, plan, kernel, tag, mode, impl, autotune, mesh,
         kw = _tuned_kwargs(plan, x.shape, call, kw, context=(tag, mode, impl),
                            backend=backend)
         bwd_tune = ("adjoint", tag, mode, impl)
-    return _window_op(_window_cfg(plan, kw, interpret=interpret,
-                                  bwd_tune=bwd_tune, backend=backend),
-                      x, w, epi_args)
+    return _guarded_window(tag, _window_cfg(plan, kw, interpret=interpret,
+                                            bwd_tune=bwd_tune,
+                                            backend=backend),
+                           x, w, epi_args, oracle)
 
 
 def conv1d_causal(x, w, *, impl: str | None = None, autotune: bool = False,
@@ -1057,7 +1194,12 @@ def conv1d_causal(x, w, *, impl: str | None = None, autotune: bool = False,
         bwd_tune=bwd_tune, backend=backend)
     if kw:
         raise TypeError(f"unexpected kwargs for conv1d_causal: {sorted(kw)}")
-    return _window_op(cfg, x, w, epi_args)
+
+    def oracle():
+        y = ref.conv1d_causal(x, w)
+        return adj.apply_epilogue(plan, y, epi_args) if epi_stages else y
+
+    return _guarded_window("conv1d_causal", cfg, x, w, epi_args, oracle)
 
 
 def stencil(x, sdef: StencilDef | str, *, time_steps: int = 1,
@@ -1086,6 +1228,11 @@ def stencil(x, sdef: StencilDef | str, *, time_steps: int = 1,
         return adj.apply_epilogue(plan, y, epi_args) if epi_stages else y
     interpret = _interp(impl)
     pin = {"strategy": plan.strategy} if plan.strategy else {}
+
+    def oracle():
+        y = ref.stencil_iterate(x, sdef, time_steps)
+        return adj.apply_epilogue(plan, y, epi_args) if epi_stages else y
+
     if mesh is not None:
         if autotune:
             shape, sctx = _shard_tuning_call(plan, x, mesh, in_specs,
@@ -1108,7 +1255,7 @@ def stencil(x, sdef: StencilDef | str, *, time_steps: int = 1,
                           time_steps=time_steps, mesh=mesh,
                           in_specs=in_specs, boundary=boundary,
                           backend=backend)
-        return _window_op(cfg, x, None, epi_args)
+        return _guarded_window("stencil", cfg, x, None, epi_args, oracle)
     bwd_tune = None
     if autotune:
         call = (lambda **k: fn(x, sdef, time_steps=time_steps,
@@ -1120,10 +1267,11 @@ def stencil(x, sdef: StencilDef | str, *, time_steps: int = 1,
         kw = _tuned_kwargs(plan, x.shape, call, kw, time_steps=time_steps,
                            context=("stencil", impl), backend=backend)
         bwd_tune = ("adjoint", "stencil", impl)
-    return _window_op(_window_cfg(plan, kw, interpret=interpret,
-                                  time_steps=time_steps, bwd_tune=bwd_tune,
-                                  backend=backend),
-                      x, None, epi_args)
+    return _guarded_window(
+        "stencil",
+        _window_cfg(plan, kw, interpret=interpret, time_steps=time_steps,
+                    bwd_tune=bwd_tune, backend=backend),
+        x, None, epi_args, oracle)
 
 
 # ---------------------------------------------------------------------------
@@ -1345,24 +1493,33 @@ def pipeline(x, stages, *, impl: str | None = None, autotune: bool = False,
                 "the chain or run per-op ops.stencil calls under the mesh")
         # Unfused fallback: identical pad-once math, one engine call —
         # and one full HBM round-trip of the activation — per stage.
-        from repro.core.fuse import summed_lead_trail
-        lead, trail = summed_lead_trail(plans)
-        h = jnp.pad(x, [(0, 0)] * plans[0].batch_axes
-                    + list(zip(lead, trail)))
-        for i, p in enumerate(plans):
-            pv = dataclasses.replace(p, lead=None, trail=None)
-            a = epi_splits[i]
-            skw = dict(kw)
-            if autotune:
-                skw = _tuned_kwargs(
-                    pv, h.shape,
-                    _engine_runner(pv, h, ws[i], interpret, epi_args=a,
-                                   backend=backend),
-                    skw, context=("pipeline_stage", i, impl),
-                    backend=backend)
-            cfg = _window_cfg(pv, skw, interpret=interpret, backend=backend)
-            h = _window_op(cfg, h, ws[i], a)
-        return h
+        # The lattice wraps the whole sequence (a per-stage lattice would
+        # fall back stage-by-stage into mixed lowerings): any stage
+        # failure retreats to the pure-XLA chain oracle.
+        def unfused():
+            from repro.core.fuse import summed_lead_trail
+            lead, trail = summed_lead_trail(plans)
+            h = jnp.pad(x, [(0, 0)] * plans[0].batch_axes
+                        + list(zip(lead, trail)))
+            for i, p in enumerate(plans):
+                pv = dataclasses.replace(p, lead=None, trail=None)
+                a = epi_splits[i]
+                skw = dict(kw)
+                if autotune:
+                    skw = _tuned_kwargs(
+                        pv, h.shape,
+                        _engine_runner(pv, h, ws[i], interpret, epi_args=a,
+                                       backend=backend),
+                        skw, context=("pipeline_stage", i, impl),
+                        backend=backend)
+                cfg = _window_cfg(pv, skw, interpret=interpret,
+                                  backend=backend)
+                h = _window_op(cfg, h, ws[i], a)
+            return h
+
+        return rguard.run("pipeline", [
+            ("unfused", unfused),
+            ("oracle", lambda: _pipeline_ref(x, plans, ws, epi_args))])
     if autotune:
         if mesh is not None:
             shape, sctx = _shard_tuning_call(fused_plan, x, mesh, in_specs,
@@ -1387,7 +1544,9 @@ def pipeline(x, stages, *, impl: str | None = None, autotune: bool = False,
                 kw, context=("pipeline", impl), backend=backend)
     cfg = _window_cfg(fused_plan, kw, interpret=interpret, mesh=mesh,
                       in_specs=in_specs, boundary=boundary, backend=backend)
-    return _window_op(cfg, x, ws if fused_plan.stages else ws[0], epi_args)
+    return _guarded_window("pipeline", cfg, x,
+                           ws if fused_plan.stages else ws[0], epi_args,
+                           lambda: _pipeline_ref(x, plans, ws, epi_args))
 
 
 def _reject_scan_kwargs(op: str, kw: dict) -> None:
@@ -1444,7 +1603,10 @@ def cumsum(x, *, impl: str | None = None, autotune: bool = False, **kw):
             plan, x.shape,
             lambda **k: _sc.cumsum(x, interpret=interpret, **k), kw,
             context=("cumsum", impl), backend=kw.get("backend"))
-    return _cumsum_op(_scan_cfg(kw, interpret=interpret, op="cumsum"), x)
+    return _guarded_scan("cumsum",
+                         _scan_cfg(kw, interpret=interpret, op="cumsum"),
+                         lambda c: _cumsum_op(c, x),
+                         lambda: ref.cumsum(x))
 
 
 def sat(x, *, impl: str | None = None, **kw):
@@ -1470,8 +1632,11 @@ def linear_recurrence(a, b, *, impl: str | None = None,
             plan, a.shape,
             lambda **k: _sc.linear_recurrence(a, b, interpret=interpret, **k),
             kw, context=("linrec", impl), backend=kw.get("backend"))
-    return _linrec_op(
-        _scan_cfg(kw, interpret=interpret, op="linear_recurrence"), a, b)
+    return _guarded_scan(
+        "linear_recurrence",
+        _scan_cfg(kw, interpret=interpret, op="linear_recurrence"),
+        lambda c: _linrec_op(c, a, b),
+        lambda: ref.linear_recurrence(a, b))
 
 
 # ---------------------------------------------------------------------------
@@ -1589,7 +1754,10 @@ def chunked_linear_recurrence(a: jax.Array, b: jax.Array, *,
         from repro.core.plan import linear_recurrence_plan
         _eng.check_chunk_geometry(
             linear_recurrence_plan(_sc._lane_tile(cfg.block_t, chunk)), chunk)
-        out = _linrec_stream(cfg, rows_a, rows_b)
+        out = _guarded_scan(
+            "chunked_linear_recurrence", cfg,
+            lambda c: _linrec_stream(c, rows_a, rows_b),
+            lambda: _chunked_linrec_xla(rows_a, rows_b, chunk=chunk))
     else:
         cfg = _ScanCfg(block_r=kw.pop("block_r", 8),
                        block_t=kw.pop("block_t", chunk),
@@ -1602,5 +1770,8 @@ def chunked_linear_recurrence(a: jax.Array, b: jax.Array, *,
             raise TypeError(
                 f"unexpected kwargs for ops.chunked_linear_recurrence: "
                 f"{sorted(kw)}")
-        out = _linrec_op(cfg, rows_a, rows_b)
+        out = _guarded_scan(
+            "chunked_linear_recurrence", cfg,
+            lambda c: _linrec_op(c, rows_a, rows_b),
+            lambda: ref.linear_recurrence(rows_a, rows_b))
     return out.reshape(a.shape)

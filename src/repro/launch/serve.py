@@ -30,6 +30,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+from repro.robust import faults as rfaults
+from repro.robust import guard as rguard
+
+# consecutive serve_step failures tolerated before the server sheds load
+# (evicts the oldest active request) to break a poison-request livelock
+MAX_STEP_RETRIES = 3
 
 
 @dataclasses.dataclass
@@ -40,6 +46,8 @@ class Request:
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
     t_assign: float = 0.0       # slot-assignment wall time (latency metric)
+    deadline_s: float | None = None   # wall-clock budget from slot assignment
+    error: str | None = None    # why the request failed (None = clean finish)
 
 
 class DecodeServer:
@@ -68,6 +76,7 @@ class DecodeServer:
         self.tokens = np.zeros((slots, 1), np.int32)
         self.active_mask = np.zeros((slots,), bool)
         self.steps = 0
+        self.step_failures = 0
 
     def assign(self, req: Request, slot: int):
         req.t_assign = time.perf_counter()
@@ -97,6 +106,7 @@ class DecodeServer:
 
     def step(self):
         """One lock-step decode across all slots."""
+        rfaults.check("serve.step")
         t0 = time.perf_counter()
         logits, self.state = self.step_fn(
             self.params, self.state, jnp.asarray(self.tokens),
@@ -138,15 +148,86 @@ class DecodeServer:
     def free_slots(self):
         return [b for b in range(self.B) if not self.active_mask[b]]
 
+    def _fail_slot(self, b: int, reason: str):
+        """Reclaim slot ``b``: mark its request failed-but-done so the
+        driver returns it (with ``.error`` set) instead of hanging, and
+        free the slot for the next queued request."""
+        req = self.slot_req[b]
+        if req is not None:
+            req.error = reason
+            req.done = True
+            obs.metrics.inc("serve.request_error", reason.split(":")[0])
+        self.active_mask[b] = False
+        self.slot_req[b] = None
+        self.prompt_left[b] = np.zeros((0,), np.int32)
+
+    def _sweep_deadlines(self):
+        now = time.perf_counter()
+        for b in range(self.B):
+            req = self.slot_req[b]
+            if (req is not None and req.deadline_s is not None
+                    and now - req.t_assign > req.deadline_s):
+                obs.metrics.inc("serve.deadline_exceeded")
+                self._fail_slot(b, "deadline")
+
+    def health(self) -> dict:
+        """Liveness snapshot for external monitors (and the chaos bench)."""
+        return {
+            "steps": self.steps,
+            "step_failures": self.step_failures,
+            "active_slots": int(self.active_mask.sum()),
+            "slots": self.B,
+            "requests_completed": obs.metrics.counter_total("serve.requests"),
+            "requests_failed":
+                obs.metrics.counter_total("serve.request_error"),
+        }
+
     def run(self, requests: list[Request]) -> list[Request]:
+        """Drain ``requests`` through the slot pool.
+
+        A step failure no longer hangs the driver: under the session
+        policy ``on_failure='raise'`` it propagates (injected faults as
+        :class:`GuardedExecutionError` naming ``serve.step``); under
+        ``'fallback'`` the step retries up to :data:`MAX_STEP_RETRIES`
+        consecutive times, then the oldest active request is evicted
+        (``.error`` set, slot freed) so the rest of the pool makes
+        progress. Per-request ``deadline_s`` budgets are swept every
+        iteration. Every request always comes back ``done`` — check
+        ``.error`` to tell clean completions from failures.
+        """
         queue = list(requests)
         done: list[Request] = []
+        streak = 0
         while queue or self.active_mask.any():
+            self._sweep_deadlines()
             for b in self.free_slots():
                 if not queue:
                     break
                 self.assign(queue.pop(0), b)
-            self.step()
+            if self.active_mask.any():
+                try:
+                    self.step()
+                    streak = 0
+                except (KeyboardInterrupt, SystemExit):
+                    raise
+                except Exception as e:
+                    self.step_failures += 1
+                    obs.metrics.inc("serve.step_error", type(e).__name__)
+                    if rguard.on_failure() == "raise":
+                        if isinstance(e, rfaults.FaultInjected):
+                            raise rguard.GuardedExecutionError(
+                                "serve.step", [("step", e)]) from e
+                        raise
+                    streak += 1
+                    if streak > MAX_STEP_RETRIES:
+                        active = [b for b in range(self.B)
+                                  if self.active_mask[b]]
+                        if active:
+                            oldest = min(
+                                active,
+                                key=lambda b: self.slot_req[b].t_assign)
+                            self._fail_slot(oldest, "step_failure")
+                        streak = 0
             for r in requests:
                 if r.done and r not in done:
                     done.append(r)

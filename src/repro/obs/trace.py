@@ -92,7 +92,7 @@ def events() -> list[dict]:
         return list(_events)
 
 
-def _stack() -> list[str]:
+def _stack() -> list["_Span"]:
     st = getattr(_tls, "stack", None)
     if st is None:
         st = _tls.stack = []
@@ -101,7 +101,22 @@ def _stack() -> list[str]:
 
 def current_stack() -> tuple[str, ...]:
     """Names of the open spans on this thread, outermost first."""
-    return tuple(_stack())
+    return tuple(s.name for s in _stack())
+
+
+def annotate(**attrs) -> None:
+    """Attach attributes to the innermost open span on this thread.
+
+    The guarded dispatcher uses this to stamp demotions onto whatever
+    engine/op span is already open, without threading span objects
+    through the lattice. No-op when tracing is disabled or no span is
+    open — same one-bool-read discipline as :func:`span`.
+    """
+    if not _enabled:
+        return
+    st = _stack()
+    if st:
+        st[-1].attrs.update(attrs)
 
 
 class _Span:
@@ -115,15 +130,15 @@ class _Span:
     def __enter__(self):
         st = _stack()
         if st:
-            self.attrs.setdefault("parent", st[-1])
-        st.append(self.name)
+            self.attrs.setdefault("parent", st[-1].name)
+        st.append(self)
         self._t0 = time.perf_counter()
         return self
 
     def __exit__(self, *exc):
         t1 = time.perf_counter()
         st = _stack()
-        if st and st[-1] == self.name:
+        if st and st[-1] is self:
             st.pop()
         self.attrs["depth"] = len(st)
         with _lock:

@@ -1,0 +1,30 @@
+"""Guarded engine execution (DESIGN.md §16).
+
+Three pillars, layered on PR 9's telemetry:
+
+* :mod:`repro.robust.faults` — named, deterministic fault-injection
+  sites threaded through engine lowering, tuner measurement, sidecar
+  bytes, halo exchange, and the decode-server step.  Off by default
+  (one bool read); armed via :func:`faults.inject` or
+  ``$REPRO_FAULTS``.
+* :mod:`repro.robust.guard` — the degradation lattice every
+  engine-lowered ``ops.*`` call dispatches through: tuned config →
+  default config → alternate strategy/backend → reference/XLA oracle,
+  under ``on_failure='fallback'|'raise'`` with every demotion visible
+  in ``obs.metrics`` and the open trace span.
+* Hardened tuning + serving live in their home modules
+  (``core/tuning.py``, ``launch/serve.py``) and report through the
+  same counters.
+"""
+from __future__ import annotations
+
+from . import faults, guard
+from .faults import FaultInjected, inject
+from .guard import (GuardedExecutionError, MeasurementError, NumericsError,
+                    SidecarError, checking_numerics, failure_policy)
+
+__all__ = [
+    "faults", "guard", "inject", "FaultInjected", "GuardedExecutionError",
+    "NumericsError", "MeasurementError", "SidecarError", "failure_policy",
+    "checking_numerics",
+]

@@ -1,0 +1,211 @@
+"""Deterministic fault injection for the guarded-execution layer.
+
+Every failure-prone seam in the stack declares a named *site* here —
+engine lowering, tuner measurement, sidecar bytes, halo exchange, the
+decode-server step — and calls :func:`check` at its Python dispatch
+point.  When the site is armed and its counter crosses the probability
+threshold, ``check`` raises :class:`FaultInjected`; the guarded
+dispatcher (``repro.robust.guard``) then either surfaces it as a
+structured error or walks the degradation lattice, per policy.
+
+Design constraints (DESIGN.md §16.2):
+
+- **Off by default, one-bool-read fast path.**  ``check`` costs a
+  module-global bool test when nothing is armed — the same discipline
+  as ``obs.trace``.  Arming is explicit: the :func:`inject` context
+  manager, :func:`arm`, or the ``REPRO_FAULTS`` env spec.
+- **Deterministic.**  Whether occurrence *n* of a site fires is a pure
+  function of ``(seed, site, n)`` via ``zlib.crc32`` — independent of
+  the Python hash seed, the process, and every other site — so a chaos
+  run replays bit-identically from its spec string.
+- **Registry-closed.**  Arming an unknown site is a ``ValueError``
+  naming the registry; a typo'd site must not silently never fire.
+
+Spec grammar (env var or :func:`arm`): ``site:prob[:seed]`` joined by
+commas, e.g. ``REPRO_FAULTS="engine.window:1.0,tuning.measure:0.5:7"``.
+``site=all`` arms every registered site with the same prob/seed.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import os
+import threading
+import zlib
+
+FAULTS_ENV = "REPRO_FAULTS"
+
+#: Every injection site threaded through the stack.  Keep in sync with
+#: DESIGN.md §16.2 — tests iterate this registry, so adding a site here
+#: without a chaos-matrix entry fails test_robust.py's coverage check.
+SITES = (
+    "engine.window",        # core/engine.py run_window_plan dispatch
+    "engine.scan",          # core/engine.py run_scan_plan dispatch
+    "engine.gpu.window",    # core/engine_gpu.py run_window_plan_gpu
+    "engine.gpu.scan",      # core/engine_gpu.py run_scan_plan_gpu
+    "tuning.measure",       # core/tuning.py measure_us (candidate timing)
+    "tuning.sidecar.load",  # core/tuning.py load_sidecar bytes
+    "tuning.sidecar.save",  # core/tuning.py save_sidecar bytes
+    "halo.exchange",        # distributed/halo_exchange.py sharded dispatch
+    "serve.step",           # launch/serve.py DecodeServer.step
+)
+
+_DEFAULT_SEED = 0
+
+
+class FaultInjected(RuntimeError):
+    """An armed injection site fired.
+
+    Carries ``site`` so the guard (and tests) can attribute the failure
+    without string-parsing the message.
+    """
+
+    def __init__(self, site: str, occurrence: int):
+        super().__init__(
+            f"injected fault at site '{site}' (occurrence {occurrence})"
+        )
+        self.site = site
+        self.occurrence = occurrence
+
+
+# ---------------------------------------------------------------------------
+# Armed state.  _armed is the single fast-path bool; everything else is
+# only touched once a site is armed.  A lock guards arm/disarm so test
+# fixtures and context managers compose, but check() itself stays
+# lock-free: counters are per-site ints bumped under the GIL, and chaos
+# determinism is per-site, not cross-thread.
+# ---------------------------------------------------------------------------
+
+_armed = False
+_specs: dict[str, tuple[float, int]] = {}   # site -> (prob, seed)
+_counts: dict[str, int] = {}                # site -> occurrences seen
+_fired: dict[str, int] = {}                 # site -> occurrences fired
+_lock = threading.Lock()
+
+
+def parse_spec(spec: str) -> dict[str, tuple[float, int]]:
+    """Parse a ``site:prob[:seed]`` comma list into a spec dict."""
+    out: dict[str, tuple[float, int]] = {}
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        bits = part.split(":")
+        if len(bits) not in (2, 3):
+            raise ValueError(
+                f"fault spec '{part}' is not 'site:prob[:seed]'"
+            )
+        site, prob_s = bits[0].strip(), bits[1]
+        try:
+            prob = float(prob_s)
+        except ValueError:
+            raise ValueError(f"fault spec '{part}': prob '{prob_s}' is not a float")
+        if not 0.0 <= prob <= 1.0:
+            raise ValueError(f"fault spec '{part}': prob must be in [0, 1]")
+        seed = int(bits[2]) if len(bits) == 3 else _DEFAULT_SEED
+        targets = SITES if site == "all" else (site,)
+        for t in targets:
+            if t not in SITES:
+                raise ValueError(
+                    f"unknown fault site '{t}'; registered sites: {', '.join(SITES)}"
+                )
+            out[t] = (prob, seed)
+    return out
+
+
+def arm(spec: str | dict[str, tuple[float, int]]) -> None:
+    """Arm injection sites from a spec string or parsed dict."""
+    global _armed
+    parsed = parse_spec(spec) if isinstance(spec, str) else dict(spec)
+    for site in parsed:
+        if site not in SITES:
+            raise ValueError(
+                f"unknown fault site '{site}'; registered sites: {', '.join(SITES)}"
+            )
+    with _lock:
+        _specs.update(parsed)
+        for site in parsed:
+            _counts.setdefault(site, 0)
+            _fired.setdefault(site, 0)
+        _armed = bool(_specs)
+
+
+def disarm(site: str | None = None) -> None:
+    """Disarm one site, or everything (also clears counters)."""
+    global _armed
+    with _lock:
+        if site is None:
+            _specs.clear()
+            _counts.clear()
+            _fired.clear()
+        else:
+            _specs.pop(site, None)
+        _armed = bool(_specs)
+
+
+def armed_sites() -> dict[str, tuple[float, int]]:
+    return dict(_specs)
+
+
+def fired_counts() -> dict[str, int]:
+    """occurrences that actually fired, per site (for tests/benches)."""
+    return {k: v for k, v in _fired.items() if v}
+
+
+@contextlib.contextmanager
+def inject(spec: str | dict[str, tuple[float, int]]):
+    """Context manager: arm *spec* on entry, restore prior state on exit."""
+    global _armed
+    with _lock:
+        saved = (dict(_specs), dict(_counts), dict(_fired), _armed)
+    arm(spec)
+    try:
+        yield
+    finally:
+        with _lock:
+            _specs.clear()
+            _counts.clear()
+            _fired.clear()
+            s, c, f, a = saved
+            _specs.update(s)
+            _counts.update(c)
+            _fired.update(f)
+            _armed = a
+
+
+def _fires(site: str, seed: int, n: int, prob: float) -> bool:
+    if prob >= 1.0:
+        return True
+    if prob <= 0.0:
+        return False
+    # crc32 of the (seed, site, occurrence) triple → uniform-ish u32;
+    # hash()-based draws would vary with PYTHONHASHSEED across processes.
+    digest = zlib.crc32(f"{seed}:{site}:{n}".encode())
+    return (digest / 0xFFFFFFFF) < prob
+
+
+def check(site: str) -> None:
+    """Raise :class:`FaultInjected` if *site* is armed and fires.
+
+    The disarmed path is one module-global bool read; keep it that way —
+    this sits on every engine dispatch.
+    """
+    if not _armed:
+        return
+    spec = _specs.get(site)
+    if spec is None:
+        return
+    prob, seed = spec
+    n = _counts.get(site, 0)
+    _counts[site] = n + 1
+    if _fires(site, seed, n, prob):
+        _fired[site] = _fired.get(site, 0) + 1
+        raise FaultInjected(site, n)
+
+
+# Arm from the environment at import so chaos CI runs (and the --chaos
+# bench smoke) need no code changes: REPRO_FAULTS="site:prob[:seed],...".
+_env_spec = os.environ.get(FAULTS_ENV, "").strip()
+if _env_spec:
+    arm(_env_spec)
+del _env_spec

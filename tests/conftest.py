@@ -12,3 +12,23 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True)
+def _strict_guard_policy():
+    """Pin the degradation policy to 'raise' for every test.
+
+    The production default is 'fallback' — under it an engine bug would
+    silently demote to the XLA oracle and every engine-vs-reference
+    equivalence test would vacuously pass. Chaos tests opt back into
+    fallback explicitly via ``robust.failure_policy('fallback')``.
+    Also guarantees no armed fault site leaks across tests.
+    """
+    from repro import config
+    from repro.robust import faults
+
+    prev = config._ON_FAILURE
+    config.set_on_failure("raise")
+    yield
+    config._ON_FAILURE = prev
+    faults.disarm()
